@@ -1,0 +1,52 @@
+"""Paper Tab. 2 / Tab. 4 analog: end-to-end triangle-counting runtime,
+Push-Only vs Push-Pull (CPU-scale datasets stand in for the paper corpus;
+the quantity of interest is the wedge-throughput and the push/pull
+delta, not absolute seconds)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_only, survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import TriangleCount
+from repro.graphs import generators
+
+
+def _time_survey(g, S, mode, push_cap=512, pull_q_cap=16):
+    gr, _ = shard_dodgr(g, S=S)
+    cfg, rep = plan_engine(g, S, mode=mode, push_cap=push_cap,
+                           pull_q_cap=pull_q_cap)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    t0 = time.time()
+    res, st = run(gr, TriangleCount(), cfg)   # includes jit compile
+    t_compile = time.time() - t0
+    t0 = time.time()
+    res, st = run(gr, TriangleCount(), cfg)
+    dt = time.time() - t0
+    wedges = st["wedges_pushed"] + st["wedges_pulled"]
+    return dt, res, wedges, rep
+
+
+def run(quick=True):
+    rows = []
+    graphs = {
+        "rmat9": lambda: generators.rmat(9, 16, seed=5),
+        "er": lambda: generators.erdos_renyi(2000, 30000, seed=2),
+    }
+    S = 4
+    for gname, mk in graphs.items():
+        g = mk()
+        base = None
+        for mode in ("push", "pushpull"):
+            dt, tris, wedges, rep = _time_survey(g, S, mode)
+            if mode == "push":
+                base = tris
+            assert tris == base, "mode disagreement"
+            rows.append((f"count/{gname}/{mode}/S{S}", dt * 1e6, dict(
+                triangles=tris,
+                wedges_per_s=round(wedges / max(dt, 1e-9)),
+                comm_MB=round((rep.pushpull_bytes if mode == "pushpull"
+                               else rep.push_only_bytes) / 1e6, 2),
+            )))
+    return rows

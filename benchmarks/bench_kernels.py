@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference.
+
+The container is CPU-only, so wall-times are *not* TPU-indicative; the
+purpose here is (a) regression tracking of the jnp reference path the
+engine actually executes on CPU, and (b) exercising the kernel wrappers
+at bench shapes. TPU-side performance is assessed structurally in the
+roofline (EXPERIMENTS §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hist.ops import hist_add
+from repro.kernels.hist.ref import hist_add_ref
+from repro.kernels.intersect.ref import intersect_ref
+from repro.kernels.wedge_check.ref import lower_bound_ref
+
+
+def _t(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick=True):
+    rows = []
+    rng = np.random.default_rng(0)
+    e_cap, nq = (1 << 14, 1 << 15) if quick else (1 << 18, 1 << 18)
+    d = np.sort(rng.integers(0, 64, e_cap)).astype(np.int32)
+    h = rng.integers(0, 1 << 16, e_cap).astype(np.uint32)
+    i = np.arange(e_cap, dtype=np.int32)
+    lo = np.zeros(nq, np.int32)
+    hi = np.full(nq, e_cap, np.int32)
+    qd = rng.integers(0, 64, nq).astype(np.int32)
+    qh = rng.integers(0, 1 << 16, nq).astype(np.uint32)
+    qi = rng.integers(0, e_cap, nq).astype(np.int32)
+    args = tuple(map(jnp.asarray, (d, h, i, lo, hi, qd, qh, qi)))
+    us = _t(jax.jit(lower_bound_ref), *args)
+    rows.append((f"wedge_check_ref/E{e_cap}/Q{nq}", us,
+                 dict(queries_per_s=round(nq / us * 1e6))))
+
+    B, L = (256, 128) if quick else (2048, 512)
+    rows_d = np.sort(rng.integers(0, 64, (B, L)), 1).astype(np.int32)
+    rows_h = rng.integers(0, 1 << 16, (B, L)).astype(np.uint32)
+    rows_i = rng.integers(0, 1 << 20, (B, L)).astype(np.int32)
+    ln = rng.integers(0, L, B).astype(np.int32)
+    cd = rng.integers(0, 64, (B, L)).astype(np.int32)
+    ch = rng.integers(0, 1 << 16, (B, L)).astype(np.uint32)
+    ci = rng.integers(0, 1 << 20, (B, L)).astype(np.int32)
+    args = tuple(map(jnp.asarray, (rows_d, rows_h, rows_i, ln, cd, ch, ci)))
+    us = _t(jax.jit(intersect_ref), *args)
+    rows.append((f"intersect_ref/B{B}/L{L}", us,
+                 dict(cands_per_s=round(B * L / us * 1e6))))
+
+    nB, cap = (1 << 15, 1 << 12) if quick else (1 << 20, 1 << 16)
+    slots = jnp.asarray(rng.integers(0, cap, nB).astype(np.int32))
+    amt = jnp.ones((nB,), jnp.int32)
+    us = _t(jax.jit(lambda s, a: hist_add_ref(s, a, cap)), slots, amt)
+    rows.append((f"hist_ref/B{nB}/cap{cap}", us,
+                 dict(updates_per_s=round(nB / us * 1e6))))
+    us = _t(lambda s, a: hist_add(s, a, cap, interpret=True), slots, amt)
+    rows.append((f"hist_pallas_interp/B{nB}/cap{cap}", us, dict(note="interpret")))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Tab. 3 / Tab. 4 analog: Push-Only vs Push-Pull communication
+volume and pulls-per-rank across shard counts (analytic, byte-exact from
+the planner — the same accounting the paper instruments at runtime)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.pushpull import plan_engine
+from repro.graphs import generators
+
+
+def run(quick=True):
+    rows = []
+    graphs = {
+        "rmat10": lambda: generators.rmat(10, 16, seed=5),
+        "social": lambda: generators.temporal_social(2000, 40000, seed=1),
+    }
+    if not quick:
+        graphs["rmat12"] = lambda: generators.rmat(12, 16, seed=5)
+    for gname, mk in graphs.items():
+        g = mk()
+        for S in (2, 4, 8, 16):
+            t0 = time.time()
+            _, rep = plan_engine(g, S, mode="pushpull")
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"pushpull_plan/{gname}/S{S}", dt, dict(
+                push_only_MB=round(rep.push_only_bytes / 1e6, 2),
+                pushpull_MB=round(rep.pushpull_bytes / 1e6, 2),
+                reduction=round(rep.reduction, 2),
+                pulls_per_rank=round(rep.pulls_per_rank, 1),
+            )))
+    return rows

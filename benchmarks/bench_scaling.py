@@ -1,0 +1,44 @@
+"""Paper Fig. 4/5 analog: strong/weak scaling of the survey engine over
+logical shard counts (single CPU device executes all shards, so the
+figure of merit is work-rate |W₊|/(S·t) shape, matching Fig. 5's y-axis,
+and the aggregation-opportunity trend, not wall-clock speedup)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import TriangleCount
+from repro.graphs import generators
+
+
+def run(quick=True):
+    rows = []
+    # strong scaling: fixed graph, growing shard count
+    g = generators.rmat(9 if quick else 11, 16, seed=5)
+    for S in (1, 2, 4, 8):
+        gr, _ = shard_dodgr(g, S=S)
+        cfg, rep = plan_engine(g, S, mode="pushpull", push_cap=512, pull_q_cap=16)
+        survey_push_pull(gr, TriangleCount(), cfg)  # warm
+        t0 = time.time()
+        _, st = survey_push_pull(gr, TriangleCount(), cfg)
+        dt = time.time() - t0
+        w = st["wedges_pushed"] + st["wedges_pulled"]
+        rows.append((f"strong/S{S}", dt * 1e6, dict(
+            wedges=int(w), comm_MB=round(rep.pushpull_bytes / 1e6, 2))))
+
+    # weak scaling: graph grows with shard count (scale-k R-MAT per shard)
+    base_scale = 7 if quick else 9
+    for i, S in enumerate((1, 2, 4, 8)):
+        g = generators.rmat(base_scale + i, 8, seed=3)
+        gr, _ = shard_dodgr(g, S=S)
+        cfg, _ = plan_engine(g, S, mode="pushpull", push_cap=512, pull_q_cap=16)
+        survey_push_pull(gr, TriangleCount(), cfg)  # warm
+        t0 = time.time()
+        _, st = survey_push_pull(gr, TriangleCount(), cfg)
+        dt = time.time() - t0
+        w = st["wedges_pushed"] + st["wedges_pulled"]
+        rows.append((f"weak/S{S}/scale{base_scale+i}", dt * 1e6, dict(
+            work_rate=round(w / S / max(dt, 1e-9)))))
+    return rows

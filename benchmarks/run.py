@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms for the
+production mesh come from the dry-run artifacts (launch/dryrun.py +
+roofline/report.py), not from CPU wall-times.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_closure, bench_counting, bench_kernels,
+                            bench_metadata, bench_pushpull, bench_scaling)
+
+    suites = dict(
+        pushpull=bench_pushpull,     # Tab. 3 / Tab. 4
+        counting=bench_counting,     # Tab. 2 / Tab. 4
+        closure=bench_closure,       # Fig. 6 / Fig. 7 + Fig. 9 baseline
+        scaling=bench_scaling,       # Fig. 4 / Fig. 5
+        metadata=bench_metadata,     # Fig. 9
+        kernels=bench_kernels,       # kernel layer
+    )
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k in args.only.split(",")}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in suites.items():
+        try:
+            for row_name, us, derived in mod.run(quick=quick):
+                print(f"{row_name},{us:.1f},{json.dumps(derived)}")
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            print(f"{name}/ERROR,0,{json.dumps(dict(error=str(e)))}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

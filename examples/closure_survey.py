@@ -1,0 +1,44 @@
+"""Paper Sec. 5.7 (Alg. 4): triangle closure-time survey on a temporal
+social graph — the Reddit experiment at laptop scale.
+
+    PYTHONPATH=src python examples/closure_survey.py
+"""
+import numpy as np
+
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import ClosureTime
+from repro.graphs import generators
+
+
+def main():
+    g = generators.temporal_social(3000, 60000, seed=11)
+    print(f"temporal graph: {g.n} users, {g.m} timestamped edges")
+
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=1024, pull_q_cap=16)
+    res, st = survey_push_pull(gr, ClosureTime(ts_col=0), cfg)
+    tris = int(res["joint"].sum())
+    print(f"triangles surveyed: {tris} "
+          f"(pushed {st['tris_push']:.0f}, pulled {st['tris_pull']:.0f})")
+
+    close = res["close_marginal"]
+    nz = np.nonzero(close)[0]
+    lo, hi = nz.min(), nz.max()
+    print("\nΔt_close distribution (log2-bucketed, Fig. 6 analog):")
+    peak = close.max()
+    for b in range(lo, hi + 1):
+        bar = "#" * int(40 * close[b] / peak)
+        print(f"  2^{b:>2} .. 2^{b+1:<2} | {close[b]:>8} {bar}")
+
+    joint = res["joint"]
+    open_m = res["open_marginal"]
+    print(f"\nmodal open bucket: 2^{int(np.argmax(open_m))}, "
+          f"modal close bucket: 2^{int(np.argmax(close))}")
+    print("(wedges form fast; closures lag with a heavy tail — "
+          "the paper's qualitative Reddit finding)")
+
+
+if __name__ == "__main__":
+    main()

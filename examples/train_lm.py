@@ -1,0 +1,46 @@
+"""End-to-end LM training driver (deliverable b): a ~100M-parameter
+same-family model trained for a few hundred steps with checkpointing.
+
+Defaults are sized for this CPU container; pass ``--hundred-m`` for the
+full 100M-parameter run (slow on CPU, sized for a real accelerator).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        # ~100M params: 12 layers × d512 × ff2048 over the internlm2 family
+        from repro.configs import base as cb
+        import repro.configs.internlm2_1_8b as mod
+
+        cfg = cb.LMConfig(name="internlm2-100m", n_layers=12, d_model=512,
+                          n_heads=8, n_kv_heads=4, d_ff=2048, vocab=32064,
+                          dtype="float32", param_dtype="float32",
+                          attn_chunk=256)
+        mod.SMOKE = cfg  # train driver picks SMOKE with --smoke
+        argv = ["--arch", "internlm2-1.8b", "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    else:
+        argv = ["--arch", "internlm2-1.8b", "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    first, last = train_mod.main(argv)
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper §1 motivation made concrete: metadata-triangle incidence as
+feature vectors for downstream ML.
+
+TriPoll computes per-vertex triangle participation counts
+(LocalVertexCount survey); a SchNet-style GNN then classifies vertices
+into high/low clustering classes. The triangle feature lifts accuracy
+well above the featureless baseline — the "downwind application" loop
+the paper describes, end to end in one script.
+
+    PYTHONPATH=src python examples/triangle_features_gnn.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import LocalVertexCount
+from repro.graphs import generators
+from repro.models.gnn import common, schnet
+from repro.train import adamw, make_train_step
+from repro.train.trainer import init_state
+
+
+def main():
+    g = generators.rmat(8, 12, seed=21)
+    n = g.n
+
+    # --- TriPoll pass: per-vertex triangle counts ---
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=512, pull_q_cap=16)
+    counts, _ = survey_push_pull(gr, LocalVertexCount(n), cfg)
+    counts = np.asarray(counts, np.float32)
+    print(f"triangle participation: max {counts.max():.0f}, "
+          f"mean {counts.mean():.2f}")
+
+    # task: predict whether a vertex's local CLUSTERING COEFFICIENT
+    # (triangles / possible wedges) is above median — decorrelated from raw
+    # degree, so the triangle feature carries real signal
+    deg = g.degrees().astype(np.float32)
+    poss = np.maximum(deg * (deg - 1) / 2, 1.0)
+    cc = counts / poss
+    labels = (cc > np.median(cc[deg >= 2])).astype(np.int32)
+    feat_base = np.stack([np.log1p(deg), np.ones_like(deg)], 1)
+    feat_tri = np.concatenate(
+        [feat_base, np.log1p(counts)[:, None]], 1)  # + TriPoll feature
+
+    def make_graph(feats):
+        e_src = np.concatenate([g.src, g.dst]).astype(np.int32)
+        e_dst = np.concatenate([g.dst, g.src]).astype(np.int32)
+        return common.GraphBatch(
+            node_feat=jnp.asarray(feats), species=None,
+            positions=jnp.zeros((n, 3), jnp.float32),
+            edge_src=jnp.asarray(e_src), edge_dst=jnp.asarray(e_dst),
+            edge_valid=jnp.ones(len(e_src), bool),
+            node_valid=jnp.ones(n, bool),
+            graph_id=jnp.zeros(n, jnp.int32), n_graphs=1)
+
+    y = jnp.asarray(labels)
+
+    def train_eval(feats, name, steps=60):
+        mc = schnet.Cfg(n_interactions=2, d_hidden=32, n_rbf=8, cutoff=2.0,
+                        d_feat=feats.shape[1], d_out=2)
+        params = schnet.init_params(jax.random.PRNGKey(0), mc)
+        batch = make_graph(feats)
+
+        def loss_fn(p, b):
+            node, _ = schnet.forward(mc, p, b)
+            lz = jax.nn.logsumexp(node, -1)
+            gold = jnp.take_along_axis(node, y[:, None], -1)[:, 0]
+            return (lz - gold).mean(), {}
+
+        opt = adamw(5e-3)
+        state = init_state(params, opt)
+        step = jax.jit(make_train_step(loss_fn, opt))
+        for _ in range(steps):
+            state, m = step(state, batch)
+        node, _ = schnet.forward(mc, state.params, batch)
+        acc = float((jnp.argmax(node, -1) == y).mean())
+        print(f"{name}: loss {float(m['loss']):.4f}, accuracy {acc:.3f}")
+        return acc
+
+    acc_base = train_eval(feat_base, "baseline (degree only)      ")
+    acc_tri = train_eval(feat_tri, "with TriPoll triangle feature")
+    print(f"\ntriangle-feature gain: +{(acc_tri-acc_base)*100:.1f} points")
+
+
+if __name__ == "__main__":
+    main()

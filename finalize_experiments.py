@@ -1,0 +1,18 @@
+"""Splice generated dry-run/roofline tables into EXPERIMENTS.md."""
+import sys
+
+sys.path.insert(0, "src")
+from repro.roofline.report import dryrun_table, load, roofline_table  # noqa: E402
+
+recs = load("artifacts/dryrun")
+md = open("EXPERIMENTS.md").read()
+md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table(recs))
+md = md.replace(
+    "<!-- ROOFLINE_TABLE -->",
+    roofline_table(recs, "single")
+    + "\n\nCells marked `corrected: loop-extrapolated` in artifacts/ carry "
+    "loop-corrected terms; cells without the flag either have no loops "
+    "(already exact) or retain raw `cost_analysis` values (correction pass "
+    "per-cell status is in each JSON).")
+open("EXPERIMENTS.md", "w").write(md)
+print("tables spliced:", len(recs), "artifacts")

@@ -1,0 +1,3 @@
+from repro.comm.collectives import make_int8_compressor
+
+__all__ = ["make_int8_compressor"]

@@ -1,0 +1,32 @@
+# TriPoll — the paper's primary contribution as a composable JAX module.
+# Layout: dodgr.py (degree-ordered directed graph), engine.py (push-only /
+# push-pull survey supersteps), pushpull.py (communication planner),
+# surveys.py (monoid survey callbacks), counting_set.py, ref.py (oracle).
+from repro.core.dodgr import ShardedDODGr, shard_dodgr
+from repro.core.surveys import (
+    Survey,
+    TriangleBatch,
+    TriangleCount,
+    ClosureTime,
+    MaxEdgeLabelDist,
+    DegreeTriples,
+    LabelTripleSet,
+    LocalVertexCount,
+)
+from repro.core.engine import survey_push_only, survey_push_pull, EngineConfig
+
+__all__ = [
+    "ShardedDODGr",
+    "shard_dodgr",
+    "Survey",
+    "TriangleBatch",
+    "TriangleCount",
+    "ClosureTime",
+    "MaxEdgeLabelDist",
+    "DegreeTriples",
+    "LabelTripleSet",
+    "LocalVertexCount",
+    "survey_push_only",
+    "survey_push_pull",
+    "EngineConfig",
+]

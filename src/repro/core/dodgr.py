@@ -1,0 +1,246 @@
+"""Degree-ordered directed graph (DODGr), sharded (paper Sec. 3 / 4.2).
+
+Storage layout is *stacked*: every array carries a leading shard axis ``S``.
+On one host device this is just an array; under ``jit`` with an
+``in_shardings`` that places axis 0 over the device mesh it becomes the
+distributed storage, and cross-shard axis-0 reorganizations lower to
+all-to-all / all-reduce collectives (DESIGN.md §2). Vertices are cyclic
+partitioned: owner ``v % S``, local row ``v // S``.
+
+Per the paper's ``Adj₊ᵐ`` the target vertex's metadata is stored *on the
+edge* (``tmeta``) so all six metadata items are local when a wedge closes.
+We additionally store the target's full degree/hash (the ``<₊`` sort key)
+and its out-degree ``d₊`` (enables the local push-vs-pull decision,
+Sec. 4.4: "requires only a small constant amount of additional memory per
+edge").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.csr import HostGraph
+from repro.utils import ceil_div, splitmix32_np
+
+PAD_ID = np.int32(2**31 - 1)  # sentinel target id for padded edge slots
+PAD_D = np.int32(2**30)       # sentinel degree (sorts after everything real)
+
+
+def meta_widths(dvi: int, dvf: int, dei: int, def_: int):
+    """Wire-format entry widths in 4-byte words, shared by the device engine
+    and the host planner so push-vs-pull decisions agree byte-for-byte.
+
+    (push_entry, row_entry, row_header, request_entry):
+      push entry = q,r,key_d,key_h,p,ok + meta(p) + meta(pq) + meta(pr)
+      row entry  = nbr,key_d,key_h + meta(q,v) + meta(v)
+      row header = row_len + meta(q); request = q + ok
+    """
+    w_push = 6 + dvi + dvf + 2 * (dei + def_)
+    w_row = 3 + dei + def_ + dvi + dvf
+    w_hdr = 2 + dvi + dvf
+    w_req = 2
+    return w_push, w_row, w_hdr, w_req
+
+
+@dataclass(frozen=True)
+class ShardedDODGr:
+    """Stacked sharded DODGr + metadata. Leading axis of every array = shard."""
+
+    # --- static (aux) ---
+    S: int
+    n_global: int
+    n_loc: int
+    e_cap: int
+    d_plus_max: int
+    # --- per-shard arrays ---
+    row_ptr: jax.Array   # [S, n_loc+1] i32
+    edge_src: jax.Array  # [S, e_cap] i32 global pivot id per edge slot
+    nbr: jax.Array       # [S, e_cap] i32 global target id (row-sorted by key)
+    nbr_d: jax.Array     # [S, e_cap] i32 target full degree
+    nbr_h: jax.Array     # [S, e_cap] u32 target hash
+    nbr_dplus: jax.Array  # [S, e_cap] i32 target out-degree d₊
+    emeta_i: jax.Array   # [S, e_cap, dei] i32
+    emeta_f: jax.Array   # [S, e_cap, def] f32
+    tmeta_i: jax.Array   # [S, e_cap, dvi] i32 (target vertex metadata)
+    tmeta_f: jax.Array   # [S, e_cap, dvf] f32
+    vmeta_i: jax.Array   # [S, n_loc, dvi] i32
+    vmeta_f: jax.Array   # [S, n_loc, dvf] f32
+    vdeg: jax.Array      # [S, n_loc] i32 full degree of local vertex
+    dplus: jax.Array     # [S, n_loc] i32 out-degree of local vertex
+
+    def __post_init__(self):
+        pass
+
+    # number of valid (non-pad) oriented edges per shard
+    def edge_valid(self) -> jax.Array:
+        e = jnp.arange(self.e_cap, dtype=jnp.int32)[None, :]
+        return e < self.row_ptr[:, -1:]
+
+
+jax.tree_util.register_dataclass(
+    ShardedDODGr,
+    data_fields=[
+        "row_ptr", "edge_src", "nbr", "nbr_d", "nbr_h", "nbr_dplus",
+        "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
+        "vdeg", "dplus",
+    ],
+    meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max"],
+)
+
+
+@dataclass(frozen=True)
+class RoutingStats:
+    """Host-side facts the engine needs to pick static superstep counts."""
+
+    wedges_total: int          # |W₊|
+    max_stream: int            # max over (shard, dest) of wedge-stream length
+    max_pairs: int             # max over (shard, dest) of distinct (p,q) edges
+    edges_per_shard: np.ndarray  # [S]
+    wedge_per_shard: np.ndarray  # [S]
+
+
+def orient_edges(g: HostGraph):
+    """Host orientation of every undirected edge by the ``<₊`` key."""
+    deg = g.degrees()
+    h = splitmix32_np(np.arange(g.n, dtype=np.uint32)).astype(np.int64)
+    u, v = g.src, g.dst
+    ku = np.stack([deg[u], h[u], u], 1)
+    kv = np.stack([deg[v], h[v], v], 1)
+    u_first = (
+        (ku[:, 0] < kv[:, 0])
+        | ((ku[:, 0] == kv[:, 0]) & (ku[:, 1] < kv[:, 1]))
+        | ((ku[:, 0] == kv[:, 0]) & (ku[:, 1] == kv[:, 1]) & (ku[:, 2] < kv[:, 2]))
+    )
+    p = np.where(u_first, u, v)
+    q = np.where(u_first, v, u)
+    return p, q, deg, h
+
+
+def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None) -> tuple[ShardedDODGr, RoutingStats]:
+    """Host-side ingestion: orient, partition cyclically, build padded CSR shards."""
+    p, q, deg, h = orient_edges(g)
+    d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
+
+    owner = (p % S).astype(np.int64)
+    local = (p // S).astype(np.int64)
+    n_loc = ceil_div(g.n, S)
+
+    # sort edges by (owner, local row, key(q)) so shard rows are contiguous+sorted
+    order = np.lexsort((q, h[q], deg[q], local, owner))
+    p_s, q_s = p[order], q[order]
+    owner_s, local_s = owner[order], local[order]
+
+    counts = np.bincount(owner_s, minlength=S)
+    e_cap_needed = int(counts.max()) if len(counts) else 0
+    if e_cap is None:
+        e_cap = max(8, int(np.ceil(e_cap_needed / 8.0) * 8))
+    if e_cap < e_cap_needed:
+        raise ValueError(f"e_cap {e_cap} < required {e_cap_needed}")
+
+    start = np.zeros(S + 1, np.int64)
+    start[1:] = np.cumsum(counts)
+
+    def alloc(shape, dtype, fill=0):
+        a = np.full(shape, fill, dtype)
+        return a
+
+    nbr = alloc((S, e_cap), np.int32, PAD_ID)
+    nbr_d = alloc((S, e_cap), np.int32, PAD_D)
+    nbr_h = alloc((S, e_cap), np.uint32)
+    nbr_dp = alloc((S, e_cap), np.int32)
+    edge_src = alloc((S, e_cap), np.int32, PAD_ID)
+    dei, def_, dvi, dvf = (g.spec.dei, g.spec.def_, g.spec.dvi, g.spec.dvf)
+    emeta_i = alloc((S, e_cap, dei), np.int32)
+    emeta_f = alloc((S, e_cap, def_), np.float32)
+    tmeta_i = alloc((S, e_cap, dvi), np.int32)
+    tmeta_f = alloc((S, e_cap, dvf), np.float32)
+    row_ptr = alloc((S, n_loc + 1), np.int32)
+    vmeta_i = alloc((S, n_loc, dvi), np.int32)
+    vmeta_f = alloc((S, n_loc, dvf), np.float32)
+    vdeg = alloc((S, n_loc), np.int32)
+    dplus_arr = alloc((S, n_loc), np.int32)
+
+    emeta_i_src = g.emeta_i[order]
+    emeta_f_src = g.emeta_f[order]
+
+    for s in range(S):
+        lo, hi = start[s], start[s + 1]
+        k = hi - lo
+        nbr[s, :k] = q_s[lo:hi]
+        nbr_d[s, :k] = deg[q_s[lo:hi]]
+        nbr_h[s, :k] = h[q_s[lo:hi]].astype(np.uint32)
+        nbr_dp[s, :k] = d_plus[q_s[lo:hi]]
+        edge_src[s, :k] = p_s[lo:hi]
+        emeta_i[s, :k] = emeta_i_src[lo:hi]
+        emeta_f[s, :k] = emeta_f_src[lo:hi]
+        tmeta_i[s, :k] = g.vmeta_i[q_s[lo:hi]]
+        tmeta_f[s, :k] = g.vmeta_f[q_s[lo:hi]]
+        rows = np.bincount(local_s[lo:hi], minlength=n_loc)
+        row_ptr[s, 1:] = np.cumsum(rows)
+        ids = np.arange(s, g.n, S, dtype=np.int64)
+        nv = len(ids)
+        vmeta_i[s, :nv] = g.vmeta_i[ids]
+        vmeta_f[s, :nv] = g.vmeta_f[ids]
+        vdeg[s, :nv] = deg[ids]
+        dplus_arr[s, :nv] = d_plus[ids]
+
+    # --- routing stats for static superstep planning ---
+    suffix = np.zeros(len(p_s), np.int64)
+    # position within row: edges are sorted by (owner, local, key); compute
+    # per-edge suffix length = (row_end - pos - 1)
+    row_key = owner_s * n_loc + local_s
+    _, row_start_idx, row_len = np.unique(row_key, return_index=True, return_counts=True)
+    pos_in_row = np.arange(len(p_s)) - np.repeat(row_start_idx, row_len)
+    suffix = np.repeat(row_len, row_len) - pos_in_row - 1
+    dest = (q_s % S).astype(np.int64)
+    sd = owner_s * S + dest
+    stream = np.bincount(sd, weights=suffix, minlength=S * S).astype(np.int64)
+    pairs = np.bincount(sd, minlength=S * S)
+    stats = RoutingStats(
+        wedges_total=int(suffix.sum()),
+        max_stream=int(stream.max()) if len(stream) else 0,
+        max_pairs=int(pairs.max()) if len(pairs) else 0,
+        edges_per_shard=counts,
+        wedge_per_shard=np.bincount(owner_s, weights=suffix, minlength=S).astype(np.int64),
+    )
+
+    d_plus_max = int(d_plus.max()) if g.n else 0
+    gr = ShardedDODGr(
+        S=S, n_global=g.n, n_loc=n_loc, e_cap=e_cap,
+        d_plus_max=max(1, d_plus_max),
+        row_ptr=jnp.asarray(row_ptr), edge_src=jnp.asarray(edge_src),
+        nbr=jnp.asarray(nbr), nbr_d=jnp.asarray(nbr_d),
+        nbr_h=jnp.asarray(nbr_h), nbr_dplus=jnp.asarray(nbr_dp),
+        emeta_i=jnp.asarray(emeta_i), emeta_f=jnp.asarray(emeta_f),
+        tmeta_i=jnp.asarray(tmeta_i), tmeta_f=jnp.asarray(tmeta_f),
+        vmeta_i=jnp.asarray(vmeta_i), vmeta_f=jnp.asarray(vmeta_f),
+        vdeg=jnp.asarray(vdeg), dplus=jnp.asarray(dplus_arr),
+    )
+    return gr, stats
+
+
+def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,
+               dvi: int, dvf: int, dei: int, def_: int) -> ShardedDODGr:
+    """ShapeDtypeStruct stand-in for dry-run lowering (no allocation)."""
+    sd = jax.ShapeDtypeStruct
+    return ShardedDODGr(
+        S=S, n_global=n_global, n_loc=n_loc, e_cap=e_cap, d_plus_max=d_plus_max,
+        row_ptr=sd((S, n_loc + 1), jnp.int32),
+        edge_src=sd((S, e_cap), jnp.int32),
+        nbr=sd((S, e_cap), jnp.int32),
+        nbr_d=sd((S, e_cap), jnp.int32),
+        nbr_h=sd((S, e_cap), jnp.uint32),
+        nbr_dplus=sd((S, e_cap), jnp.int32),
+        emeta_i=sd((S, e_cap, dei), jnp.int32),
+        emeta_f=sd((S, e_cap, def_), jnp.float32),
+        tmeta_i=sd((S, e_cap, dvi), jnp.int32),
+        tmeta_f=sd((S, e_cap, dvf), jnp.float32),
+        vmeta_i=sd((S, n_loc, dvi), jnp.int32),
+        vmeta_f=sd((S, n_loc, dvf), jnp.float32),
+        vdeg=sd((S, n_loc), jnp.int32),
+        dplus=sd((S, n_loc), jnp.int32),
+    )

@@ -1,0 +1,517 @@
+"""TriPoll survey engine: Push-Only (Alg. 1) and Push-Pull (Sec. 4.4).
+
+Execution model (DESIGN.md §2): stacked layout — every array carries a
+leading shard axis ``S``; an all-to-all is ``swapaxes(x, 0, 1)`` which the
+GSPMD partitioner lowers to a real all-to-all when axis 0 is sharded over
+the device mesh. Work proceeds in *supersteps* over dest-major wedge
+streams with static per-(shard,dest) capacities; the static superstep
+counts come from the host planner (:mod:`repro.core.pushpull`) — the BSP
+analogue of the paper's "Push vs Pull Dry-Run".
+
+Push superstep: shard s enumerates wedges (p; q, r) rank-by-rank within
+each destination stream, ships (q, r, key(r), meta(p), meta(pq), meta(pr))
+to owner(q); the owner closes the wedge with a binary search of r's key in
+Adj₊(q) (the paper's merge-path intersection, in its TPU log-time form) and
+folds the survey callback with all six metadata items local (Sec. 4.2/4.3).
+
+Pull superstep: shard s requests `Adj₊ᵐ(q)` once per (shard, q) for targets
+whose row is cheaper to move than the wedge candidates (the paper's
+per-pair decision), receives padded rows, intersects its local suffixes
+against them (``kernels/intersect``) and folds the survey locally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dodgr import ShardedDODGr
+from repro.core.surveys import Survey, TriangleBatch
+from repro.utils import ceil_div
+
+BIG_I32 = jnp.int32(2**30)
+
+
+# ---------------------------------------------------------------------------
+# config
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static engine plan. Produced by ``pushpull.plan_engine`` on host, or
+    set directly for dry-run lowering."""
+
+    mode: str = "push"            # "push" | "pushpull"
+    push_cap: int = 256           # wedge slots per (shard,dest) per push superstep
+    n_push_steps: int = 1
+    pull_q_cap: int = 32          # pulled-row slots per (shard,dest) per pull superstep
+    pull_edge_cap: int = 64       # edge slots per (shard,dest) pull window
+    n_pull_steps: int = 0
+    cost_model: str = "entries"   # "entries" (paper-faithful) | "bytes"
+    unroll_steps: bool = False    # unroll superstep scans (cost-analysis mode)
+    use_pallas: bool = False      # route search/intersect through Pallas kernels
+    pallas_interpret: bool = True  # interpret mode (CPU container validation)
+    shard_axis: str | None = None  # mesh axis name for sharding constraints
+
+
+def _constrain(x, cfg: EngineConfig, *trailing):
+    if cfg.shard_axis is None:
+        return x
+    spec = P(cfg.shard_axis, *trailing)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# per-shard primitives (vmapped over the shard axis by the engine)
+
+
+def _lower_bound(nbr_d, nbr_h, nbr_i, lo, hi, qd, qh, qi, n_steps):
+    """Vectorized lower_bound of key (qd,qh,qi) in per-row slices [lo,hi)."""
+
+    def body(_, carry):
+        lo, hi = carry
+        has = lo < hi
+        mid = jnp.where(has, (lo + hi) // 2, 0)
+        kd = nbr_d[mid]
+        kh = nbr_h[mid]
+        ki = nbr_i[mid]
+        less = (kd < qd) | ((kd == qd) & (kh < qh)) | ((kd == qd) & (kh == qh) & (ki < qi))
+        lo = jnp.where(has & less, mid + 1, lo)
+        hi = jnp.where(has & ~less, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
+    return lo
+
+
+def _stream_setup(gr: ShardedDODGr, weight_mask=None):
+    """Dest-major wedge-stream routing tables, per shard (vmapped).
+
+    Returns dict with per-shard [e_cap] / [S+1] arrays:
+      perm      dest-sorted edge permutation
+      cum       inclusive cumsum of wedge weights in perm order
+      base      exclusive stream offset at each dest block  [S+1]
+      stream_len wedges per dest [S]
+      suffix    per-edge suffix length (wedge fanout)
+      dest      owner(q) per edge
+      valid     edge-slot validity
+    """
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+
+    def per_shard(row_ptr, edge_src, nbr, wmask):
+        e = jnp.arange(e_cap, dtype=jnp.int32)
+        n_edges = row_ptr[-1]
+        valid = e < n_edges
+        lp = jnp.clip(edge_src // S, 0, n_loc - 1)
+        row_end = row_ptr[lp + 1]
+        suffix = jnp.where(valid, jnp.maximum(row_end - e - 1, 0), 0)
+        dest = jnp.where(valid, nbr % S, S)
+        perm = jnp.argsort(dest, stable=True)
+        w = suffix[perm]
+        if wmask is not None:
+            w = w * wmask[perm].astype(jnp.int32)
+        cum = jnp.cumsum(w)
+        sorted_dest = dest[perm]
+        dest_start = jnp.searchsorted(sorted_dest, jnp.arange(S + 1, dtype=jnp.int32),
+                                      side="left").astype(jnp.int32)
+        blk_prev = jnp.where(dest_start > 0, cum[jnp.maximum(dest_start - 1, 0)], 0)
+        base = blk_prev  # [S+1] exclusive offsets; base[S] == total
+        stream_len = base[1:] - base[:-1]
+        return dict(perm=perm, cum=cum, base=base[:-1], stream_len=stream_len,
+                    suffix=suffix, dest=dest, valid=valid)
+
+    wm = weight_mask if weight_mask is not None else None
+    if wm is None:
+        return jax.vmap(lambda rp, es, nb: per_shard(rp, es, nb, None))(
+            gr.row_ptr, gr.edge_src, gr.nbr)
+    return jax.vmap(per_shard)(gr.row_ptr, gr.edge_src, gr.nbr, wm)
+
+
+def _gen_push_queries(gr: ShardedDODGr, st, t, cap):
+    """Build the [S, S_dest, cap] push-query buffers for superstep ``t``."""
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+
+    def per_shard(perm, cum, base, stream_len, row_ptr, edge_src, nbr, nbr_d,
+                  nbr_h, emeta_i, emeta_f, vmeta_i, vmeta_f):
+        c = jnp.arange(cap, dtype=jnp.int32)
+        offs = t * cap + c[None, :]                       # [S, cap]
+        in_stream = offs < stream_len[:, None]
+        ranks = base[:, None] + offs                      # [S, cap]
+        idx = jnp.searchsorted(cum, ranks.reshape(-1), side="right").astype(jnp.int32)
+        idx = jnp.clip(idx, 0, e_cap - 1)
+        e = perm[idx]
+        prev = jnp.where(idx > 0, cum[jnp.maximum(idx - 1, 0)], 0)
+        o = jnp.clip(ranks.reshape(-1) - prev, 0, e_cap - 1)
+        r_pos = jnp.clip(e + 1 + o, 0, e_cap - 1)
+        p = edge_src[e]
+        lp = jnp.clip(p // S, 0, n_loc - 1)
+        out = dict(
+            q=nbr[e], r=nbr[r_pos], rd=nbr_d[r_pos], rh=nbr_h[r_pos], p=p,
+            vp_i=vmeta_i[lp], vp_f=vmeta_f[lp],
+            epq_i=emeta_i[e], epq_f=emeta_f[e],
+            epr_i=emeta_i[r_pos], epr_f=emeta_f[r_pos],
+            ok=in_stream.reshape(-1),
+        )
+        return jax.tree.map(lambda x: x.reshape((S, cap) + x.shape[1:]), out)
+
+    return jax.vmap(per_shard)(
+        st["perm"], st["cum"], st["base"], st["stream_len"], gr.row_ptr,
+        gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f,
+        gr.vmeta_i, gr.vmeta_f)
+
+
+def _exchange(tree, cfg: EngineConfig):
+    """All-to-all: [S_src, S_dst, cap, ...] → [S_dst, S_src·cap, ...]."""
+
+    def one(x):
+        y = jnp.swapaxes(x, 0, 1)
+        y = y.reshape((y.shape[0], y.shape[1] * y.shape[2]) + y.shape[3:])
+        return _constrain(y, cfg)
+
+    return jax.tree.map(one, tree)
+
+
+def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig) -> TriangleBatch:
+    """Owner-side wedge closure: search key(r) in Adj₊(q); gather metadata."""
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+    n_steps = max(1, int(np.ceil(np.log2(max(2, e_cap)))) + 1)
+
+    if cfg.use_pallas:
+        from repro.kernels.wedge_check import ops as wc_ops
+
+    def per_shard(row_ptr, nbr, nbr_d, nbr_h, emeta_i, emeta_f, tmeta_i,
+                  tmeta_f, vmeta_i, vmeta_f, q):
+        lq = jnp.clip(q["q"] // S, 0, n_loc - 1)
+        lo = row_ptr[lq]
+        hi = row_ptr[lq + 1]
+        if cfg.use_pallas:
+            pos = wc_ops.wedge_check(nbr_d, nbr_h, nbr, lo, hi, q["rd"], q["rh"],
+                                     q["r"], interpret=cfg.pallas_interpret)
+        else:
+            pos = _lower_bound(nbr_d, nbr_h, nbr, lo, hi, q["rd"], q["rh"],
+                               q["r"], n_steps)
+        pos_c = jnp.clip(pos, 0, e_cap - 1)
+        found = q["ok"] & (pos < hi) & (nbr[pos_c] == q["r"])
+        return TriangleBatch(
+            p=q["p"], q=q["q"], r=q["r"],
+            vp_i=q["vp_i"], vq_i=vmeta_i[lq], vr_i=tmeta_i[pos_c],
+            vp_f=q["vp_f"], vq_f=vmeta_f[lq], vr_f=tmeta_f[pos_c],
+            e_pq_i=q["epq_i"], e_pr_i=q["epr_i"], e_qr_i=emeta_i[pos_c],
+            e_pq_f=q["epq_f"], e_pr_f=q["epr_f"], e_qr_f=emeta_f[pos_c],
+            valid=found,
+        )
+
+    return jax.vmap(per_shard)(
+        gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f,
+        gr.tmeta_i, gr.tmeta_f, gr.vmeta_i, gr.vmeta_f, qr)
+
+
+# ---------------------------------------------------------------------------
+# pull-phase device planning (Sec. 4.4)
+
+
+def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, meta_widths):
+    """Per-shard pull decisions + dest-major (dest, pulled, q) edge order.
+
+    Returns per-shard arrays (vmapped):
+      pull        [e_cap] bool, per edge slot (original order)
+      ord2        [e_cap] edge permutation sorted by (dest, ~pull, q, pos)
+      qrank2      [e_cap] global 0-based pulled-group rank per ord2 slot
+      qbase       [S]    pulled-group count before each dest block
+      qcount      [S]    pulled groups per dest
+      pulled_end  [S]    ord2 index one past the pulled edges of each dest
+      dest_start2 [S+1]
+    """
+    S, e_cap = gr.S, gr.e_cap
+    w_push, w_row, w_hdr, w_req = meta_widths
+
+    def per_shard(nbr, nbr_dplus, suffix, dest, valid):
+        ordq = jnp.argsort(jnp.where(valid, nbr, BIG_I32), stable=True)
+        qs = nbr[ordq]
+        sfx = suffix[ordq]
+        vq = valid[ordq]
+        first = jnp.concatenate([jnp.ones((1,), bool), qs[1:] != qs[:-1]]) & vq
+        gid = jnp.cumsum(first.astype(jnp.int32)) - 1
+        gid = jnp.where(vq, gid, e_cap - 1)
+        vol = jax.ops.segment_sum(sfx, gid, num_segments=e_cap)
+        vol_e = vol[gid]
+        dq = nbr_dplus[ordq]
+        if cfg.cost_model == "entries":
+            pull_s = vq & (dq < vol_e)
+        else:
+            pull_s = vq & (dq * w_row + w_hdr + w_req < vol_e * w_push)
+        pull = jnp.zeros((e_cap,), bool).at[ordq].set(pull_s)
+
+        # (dest, ~pull, q, pos) order: stable sort of the q-sorted order by
+        # composite bucket key
+        dest_q = dest[ordq]
+        bucket = jnp.where(vq, dest_q * 2 + (1 - pull_s.astype(jnp.int32)), 2 * S + 1)
+        reord = jnp.argsort(bucket, stable=True)
+        ord2 = ordq[reord]
+        qs2 = qs[reord]
+        pull2 = pull_s[reord]
+        v2 = vq[reord]
+        dest2 = jnp.where(v2, dest_q[reord], S)
+        first2 = jnp.concatenate([jnp.ones((1,), bool), qs2[1:] != qs2[:-1]]) & v2
+        wq2 = (first2 & pull2).astype(jnp.int32)
+        cum_incl = jnp.cumsum(wq2)
+        qrank2 = cum_incl - 1                      # group rank for all members
+        dest_start2 = jnp.searchsorted(dest2, jnp.arange(S + 1, dtype=jnp.int32),
+                                       side="left").astype(jnp.int32)
+        qbase = jnp.where(dest_start2[:-1] > 0,
+                          cum_incl[jnp.maximum(dest_start2[:-1] - 1, 0)], 0)
+        qtop = jnp.where(dest_start2[1:] > 0,
+                         cum_incl[jnp.maximum(dest_start2[1:] - 1, 0)], 0)
+        qcount = qtop - qbase
+        pcum = jnp.cumsum(pull2.astype(jnp.int32))
+        p_at = lambda i: jnp.where(i > 0, pcum[jnp.maximum(i - 1, 0)], 0)
+        pulled_in_dest = p_at(dest_start2[1:]) - p_at(dest_start2[:-1])
+        pulled_end = dest_start2[:-1] + pulled_in_dest
+        return dict(pull=pull, ord2=ord2, qrank2=qrank2, qbase=qbase,
+                    qcount=qcount, pulled_end=pulled_end,
+                    dest_start2=dest_start2[:-1], vol=vol_e, ordq=ordq)
+
+    return jax.vmap(per_shard)(gr.nbr, gr.nbr_dplus, st["suffix"], st["dest"],
+                               st["valid"])
+
+
+def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
+    """One pull superstep: request rows, answer, intersect, emit TriangleBatch."""
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+    pcap, ecap = cfg.pull_q_cap, cfg.pull_edge_cap
+    L = gr.d_plus_max
+    n_steps = max(1, int(np.ceil(np.log2(max(2, L)))) + 1)
+
+    # --- requester: build q-requests [S_dest, pcap] ---
+    def gen_req(qrank2, qbase, qcount, ord2, nbr):
+        c = jnp.arange(pcap, dtype=jnp.int32)
+        offs = t * pcap + c[None, :]
+        okq = offs < qcount[:, None]                      # [S, pcap]
+        k = qbase[:, None] + offs                         # global group rank
+        posq = jnp.searchsorted(qrank2, k.reshape(-1), side="left").astype(jnp.int32)
+        posq = jnp.clip(posq, 0, e_cap - 1)
+        qid = nbr[ord2[posq]].reshape(S, pcap)
+        return dict(q=jnp.where(okq, qid, BIG_I32), ok=okq)
+
+    req = jax.vmap(gen_req)(ps["qrank2"], ps["qbase"], ps["qcount"], ps["ord2"], gr.nbr)
+    req_x = _exchange(req, cfg)   # [S_owner, S_src*pcap]
+
+    # --- owner: reply with padded rows ---
+    def answer(row_ptr, nbr, nbr_d, nbr_h, emeta_i, emeta_f, tmeta_i, tmeta_f,
+               vmeta_i, vmeta_f, dplus, q, ok):
+        lq = jnp.clip(q // S, 0, n_loc - 1)
+        lo = row_ptr[lq]                                   # [B]
+        ln = jnp.where(ok, dplus[lq], 0)
+        j = jnp.arange(L, dtype=jnp.int32)
+        slots = jnp.clip(lo[:, None] + j[None, :], 0, e_cap - 1)   # [B, L]
+        mask = j[None, :] < ln[:, None]
+        return dict(
+            r_nbr=jnp.where(mask, nbr[slots], BIG_I32),
+            r_d=jnp.where(mask, nbr_d[slots], BIG_I32),
+            r_h=jnp.where(mask, nbr_h[slots], jnp.uint32(0xFFFFFFFF)),
+            r_ei=emeta_i[slots] * mask[..., None].astype(jnp.int32),
+            r_ef=emeta_f[slots] * mask[..., None],
+            r_ti=tmeta_i[slots] * mask[..., None].astype(jnp.int32),
+            r_tf=tmeta_f[slots] * mask[..., None],
+            vq_i=vmeta_i[lq], vq_f=vmeta_f[lq],
+            ln=ln,
+        )
+
+    rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i,
+                           gr.emeta_f, gr.tmeta_i, gr.tmeta_f, gr.vmeta_i,
+                           gr.vmeta_f, gr.dplus, req_x["q"], req_x["ok"])
+    # reply routes back: reshape [S_owner, S_src, pcap, ...] → swap → [S_src, S_owner, pcap,...]
+    def back(x):
+        y = x.reshape((S, S, pcap) + x.shape[2:])
+        y = jnp.swapaxes(y, 0, 1)
+        return _constrain(y, cfg)
+
+    rep = jax.tree.map(back, rep)   # [S_req, S_dest, pcap, ...]
+
+    # --- requester: intersect local suffixes against pulled rows ---
+    if cfg.use_pallas:
+        from repro.kernels.intersect import ops as is_ops
+
+    def intersect(qrank2, qbase, qcount, pulled_end, dest_start2, ord2, pull,
+                  row_ptr, edge_src, nbr, nbr_d, nbr_h, emeta_i, emeta_f,
+                  vmeta_i, vmeta_f, rp):
+        d = jnp.arange(S, dtype=jnp.int32)
+        lo_rank = qbase + t * pcap
+        hi_rank = qbase + jnp.minimum((t + 1) * pcap, qcount)
+        estart = jnp.searchsorted(qrank2, lo_rank, side="left").astype(jnp.int32)
+        eend = jnp.searchsorted(qrank2, hi_rank, side="left").astype(jnp.int32)
+        estart = jnp.clip(estart, dest_start2, pulled_end)
+        eend = jnp.clip(eend, dest_start2, pulled_end)
+        c2 = jnp.arange(ecap, dtype=jnp.int32)
+        j = estart[:, None] + c2[None, :]                  # [S, ecap] ord2 idx
+        ok_e = (j < eend[:, None])
+        overflow = jnp.maximum(eend - estart - ecap, 0).sum()
+        j_c = jnp.clip(j, 0, e_cap - 1)
+        ok_e = ok_e & pull[ps_ord2 := ord2[j_c]]
+        e = ps_ord2                                        # original edge slot
+        slot = jnp.clip(qrank2[j_c] - qbase[:, None] - t * pcap, 0, pcap - 1)
+
+        # suffix candidates of edge e: [S, ecap, L]
+        lp = jnp.clip(edge_src[e] // S, 0, n_loc - 1)
+        row_end = row_ptr[lp + 1]
+        k = jnp.arange(L, dtype=jnp.int32)
+        r_pos = jnp.clip(e[..., None] + 1 + k[None, None, :], 0, e_cap - 1)
+        cand_ok = ok_e[..., None] & (e[..., None] + 1 + k[None, None, :] < row_end[..., None])
+        cd = nbr_d[r_pos]
+        ch = nbr_h[r_pos]
+        ci = nbr[r_pos]
+
+        # pulled row for each edge slot: [S, ecap, L]
+        def pick(x):
+            return x[d[:, None], slot]                     # [S, ecap, ...]
+
+        rn, rd_, rh_ = pick(rp["r_nbr"]), pick(rp["r_d"]), pick(rp["r_h"])
+        ln = pick(rp["ln"])
+
+        if cfg.use_pallas:
+            pos = is_ops.intersect(
+                rd_.reshape(-1, L), rh_.reshape(-1, L), rn.reshape(-1, L),
+                ln.reshape(-1), cd.reshape(-1, L), ch.reshape(-1, L),
+                ci.reshape(-1, L), interpret=cfg.pallas_interpret,
+            ).reshape(S, ecap, L)
+        else:
+            def lb(rowd, rowh, rowi, ln_1, qd, qh, qi):
+                lo = jnp.zeros_like(qi)
+                hi = jnp.broadcast_to(ln_1, qi.shape)
+                return _lower_bound(rowd, rowh, rowi, lo, hi, qd, qh, qi, n_steps)
+
+            pos = jax.vmap(jax.vmap(lb))(rd_, rh_, rn, ln, cd, ch, ci)
+
+        pos_c = jnp.clip(pos, 0, L - 1)
+        hit = cand_ok & (pos < ln[..., None]) & (jnp.take_along_axis(rn, pos_c, -1) == ci)
+
+        def row_at(x):
+            return jnp.take_along_axis(pick(x), pos_c[..., None], 2)
+
+        B = S * ecap * L
+        flat = lambda x: x.reshape((B,) + x.shape[3:])
+        tri = TriangleBatch(
+            p=flat(jnp.broadcast_to(edge_src[e][..., None], (S, ecap, L))),
+            q=flat(jnp.broadcast_to(nbr[e][..., None], (S, ecap, L))),
+            r=flat(ci),
+            vp_i=flat(jnp.broadcast_to(vmeta_i[lp][:, :, None], (S, ecap, L, vmeta_i.shape[-1]))),
+            vq_i=flat(jnp.broadcast_to(pick(rp["vq_i"])[:, :, None], (S, ecap, L, vmeta_i.shape[-1]))),
+            vr_i=flat(row_at(rp["r_ti"])),
+            vp_f=flat(jnp.broadcast_to(vmeta_f[lp][:, :, None], (S, ecap, L, vmeta_f.shape[-1]))),
+            vq_f=flat(jnp.broadcast_to(pick(rp["vq_f"])[:, :, None], (S, ecap, L, vmeta_f.shape[-1]))),
+            vr_f=flat(row_at(rp["r_tf"])),
+            e_pq_i=flat(jnp.broadcast_to(emeta_i[e][:, :, None], (S, ecap, L, emeta_i.shape[-1]))),
+            e_pr_i=flat(emeta_i[r_pos]),
+            e_qr_i=flat(row_at(rp["r_ei"])),
+            e_pq_f=flat(jnp.broadcast_to(emeta_f[e][:, :, None], (S, ecap, L, emeta_f.shape[-1]))),
+            e_pr_f=flat(emeta_f[r_pos]),
+            e_qr_f=flat(row_at(rp["r_ef"])),
+            valid=flat(hit),
+        )
+        checked = cand_ok.sum(dtype=jnp.float32)
+        return tri, checked, overflow.astype(jnp.float32)
+
+    tri, checked, overflow = jax.vmap(intersect)(
+        ps["qrank2"], ps["qbase"], ps["qcount"], ps["pulled_end"],
+        ps["dest_start2"], ps["ord2"], ps["pull"], gr.row_ptr, gr.edge_src,
+        gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f, gr.vmeta_i,
+        gr.vmeta_f, rep)
+    n_req = req["ok"].sum(dtype=jnp.float32)
+    return tri, checked, overflow, n_req
+
+
+# ---------------------------------------------------------------------------
+# top-level survey functions
+
+
+def make_survey_fn(survey: Survey, cfg: EngineConfig):
+    """Build the jittable global survey function ``gr -> (merged_state, stats)``."""
+
+    def run(gr: ShardedDODGr):
+        S = gr.S
+        state = jax.tree.map(lambda x: jnp.repeat(x[None], S, 0), survey.init())
+
+        # routing tables live across every superstep: pin them to the shard
+        # axis or the partitioner replicates the [S, e_cap] masks per device
+        # (measured: 2×36 GB/device on the rmat32 cell; EXPERIMENTS §Perf)
+        pin = lambda tree: jax.tree.map(lambda a: _constrain(a, cfg), tree)
+
+        if cfg.mode == "pushpull":
+            meta_widths = _meta_widths(gr)
+            st0 = pin(_stream_setup(gr))
+            ps = pin(_pull_setup(gr, st0, cfg, meta_widths))
+            st = pin(_stream_setup(gr, weight_mask=~ps["pull"]))
+        else:
+            ps = None
+            st = pin(_stream_setup(gr))
+
+        stats = dict(
+            wedges_pushed=jnp.zeros((), jnp.float32),
+            tris_push=jnp.zeros((), jnp.float32),
+            wedges_pulled=jnp.zeros((), jnp.float32),
+            tris_pull=jnp.zeros((), jnp.float32),
+            pull_requests=jnp.zeros((), jnp.float32),
+            pull_overflow=jnp.zeros((), jnp.float32),
+        )
+
+        def push_step(carry, t):
+            state, stats = carry
+            qr = _gen_push_queries(gr, st, t, cfg.push_cap)
+            qx = _exchange(qr, cfg)
+            tri = _answer_push_queries(gr, qx, cfg)
+            state = jax.vmap(survey.update)(state, tri)
+            stats = dict(stats)
+            stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
+            stats["tris_push"] += tri.valid.sum(dtype=jnp.float32)
+            return (state, stats), None
+
+        (state, stats), _ = jax.lax.scan(
+            push_step, (state, stats), jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
+            unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
+
+        if cfg.mode == "pushpull" and cfg.n_pull_steps > 0:
+            def pull_step(carry, t):
+                state, stats = carry
+                tri, checked, overflow, n_req = _pull_superstep(gr, st0, ps, t, cfg)
+                state = jax.vmap(survey.update)(state, tri)
+                stats = dict(stats)
+                stats["wedges_pulled"] += checked.sum()
+                stats["tris_pull"] += tri.valid.sum(dtype=jnp.float32)
+                stats["pull_requests"] += n_req
+                stats["pull_overflow"] += overflow.sum()
+                return (state, stats), None
+
+            (state, stats), _ = jax.lax.scan(
+                pull_step, (state, stats), jnp.arange(cfg.n_pull_steps, dtype=jnp.int32),
+                unroll=cfg.n_pull_steps if cfg.unroll_steps else 1)
+
+        merged = survey.merge(state)
+        return merged, stats
+
+    return run
+
+
+def _meta_widths(gr: ShardedDODGr):
+    from repro.core.dodgr import meta_widths
+
+    dvi, dvf = gr.vmeta_i.shape[-1], gr.vmeta_f.shape[-1]
+    dei, def_ = gr.emeta_i.shape[-1], gr.emeta_f.shape[-1]
+    return meta_widths(dvi, dvf, dei, def_)
+
+
+def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+    cfg = replace(cfg, mode="push")
+    fn = jax.jit(make_survey_fn(survey, cfg))
+    merged, stats = fn(gr)
+    return survey.finalize(merged), jax.tree.map(float, jax.device_get(stats))
+
+
+def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+    cfg = replace(cfg, mode="pushpull")
+    fn = jax.jit(make_survey_fn(survey, cfg))
+    merged, stats = fn(gr)
+    return survey.finalize(merged), jax.tree.map(float, jax.device_get(stats))

@@ -1,0 +1,154 @@
+"""Host-side engine planner + exact communication accounting (Sec. 4.4).
+
+The paper's "Push vs Pull Dry-Run" counts, per (source rank, target vertex),
+the adjacency volume that *would* be pushed, and compares it with the
+target's out-degree to choose push or pull. Here that planning runs on host
+at ingestion time and fixes the *static* superstep counts and capacities the
+BSP engine compiles against; the decision rule itself is replicated on
+device (``engine._pull_setup``) so the two always agree.
+
+The same pass yields byte-exact push-only vs push-pull communication volumes
+— the quantities of paper Table 4 — and the pulls-per-rank of Table 3,
+without running the engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.dodgr import orient_edges, meta_widths
+from repro.core.engine import EngineConfig
+from repro.graphs.csr import HostGraph
+from repro.utils import ceil_div
+
+
+@dataclass(frozen=True)
+class VolumeReport:
+    """Analytic communication volumes (paper Tab. 3 / Tab. 4 quantities)."""
+
+    S: int
+    wedges_total: int
+    push_only_entries: int
+    push_only_bytes: int
+    pushpull_push_entries: int
+    pushpull_pull_rows: int          # Σ over pulled (s,q) of d₊(q)
+    pushpull_requests: int           # # pulled (s,q) pairs
+    pushpull_bytes: int
+    pulls_per_rank: float            # Tab. 3
+    pulled_wedges: int               # wedges resolved locally after pulling
+
+    @property
+    def reduction(self) -> float:
+        return self.push_only_bytes / max(1, self.pushpull_bytes)
+
+
+def plan_engine(
+    g: HostGraph,
+    S: int,
+    mode: str = "pushpull",
+    push_cap: int = 256,
+    pull_q_cap: int = 32,
+    cost_model: str = "entries",
+    use_pallas: bool = False,
+    shard_axis: str | None = None,
+) -> tuple[EngineConfig, VolumeReport]:
+    """Plan static superstep counts/capacities and account communication."""
+    p, q, deg, h = orient_edges(g)
+    d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
+    s = (p % S).astype(np.int64)
+    d = (q % S).astype(np.int64)
+    local = p // S
+    n_loc = ceil_div(g.n, S)
+
+    # per-edge suffix length, identical to device: sort edges by
+    # (owner, local row, key(q)); suffix = row_len - pos_in_row - 1
+    order = np.lexsort((q, h[q], deg[q], local, s))
+    p_o, q_o, s_o, d_o = p[order], q[order], s[order], d[order]
+    row_key = s_o * n_loc + local[order]
+    _, row_start, row_len = np.unique(row_key, return_index=True, return_counts=True)
+    pos = np.arange(len(p_o)) - np.repeat(row_start, row_len)
+    suffix = (np.repeat(row_len, row_len) - pos - 1).astype(np.int64)
+
+    w_push, w_row, w_hdr, w_req = meta_widths(
+        g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)
+
+    # vol(s, q) and the pull decision (paper's inequality)
+    sq = s_o * np.int64(g.n) + q_o
+    uq, inv = np.unique(sq, return_inverse=True)
+    vol = np.bincount(inv, weights=suffix).astype(np.int64)
+    dq_of_group = d_plus[(uq % np.int64(g.n)).astype(np.int64)]
+    if mode == "push":
+        pull_group = np.zeros(len(uq), bool)
+    elif cost_model == "entries":
+        pull_group = dq_of_group < vol
+    else:
+        pull_group = dq_of_group * w_row + w_hdr + w_req < vol * w_push
+    pull_e = pull_group[inv]
+
+    wedges_total = int(suffix.sum())
+    pushed = suffix[~pull_e]
+    sd = s_o * S + d_o
+    push_stream = np.bincount(sd[~pull_e], weights=pushed, minlength=S * S)
+    max_push_stream = int(push_stream.max()) if len(push_stream) else 0
+    n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
+
+    # pulled groups per (s, d) → pull supersteps; edge windows → edge cap
+    n_pull_steps = 0
+    pull_edge_cap = 1
+    n_pulled_groups = int(pull_group.sum())
+    if mode == "pushpull" and n_pulled_groups:
+        g_s = (uq // np.int64(g.n))[pull_group]
+        g_q = (uq % np.int64(g.n))[pull_group]
+        g_d = g_q % S
+        per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
+        n_pull_steps = max(1, ceil_div(int(per_sd.max()), pull_q_cap))
+        # edges per (s,d,window): group rank within (s,d) in (q) order, window
+        # = rank // pull_q_cap; edge count per window
+        grp_order = np.lexsort((g_q, g_d, g_s))
+        gsd = (g_s * S + g_d)[grp_order]
+        rank_in_sd = np.arange(len(gsd)) - np.searchsorted(gsd, gsd, side="left")
+        win = rank_in_sd // pull_q_cap
+        # map each pulled edge to its group's window
+        grp_win = np.empty(len(uq), np.int64)
+        pulled_idx = np.nonzero(pull_group)[0]
+        grp_win_vals = np.empty(len(gsd), np.int64)
+        grp_win_vals[grp_order] = win
+        grp_win[pulled_idx] = grp_win_vals
+        e_win = grp_win[inv[pull_e]]
+        e_sd = sd[pull_e]
+        key = e_sd * (int(win.max()) + 1 if len(win) else 1) + e_win
+        per_window = np.bincount(key)
+        pull_edge_cap = max(1, int(per_window.max()))
+
+    # --- volumes ---
+    push_only_entries = wedges_total
+    push_only_bytes = wedges_total * w_push * 4
+    pp_push_entries = int(pushed.sum())
+    pp_rows = int(d_plus[(uq % np.int64(g.n))[pull_group]].sum())
+    pp_bytes = (pp_push_entries * w_push + n_pulled_groups * (w_req + w_hdr)
+                + pp_rows * w_row) * 4
+    report = VolumeReport(
+        S=S,
+        wedges_total=wedges_total,
+        push_only_entries=push_only_entries,
+        push_only_bytes=push_only_bytes,
+        pushpull_push_entries=pp_push_entries,
+        pushpull_pull_rows=pp_rows,
+        pushpull_requests=n_pulled_groups,
+        pushpull_bytes=pp_bytes if mode == "pushpull" else push_only_bytes,
+        pulls_per_rank=n_pulled_groups / S,
+        pulled_wedges=int(suffix[pull_e].sum()),
+    )
+    cfg = EngineConfig(
+        mode=mode,
+        push_cap=push_cap,
+        n_push_steps=n_push_steps,
+        pull_q_cap=pull_q_cap,
+        pull_edge_cap=pull_edge_cap,
+        n_pull_steps=n_pull_steps,
+        cost_model=cost_model,
+        use_pallas=use_pallas,
+        shard_axis=shard_axis,
+    )
+    return cfg, report

@@ -1,0 +1,288 @@
+"""Survey callbacks as monoid aggregators (paper Sec. 4.5, Algs 2–4).
+
+A :class:`Survey` is the TPU-native form of the paper's user callback:
+``init`` builds per-shard state, ``update`` folds a masked batch of
+discovered triangles (all six metadata items present — the engine
+guarantees colocation), ``merge`` combines per-shard states (the paper's
+"combine in an All-Reduce-type operation"), ``finalize`` renders results
+host-side. Every callback in the paper is commutative-associative
+aggregation, so this API loses no generality (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.counting_set import CountingSet
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TriangleBatch:
+    """A masked batch of triangles Δ_pqr with their six metadata items."""
+
+    p: jax.Array          # [B] i32 global ids
+    q: jax.Array
+    r: jax.Array
+    vp_i: jax.Array       # [B, dvi] i32   meta(p)
+    vq_i: jax.Array
+    vr_i: jax.Array
+    vp_f: jax.Array       # [B, dvf] f32
+    vq_f: jax.Array
+    vr_f: jax.Array
+    e_pq_i: jax.Array     # [B, dei] i32   meta(p,q)
+    e_pr_i: jax.Array
+    e_qr_i: jax.Array
+    e_pq_f: jax.Array     # [B, def] f32
+    e_pr_f: jax.Array
+    e_qr_f: jax.Array
+    valid: jax.Array      # [B] bool
+
+
+jax.tree_util.register_dataclass(
+    TriangleBatch,
+    data_fields=[
+        "p", "q", "r", "vp_i", "vq_i", "vr_i", "vp_f", "vq_f", "vr_f",
+        "e_pq_i", "e_pr_i", "e_qr_i", "e_pq_f", "e_pr_f", "e_qr_f", "valid",
+    ],
+    meta_fields=[],
+)
+
+
+class Survey:
+    """Base survey. Subclasses override the four hooks."""
+
+    def init(self):
+        raise NotImplementedError
+
+    def update(self, state, tri: TriangleBatch):
+        raise NotImplementedError
+
+    def merge(self, stacked):
+        """Default cross-shard merge: elementwise sum over the shard axis."""
+        return jax.tree.map(lambda x: x.sum(0), stacked)
+
+    def finalize(self, merged):
+        return jax.tree.map(np.asarray, merged)
+
+
+# ---------------------------------------------------------------------------
+# 64-bit counter from uint32 limbs (x64 stays disabled; global triangle
+# counts overflow int32 at paper scale — 9.65T on WDC-2012).
+
+def counter64_zero():
+    return dict(lo=jnp.zeros((), jnp.uint32), hi=jnp.zeros((), jnp.uint32))
+
+
+def counter64_add(c, amount_u32):
+    lo = c["lo"] + amount_u32
+    carry = (lo < c["lo"]).astype(jnp.uint32)
+    return dict(lo=lo, hi=c["hi"] + carry)
+
+
+def counter64_value(c) -> int:
+    return int(np.asarray(c["hi"], np.uint64)) * 2**32 + int(np.asarray(c["lo"], np.uint64))
+
+
+class TriangleCount(Survey):
+    """Alg. 2 — global triangle count (metadata ignored)."""
+
+    def init(self):
+        return counter64_zero()
+
+    def update(self, state, tri):
+        return counter64_add(state, tri.valid.sum(dtype=jnp.uint32))
+
+    def merge(self, stacked):
+        lo = stacked["lo"].astype(jnp.uint64) if False else stacked["lo"]
+        # sum limbs with carry: do it pairwise-safe via float-free loop
+        def add2(a, b):
+            lo = a["lo"] + b["lo"]
+            carry = (lo < a["lo"]).astype(jnp.uint32)
+            return dict(lo=lo, hi=a["hi"] + b["hi"] + carry)
+
+        n = stacked["lo"].shape[0]
+        acc = dict(lo=stacked["lo"][0], hi=stacked["hi"][0])
+        for i in range(1, n):
+            acc = add2(acc, dict(lo=stacked["lo"][i], hi=stacked["hi"][i]))
+        return acc
+
+    def finalize(self, merged):
+        return counter64_value(merged)
+
+
+class LocalVertexCount(Survey):
+    """Per-vertex triangle participation (truss/clustering building block).
+
+    Dense [n] counters; at production scale use :class:`LabelTripleSet`-style
+    hashed counting instead (paper Sec. 5.3 notes these are the same engine).
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def init(self):
+        return jnp.zeros((self.n,), jnp.int32)
+
+    def update(self, state, tri):
+        amt = tri.valid.astype(jnp.int32)
+        state = state.at[tri.p].add(amt)
+        state = state.at[tri.q].add(amt)
+        state = state.at[tri.r].add(amt)
+        return state
+
+
+class ClosureTime(Survey):
+    """Alg. 4 — joint (⌈log₂ Δt_open⌉, ⌈log₂ Δt_close⌉) histogram.
+
+    Timestamps are edge float column ``ts_col``. Buckets clipped to
+    [0, n_buckets); Δt ≤ 1 lands in bucket 0 (matches ceil(log2) for
+    sub-unit gaps at the paper's second resolution).
+    """
+
+    def __init__(self, ts_col: int = 0, n_buckets: int = 64):
+        self.ts_col = ts_col
+        self.nb = n_buckets
+
+    def _bucket(self, dt):
+        dt = jnp.maximum(dt, 1.0)
+        b = jnp.ceil(jnp.log2(dt)).astype(jnp.int32)
+        return jnp.clip(b, 0, self.nb - 1)
+
+    def init(self):
+        return jnp.zeros((self.nb, self.nb), jnp.int32)
+
+    def update(self, state, tri):
+        c = self.ts_col
+        ts = jnp.stack([tri.e_pq_f[:, c], tri.e_pr_f[:, c], tri.e_qr_f[:, c]], -1)
+        ts = jnp.sort(ts, axis=-1)
+        t1, t2, t3 = ts[:, 0], ts[:, 1], ts[:, 2]
+        open_b = self._bucket(t2 - t1)
+        close_b = self._bucket(t3 - t1)
+        return state.at[open_b, close_b].add(tri.valid.astype(jnp.int32))
+
+    def finalize(self, merged):
+        joint = np.asarray(merged)
+        return dict(joint=joint, close_marginal=joint.sum(0), open_marginal=joint.sum(1))
+
+
+class MaxEdgeLabelDist(Survey):
+    """Alg. 3 — distribution of max edge label over vertex-distinct triangles."""
+
+    def __init__(self, n_labels: int, e_label_col: int = 0, v_label_col: int = 0):
+        self.n_labels = n_labels
+        self.ec = e_label_col
+        self.vc = v_label_col
+
+    def init(self):
+        return jnp.zeros((self.n_labels,), jnp.int32)
+
+    def update(self, state, tri):
+        lp, lq, lr = tri.vp_i[:, self.vc], tri.vq_i[:, self.vc], tri.vr_i[:, self.vc]
+        distinct = (lp != lq) & (lq != lr) & (lp != lr)
+        mx = jnp.maximum(jnp.maximum(tri.e_pq_i[:, self.ec], tri.e_pr_i[:, self.ec]),
+                         tri.e_qr_i[:, self.ec])
+        mx = jnp.clip(mx, 0, self.n_labels - 1)
+        return state.at[mx].add((tri.valid & distinct).astype(jnp.int32))
+
+
+class DegreeTriples(Survey):
+    """Sec. 5.9 — count (⌈log₂ d(p)⌉, ⌈log₂ d(q)⌉, ⌈log₂ d(r)⌉) triples.
+
+    Degrees are a vertex int metadata column (``HostGraph.with_degree_meta``),
+    exactly the paper's "degree as a replacement for the dummy metadata".
+    Uses the distributed counting set.
+    """
+
+    def __init__(self, deg_col: int = 0, capacity: int = 4096):
+        self.deg_col = deg_col
+        self.cs = CountingSet(capacity, 3)
+
+    def _lg(self, d):
+        return jnp.ceil(jnp.log2(jnp.maximum(d.astype(jnp.float32), 1.0))).astype(jnp.int32)
+
+    def init(self):
+        return self.cs.init()
+
+    def update(self, state, tri):
+        c = self.deg_col
+        keys = jnp.stack(
+            [self._lg(tri.vp_i[:, c]), self._lg(tri.vq_i[:, c]), self._lg(tri.vr_i[:, c])], -1)
+        return self.cs.increment(state, keys, tri.valid)
+
+    def merge(self, stacked):
+        return self.cs.merge(stacked)
+
+    def finalize(self, merged):
+        return self.cs.finalize(merged)
+
+
+class LabelTripleSet(Survey):
+    """Sec. 5.8 — FQDN-style survey: count distinct-label 3-tuples.
+
+    Vertex labels (hashed strings host-side) in int column ``v_label_col``.
+    Tuples are canonicalized by sorting so (a,b,c) ≡ (b,a,c).
+    """
+
+    def __init__(self, v_label_col: int = 0, capacity: int = 1 << 16,
+                 require_distinct: bool = True):
+        self.vc = v_label_col
+        self.require_distinct = require_distinct
+        self.cs = CountingSet(capacity, 3)
+
+    def init(self):
+        return self.cs.init()
+
+    def update(self, state, tri):
+        c = self.vc
+        lab = jnp.stack([tri.vp_i[:, c], tri.vq_i[:, c], tri.vr_i[:, c]], -1)
+        lab = jnp.sort(lab, axis=-1)
+        valid = tri.valid
+        if self.require_distinct:
+            valid = valid & (lab[:, 0] != lab[:, 1]) & (lab[:, 1] != lab[:, 2])
+        return self.cs.increment(state, lab, valid)
+
+    def merge(self, stacked):
+        return self.cs.merge(stacked)
+
+    def finalize(self, merged):
+        return self.cs.finalize(merged)
+
+
+class Enumerate(Survey):
+    """Full triangle enumeration into a fixed-capacity buffer.
+
+    The paper notes enumeration is just another callback; here it appends
+    (p, q, r) into a per-shard ring buffer (capacity overflow counted, not
+    silently dropped-without-trace).
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+
+    def init(self):
+        return dict(
+            tris=jnp.full((self.capacity, 3), -1, jnp.int32),
+            n=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, state, tri):
+        amt = tri.valid.astype(jnp.int32)
+        offs = jnp.cumsum(amt) - amt + state["n"]
+        idx = jnp.where(tri.valid, offs % self.capacity, self.capacity)  # OOB drop for invalid
+        rows = jnp.stack([tri.p, tri.q, tri.r], -1)
+        tris = state["tris"].at[idx].set(rows, mode="drop")
+        return dict(tris=tris, n=state["n"] + amt.sum())
+
+    def merge(self, stacked):
+        # concatenation semantics: report per-shard buffers stacked
+        return stacked
+
+    def finalize(self, merged):
+        tris = np.asarray(merged["tris"]).reshape(-1, 3)
+        tris = tris[tris[:, 0] >= 0]
+        return dict(triangles=tris, total_found=int(np.asarray(merged["n"]).sum()))

@@ -1,0 +1,6 @@
+# Synthetic, seeded, restart-reproducible data pipelines. The checkpoint
+# manifest records (seed, step) so a restore resumes the exact stream.
+from repro.data.tokens import lm_batch
+from repro.data.recsys import recsys_batch
+
+__all__ = ["lm_batch", "recsys_batch"]

@@ -1,0 +1,27 @@
+"""Synthetic CTR batches for BST: clicks correlate with history overlap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+
+
+def recsys_batch(cfg: RecSysConfig, seed: int, step: int, batch: int,
+                 bag_size: int = 4):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ks = jax.random.split(key, 6)
+    hist = jax.random.randint(ks[0], (batch, cfg.seq_len), 0, cfg.n_items)
+    target = jax.random.randint(ks[1], (batch,), 0, cfg.n_items)
+    fields = jax.random.randint(ks[2], (batch, cfg.n_sparse_fields, bag_size),
+                                0, cfg.vocab_per_field)
+    field_valid = jax.random.bernoulli(ks[3], 0.8,
+                                       (batch, cfg.n_sparse_fields, bag_size))
+    field_valid = field_valid.at[:, :, 0].set(True)
+    # label depends on (target mod k) colliding with history mod k → learnable
+    sig = (hist % 97 == (target % 97)[:, None]).any(-1)
+    noise = jax.random.bernoulli(ks[4], 0.1, (batch,))
+    label = jnp.logical_xor(sig, noise)
+    return dict(hist=hist.astype(jnp.int32), target=target.astype(jnp.int32),
+                fields=fields.astype(jnp.int32), field_valid=field_valid,
+                label=label)

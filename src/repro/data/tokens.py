@@ -1,0 +1,21 @@
+"""Synthetic LM token stream: deterministic function of (seed, step).
+
+Markov-ish structure (not uniform noise) so loss curves are non-trivial:
+token t+1 is a mixed function of token t and a per-sequence drift, giving
+the model learnable bigram statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = jax.random.randint(k1, (batch, 1), 0, vocab)
+    drift = jax.random.randint(k2, (batch, 1), 1, 7)
+    t = jnp.arange(seq_len)[None, :]
+    noise = jax.random.randint(k3, (batch, seq_len), 0, max(2, vocab // 16))
+    toks = (base + drift * t + noise) % vocab
+    return toks.astype(jnp.int32)

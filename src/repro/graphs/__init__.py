@@ -1,0 +1,5 @@
+from repro.graphs.partition import owner_of, local_of, global_of
+from repro.graphs.csr import HostGraph, MetaSpec
+from repro.graphs import generators
+
+__all__ = ["owner_of", "local_of", "global_of", "HostGraph", "MetaSpec", "generators"]

@@ -1,0 +1,25 @@
+"""Edge-list persistence: npz with metadata columns + JSON-ish schema."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import HostGraph, MetaSpec
+
+
+def save_graph(path: str, g: HostGraph):
+    np.savez_compressed(
+        path, n=g.n, src=g.src, dst=g.dst,
+        vmeta_i=g.vmeta_i, vmeta_f=g.vmeta_f,
+        emeta_i=g.emeta_i, emeta_f=g.emeta_f,
+        v_int="\x00".join(g.spec.v_int), v_float="\x00".join(g.spec.v_float),
+        e_int="\x00".join(g.spec.e_int), e_float="\x00".join(g.spec.e_float))
+
+
+def load_graph(path: str) -> HostGraph:
+    z = np.load(path, allow_pickle=False)
+    names = lambda k: tuple(x for x in str(z[k]) .split("\x00") if x)
+    spec = MetaSpec(v_int=names("v_int"), v_float=names("v_float"),
+                    e_int=names("e_int"), e_float=names("e_float"))
+    return HostGraph(n=int(z["n"]), src=z["src"], dst=z["dst"], spec=spec,
+                     vmeta_i=z["vmeta_i"], vmeta_f=z["vmeta_f"],
+                     emeta_i=z["emeta_i"], emeta_f=z["emeta_f"])

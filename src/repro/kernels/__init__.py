@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the engine's compute hot spots — the adjacency
+# intersection the paper identifies as "the most expensive operation in a
+# triangle counting kernel" (Sec. 2), in its TPU-native binary-search form
+# (DESIGN.md §2), plus the counting-set histogram update.
+#
+# Each kernel package: <name>.py (pl.pallas_call + BlockSpec), ops.py
+# (jit'd wrapper with padding + interpret flag), ref.py (pure-jnp oracle).

@@ -1,0 +1,1 @@
+from repro.kernels.hist.ops import hist_add

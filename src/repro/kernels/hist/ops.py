@@ -1,0 +1,23 @@
+"""jit'd wrapper for the counting-table update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.hist.hist import hist_add_pallas
+
+
+def hist_add(slots, amounts, capacity: int, bb: int = 1024,
+             cap_tile: int = 512, interpret: bool = True):
+    """Scatter-add ``amounts`` at ``slots`` into a fresh [capacity] table.
+
+    Out-of-range slots (e.g. masked-out entries set to -1) are dropped.
+    """
+    B = slots.shape[0]
+    bb = min(bb, max(8, B))
+    cap_tile = min(cap_tile, capacity)
+    pad = (-B) % bb
+    if pad:
+        slots = jnp.pad(slots, (0, pad), constant_values=-1)
+        amounts = jnp.pad(amounts, (0, pad))
+    return hist_add_pallas(slots, amounts, capacity, bb=bb,
+                           cap_tile=cap_tile, interpret=interpret)

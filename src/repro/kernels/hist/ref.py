@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the counting-table scatter-add."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hist_add_ref(slots, amounts, capacity: int):
+    """slots [B] int32 in [0, capacity); amounts [B] int32 → table [capacity]."""
+    return jnp.zeros((capacity,), jnp.int32).at[slots].add(amounts)

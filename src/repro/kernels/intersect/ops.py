@@ -1,0 +1,27 @@
+"""jit'd wrapper: pad batch to tile multiple, dispatch, unpad."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.intersect.intersect import intersect_pallas
+
+
+def intersect(row_d, row_h, row_i, ln, qd, qh, qi, bb: int = 128,
+              interpret: bool = True):
+    """Batched keyed lower-bound of candidates [B,L] in rows [B,L] (len ln).
+
+    Returns positions [B, L] int32; caller derives hits via
+    ``pos < ln[:,None] & row_i[pos] == qi``.
+    """
+    B = qd.shape[0]
+    bb = min(bb, max(8, B))
+    pad = (-B) % bb
+    if pad:
+        m = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
+        v = lambda x: jnp.pad(x, (0, pad))
+        row_d, row_h, row_i = m(row_d), m(row_h), m(row_i)
+        qd, qh, qi = m(qd), m(qh), m(qi)
+        ln = v(ln)
+    out = intersect_pallas(row_d, row_h, row_i, ln, qd, qh, qi, bb=bb,
+                           interpret=interpret)
+    return out[:B]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the batched sorted-list intersection (pull phase).
+
+Each batch element pairs a pulled row (keys sorted by (d,h,id), valid
+prefix length ``ln``) against up to L suffix candidates; the result is the
+lower-bound position of each candidate in its row. Hits are derived as
+``pos < ln and row_i[pos] == qi``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def intersect_ref(row_d, row_h, row_i, ln, qd, qh, qi):
+    """[B, L] rows × [B, L] candidates → [B, L] positions, via fori search."""
+    L = row_d.shape[-1]
+    n_steps = max(1, int(np.ceil(np.log2(max(2, L)))) + 1)
+
+    def one(rd, rh, ri, n, cd, ch, ci):
+        lo = jnp.zeros_like(ci)
+        hi = jnp.broadcast_to(n, ci.shape)
+
+        def body(_, carry):
+            lo, hi = carry
+            has = lo < hi
+            mid = jnp.where(has, (lo + hi) // 2, 0)
+            d = rd[mid]
+            h = rh[mid]
+            i = ri[mid]
+            less = (d < cd) | ((d == cd) & (h < ch)) | ((d == cd) & (h == ch) & (i < ci))
+            return jnp.where(has & less, mid + 1, lo), jnp.where(has & ~less, mid, hi)
+
+        lo, _ = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
+        return lo
+
+    return jax.vmap(one)(row_d, row_h, row_i, ln, qd, qh, qi)
+
+
+def intersect_numpy(row_d, row_h, row_i, ln, qd, qh, qi):
+    """Merge-path host oracle: two-pointer walk per pair (exactly the paper's
+    serial merge-path [24]), used as ground truth for positions of hits."""
+    B, L = qd.shape
+    out = np.zeros((B, L), np.int32)
+    for b in range(B):
+        n = int(ln[b])
+        row = [(int(row_d[b, j]), int(row_h[b, j]), int(row_i[b, j])) for j in range(n)]
+        for k in range(L):
+            key = (int(qd[b, k]), int(qh[b, k]), int(qi[b, k]))
+            # lower bound
+            l, h = 0, n
+            while l < h:
+                m = (l + h) // 2
+                if row[m] < key:
+                    l = m + 1
+                else:
+                    h = m
+            out[b, k] = l
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.wedge_check.ops import wedge_check

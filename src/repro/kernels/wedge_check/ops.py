@@ -1,0 +1,24 @@
+"""jit'd wrapper: pad query batch to the tile size, dispatch, unpad."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.wedge_check.wedge_check import wedge_check_pallas
+
+
+def wedge_check(keys_d, keys_h, keys_i, lo, hi, qd, qh, qi,
+                bq: int = 1024, interpret: bool = True):
+    """Lower-bound of (qd,qh,qi) within [lo,hi) of the sorted key arrays.
+
+    Shapes: keys_* [E]; lo/hi/q* [B] (any B — padded internally).
+    Returns positions [B] int32.
+    """
+    nq = qd.shape[-1]
+    bq = min(bq, max(8, nq))
+    pad = (-nq) % bq
+    if pad:
+        z = lambda x: jnp.pad(x, (0, pad))
+        lo, hi, qd, qh, qi = z(lo), z(hi), z(qd), z(qh), z(qi)
+    out = wedge_check_pallas(keys_d, keys_h, keys_i, lo, hi, qd, qh, qi,
+                             bq=bq, interpret=interpret)
+    return out[:nq]

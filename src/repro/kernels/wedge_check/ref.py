@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the wedge-check (batched keyed lower-bound).
+
+Given per-shard edge-key arrays sorted within rows by the total order
+``(d, h, id)`` and per-query row bounds [lo, hi), return the lower-bound
+position of each query key. The engine derives wedge closure from
+``pos < hi and keys_i[pos] == qi``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def lower_bound_ref(keys_d, keys_h, keys_i, lo, hi, qd, qh, qi):
+    """O(B log E) reference via fori binary search (no Pallas)."""
+    e_cap = keys_d.shape[-1]
+    n_steps = max(1, int(np.ceil(np.log2(max(2, e_cap)))) + 1)
+
+    def body(_, carry):
+        lo, hi = carry
+        has = lo < hi
+        mid = jnp.where(has, (lo + hi) // 2, 0)
+        kd = keys_d[mid]
+        kh = keys_h[mid]
+        ki = keys_i[mid]
+        less = (kd < qd) | ((kd == qd) & (kh < qh)) | ((kd == qd) & (kh == qh) & (ki < qi))
+        return jnp.where(has & less, mid + 1, lo), jnp.where(has & ~less, mid, hi)
+
+    res, _ = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
+    return res
+
+
+def lower_bound_numpy(keys_d, keys_h, keys_i, lo, hi, qd, qh, qi):
+    """Slow exact host oracle (per-element python bisect) for test truth."""
+    out = np.zeros(len(qd), np.int32)
+    for b in range(len(qd)):
+        l, h = int(lo[b]), int(hi[b])
+        key = (int(qd[b]), int(qh[b]), int(qi[b]))
+        while l < h:
+            m = (l + h) // 2
+            km = (int(keys_d[m]), int(keys_h[m]), int(keys_i[m]))
+            if km < key:
+                l = m + 1
+            else:
+                h = m
+        out[b] = l
+    return out

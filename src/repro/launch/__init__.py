@@ -1,0 +1,2 @@
+# Launch layer: mesh construction, per-cell step builders, dry-run driver,
+# end-to-end train/serve drivers, elasticity utilities.

@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (brief: MULTI-POD DRY-RUN). The two lines above
+# MUST precede any other import — jax locks the device count on first init.
+#
+#   python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+#   python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+#
+# Each cell is lowered + compiled for the production mesh; the artifact
+# JSON records memory_analysis (proves it fits), cost_analysis (FLOPs /
+# bytes for §Roofline), and the parsed collective schedule.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import numpy as np   # noqa: E402
+import jax           # noqa: E402
+
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import all_cells, build_cell        # noqa: E402
+from repro.roofline.analysis import analyze_compiled        # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec = dict(arch=arch, shape=shape,
+               mesh="multi" if multi_pod else "single", n_devices=n_dev)
+    t0 = time.time()
+    try:
+        with mesh:
+            plan = build_cell(arch, shape, mesh)
+            rec["note"] = plan.note
+            rec["model_flops_total"] = plan.model_flops
+            if plan.skip_reason:
+                rec["skipped"] = plan.skip_reason
+            jfn = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                          donate_argnums=plan.donate)
+            lowered = jfn.lower(*plan.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+            analysis = analyze_compiled(compiled, n_dev, plan.model_flops)
+            rec.update(analysis)
+            rec["ok"] = True
+            mem = rec["memory"]
+            print(f"[OK] {arch} × {shape} × {rec['mesh']}: "
+                  f"fits={rec['fits_hbm']} "
+                  f"peak={rec['peak_device_bytes']/1e9:.2f}GB "
+                  f"dominant={rec['dominant']} "
+                  f"terms={ {k: f'{v:.3e}' for k, v in rec['terms'].items()} } "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+            print(f"     memory_analysis: {mem}")
+            print(f"     cost_analysis: flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e}")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {arch} × {shape} × {rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            rec = run_cell(arch, shape, mp)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"\ndry-run summary: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

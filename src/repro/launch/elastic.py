@@ -1,0 +1,35 @@
+"""Elastic scaling utilities (DESIGN.md §5).
+
+A checkpoint written on mesh A restores onto mesh B of a different device
+count because the on-disk format is mesh-agnostic (logical global arrays)
+and placement happens at restore time from the *new* mesh's
+PartitionSpecs. ``reshard_restore`` is the one-call path a scheduler uses
+after growing/shrinking an allocation.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.manager import load_manifest, restore_pytree
+
+
+def reshard_restore(path: str, like, new_mesh, spec_tree):
+    """Restore ``path`` onto ``new_mesh`` with ``spec_tree`` placements."""
+    shardings = jax.tree.map(
+        lambda s: None if s is None else NamedSharding(new_mesh, s),
+        spec_tree,
+        is_leaf=lambda x: x is None or hasattr(x, "_normalized_spec_for_aval")
+        or type(x).__name__ == "PartitionSpec")
+    tree = restore_pytree(path, like, shardings)
+    extra = load_manifest(path)["extra"]
+    return tree, extra
+
+
+def replan_batch(global_batch: int, old_devices: int, new_devices: int) -> int:
+    """Keep the global batch constant across reshapes when divisible, else
+    round to the nearest multiple of the new device count (logged by the
+    caller; optimizer hyperparameters are batch-size coupled)."""
+    if global_batch % new_devices == 0:
+        return global_batch
+    return max(new_devices, (global_batch // new_devices) * new_devices)

@@ -1,0 +1,27 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_names(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def data_axes(mesh):
+    """Batch-like axes: ('pod','data') on the multi-pod mesh, else 'data'."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh):
+    return tuple(mesh.axis_names)

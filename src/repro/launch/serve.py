@@ -1,0 +1,70 @@
+"""Batched serving driver: prefill + decode loop with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+        --smoke --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs as registry
+from repro.data import lm_batch
+from repro.models import transformer as TF
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mod = registry.get_arch(args.arch)
+    cfg = mod.SMOKE if args.smoke else mod.CONFIG
+    params = TF.init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.gen
+
+    prompts = lm_batch(args.seed, 1, args.batch, args.prompt_len, cfg.vocab)
+
+    # prefill: run the prompt once, building the cache
+    t0 = time.time()
+    logits, extras = jax.jit(
+        lambda p, t: TF.forward(cfg, p, t, return_cache=True))(params, prompts)
+    kc, vc = extras["cache"]["k"], extras["cache"]["v"]
+    pad = max_len - args.prompt_len
+    cache = dict(
+        k=jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        v=jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        pos=jnp.full((args.batch,), args.prompt_len, jnp.int32),
+    )
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+    decode = jax.jit(lambda p, c, t: TF.decode_step(cfg, p, c, t))
+    out = [tok]
+    t1 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t1
+    seqs = np.asarray(jnp.concatenate(out, 1))
+    print(f"prefill: {args.batch}×{args.prompt_len} in {t_prefill*1e3:.1f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"decode: {args.gen-1} steps × batch {args.batch} in {t_dec*1e3:.1f} ms "
+          f"({args.batch*(args.gen-1)/max(t_dec,1e-9):.0f} tok/s)")
+    print(f"sample continuation ids: {seqs[0][:16].tolist()}")
+    return seqs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,495 @@
+"""Per-(arch × shape × mesh) cell plans: the function to lower, its
+ShapeDtypeStruct inputs, and their shardings.
+
+``build_cell`` is consumed by launch/dryrun.py (lower+compile, roofline
+terms) and launch/train.py (real execution at smoke scale). Everything is
+allocation-free: parameters come from ``jax.eval_shape`` over the init.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as config_registry
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig, ShapeCell, TriPollConfig
+from repro.launch.mesh import all_axes, data_axes
+from repro.models import transformer as TF
+from repro.models.layers import ShardRules
+from repro.train.optimizer import adafactor, adamw
+from repro.train.trainer import TrainState, init_state, make_train_step
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    fn: object
+    args: tuple
+    in_shardings: tuple
+    donate: tuple = ()
+    model_flops: float = 0.0
+    bytes_hint: float = 0.0
+    note: str = ""
+    skip_reason: str | None = None
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _remap(spec_tree, mesh):
+    """Rewrite 'data' axis references to ('pod','data') on multi-pod meshes."""
+    da = data_axes(mesh)
+    if da == ("data",):
+        return spec_tree
+
+    def fix(spec):
+        if spec is None:
+            return spec
+        parts = []
+        for e in spec:
+            if e == "data":
+                parts.append(da)
+            else:
+                parts.append(e)
+        return P(*parts)
+
+    return jax.tree.map(fix, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def _repl(avals, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), avals)
+
+
+def _rules(mesh) -> ShardRules:
+    da = data_axes(mesh)
+    return ShardRules(data=da if len(da) > 1 else "data", model="model",
+                      dm=tuple(da) + ("model",), active=True)
+
+
+def _pick_opt(mod):
+    if getattr(mod, "OPTIMIZER", "adamw") == "adafactor":
+        return adafactor(1e-2)
+    return adamw(3e-4)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+
+
+def _lm_attn_flops(cfg: LMConfig, B, S):
+    return cfg.n_layers * B * cfg.n_heads * cfg.d_head * S * S * 2.0
+
+
+def _lm_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
+    cfg: LMConfig = mod.CONFIG
+    rules = _rules(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    params_avals = TF.abstract_params(cfg)
+    pspecs = _remap(TF.param_specs(cfg), mesh)
+    note = ""
+
+    if shape.kind == "train":
+        opt = _pick_opt(mod)
+        opt_avals = jax.eval_shape(opt.init, params_avals)
+        opt_specs = opt.state_specs(pspecs)
+        state_avals = TrainState(params=params_avals, opt_state=opt_avals,
+                                 step=_sd((), jnp.int32), ef=None)
+        state_sh = TrainState(params=_ns(mesh, pspecs),
+                              opt_state=_ns(mesh, opt_specs),
+                              step=NamedSharding(mesh, P()), ef=None)
+        batch_aval = _sd((B, S + 1), jnp.int32)
+        batch_sh = NamedSharding(mesh, _remap(P("data", None), mesh))
+        fn = make_train_step(
+            lambda p, b: TF.loss_fn(cfg, p, b, rules), opt)
+        flops = 6.0 * cfg.n_active_params * B * S + 3.0 * _lm_attn_flops(cfg, B, S)
+        return CellPlan(arch, shape.name, fn, (state_avals, batch_aval),
+                        (state_sh, batch_sh), donate=(0,), model_flops=flops,
+                        note=f"opt={getattr(mod, 'OPTIMIZER', 'adamw')}")
+
+    if shape.kind == "prefill":
+        fn = lambda p, t: TF.forward(cfg, p, t, rules, return_cache=True)
+        batch_aval = _sd((B, S), jnp.int32)
+        flops = 2.0 * cfg.n_active_params * B * S + _lm_attn_flops(cfg, B, S)
+        return CellPlan(arch, shape.name, fn,
+                        (params_avals, batch_aval),
+                        (_ns(mesh, pspecs),
+                         NamedSharding(mesh, _remap(P("data", None), mesh))),
+                        model_flops=flops)
+
+    # decode (decode_32k / long_500k): one token against an S-entry cache
+    cache_avals = jax.eval_shape(
+        lambda: TF.init_cache(cfg, B, S))
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    if B >= n_data:
+        cspec = dict(k=P(None, "data", "model", None, None),
+                     v=P(None, "data", "model", None, None), pos=P("data"))
+    else:
+        # tiny-batch long-context: shard the sequence over every axis so no
+        # device idles (DESIGN §4, long_500k note)
+        aa = all_axes(mesh)
+        cspec = dict(k=P(None, None, aa, None, None),
+                     v=P(None, None, aa, None, None), pos=P(None))
+        note = "seq sharded over all axes (B < data axis)"
+    cspec = _remap(cspec, mesh)
+    tok_aval = _sd((B, 1), jnp.int32)
+    tok_spec = _remap(P("data", None), mesh) if B >= n_data else P(None, None)
+    fn = lambda p, c, t: TF.decode_step(cfg, p, c, t, rules)
+    flops = (2.0 * cfg.n_active_params * B
+             + cfg.n_layers * B * cfg.n_heads * cfg.d_head * S * 4.0)
+    return CellPlan(arch, shape.name, fn,
+                    (params_avals, cache_avals, tok_aval),
+                    (_ns(mesh, pspecs), _ns(mesh, cspec),
+                     NamedSharding(mesh, tok_spec)),
+                    donate=(1,), model_flops=flops, note=note,
+                    skip_reason=shape.skip_reason)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+
+# N is padded to a 512 multiple (shardable over both production meshes);
+# the logical brief sizes live in `N_logical` and the padding rides the
+# node_valid mask.
+GNN_CELL_DIMS = {
+    "full_graph_sm": dict(N=3072, N_logical=2708, E=10556, d_feat=1433,
+                          d_out=8, task="node", n_graphs=1),
+    "minibatch_lg": dict(N=1024 + 1024 * 15 + 1024 * 150,
+                         N_logical=1024 + 1024 * 15 + 1024 * 150,
+                         E=1024 * 15 + 1024 * 150,
+                         d_feat=602, d_out=41, task="node", n_graphs=1),
+    "ogb_products": dict(N=2449408, N_logical=2449029, E=61859140, d_feat=100,
+                         d_out=47, task="node", n_graphs=1),
+    "molecule": dict(N=4096, N_logical=30 * 128, E=64 * 128, d_feat=0,
+                     d_out=1, task="energy", n_graphs=128),
+}
+
+
+def _pad_up(x, m):
+    return -(-x // m) * m
+
+
+def _gnn_graph_avals(dims, e_pad):
+    N = dims["N"]
+    from repro.models.gnn.common import GraphBatch
+
+    return GraphBatch(
+        node_feat=_sd((N, dims["d_feat"]), jnp.float32) if dims["d_feat"] else None,
+        species=None if dims["d_feat"] else _sd((N,), jnp.int32),
+        positions=_sd((N, 3), jnp.float32),
+        edge_src=_sd((e_pad,), jnp.int32),
+        edge_dst=_sd((e_pad,), jnp.int32),
+        edge_valid=_sd((e_pad,), jnp.bool_),
+        node_valid=_sd((N,), jnp.bool_),
+        graph_id=_sd((N,), jnp.int32),
+        n_graphs=dims["n_graphs"],
+    )
+
+
+def _gnn_graph_specs(dims, mesh):
+    from repro.models.gnn.common import GraphBatch
+
+    aa = all_axes(mesh)
+    nvec = P(aa)
+    return GraphBatch(
+        node_feat=P(aa, None) if dims["d_feat"] else None,
+        species=None if dims["d_feat"] else nvec,
+        positions=P(aa, None),
+        edge_src=nvec, edge_dst=nvec, edge_valid=nvec,
+        node_valid=nvec, graph_id=nvec, n_graphs=dims["n_graphs"],
+    )
+
+
+def _gnn_forward_builder(family, cfg: GNNConfig, dims, e_pad):
+    ex = dict(cfg.extras)
+    kw = dict(d_feat=dims["d_feat"], d_out=dims["d_out"])
+    if family == "schnet":
+        from repro.models.gnn import schnet as m
+
+        mc = m.Cfg(n_interactions=cfg.n_layers, d_hidden=cfg.d_hidden,
+                   n_rbf=ex["n_rbf"], cutoff=ex["cutoff"], **kw)
+    elif family == "dimenet":
+        from repro.models.gnn import dimenet as m
+
+        mc = m.Cfg(n_blocks=cfg.n_layers, d_hidden=cfg.d_hidden,
+                   n_bilinear=ex["n_bilinear"], n_spherical=ex["n_spherical"],
+                   n_radial=ex["n_radial"], cutoff=ex["cutoff"], **kw)
+    elif family == "nequip":
+        from repro.models.gnn import nequip as m
+
+        mc = m.Cfg(n_layers=cfg.n_layers, channels=cfg.d_hidden,
+                   l_max=ex["l_max"], n_rbf=ex["n_rbf"], cutoff=ex["cutoff"],
+                   **kw)
+    elif family == "equiformer_v2":
+        from repro.models.gnn import equiformer_v2 as m
+
+        chunks = ex.get("edge_chunks", 64 if e_pad >= 1 << 22 else 1)
+        mc = m.Cfg(n_layers=cfg.n_layers, channels=cfg.d_hidden,
+                   l_max=ex["l_max"], m_max=ex["m_max"], n_heads=ex["n_heads"],
+                   n_rbf=ex["n_rbf"], cutoff=ex["cutoff"],
+                   edge_chunks=chunks, **kw)
+    else:
+        raise KeyError(family)
+    return m, mc
+
+
+def _gnn_flops(family, cfg: GNNConfig, dims, t_cap) -> float:
+    E, N, d = dims["E"], dims["N"], cfg.d_hidden
+    if family == "schnet":
+        per_edge = 2 * d * d + 2 * cfg.extras["n_rbf"] * d
+        return cfg.n_layers * (E * per_edge + N * 4 * d * d) * 2.0
+    if family == "dimenet":
+        ex = cfg.extras
+        sbf = ex["n_spherical"] * ex["n_radial"]
+        per_tri = 2 * (sbf * ex["n_bilinear"] + d * ex["n_bilinear"]
+                       + ex["n_bilinear"] * d)
+        return cfg.n_layers * (t_cap * per_tri + E * 6 * d * d) * 1.0
+    if family == "nequip":
+        from repro.models.gnn.nequip import tp_paths
+
+        l_max = cfg.extras["l_max"]
+        tp = sum((2 * a + 1) * (2 * b + 1) * (2 * c + 1)
+                 for a, b, c in tp_paths(l_max))
+        return cfg.n_layers * E * cfg.d_hidden * tp * 2.0
+    if family == "equiformer_v2":
+        l_max, m_max = cfg.extras["l_max"], cfg.extras["m_max"]
+        rotf = sum((2 * l + 1) ** 2 for l in range(l_max + 1)) * d * 2 * 2
+        n_l0 = l_max + 1
+        so2 = sum((2 if m else 1) * ((l_max + 1 - m) * d) ** 2 * 2
+                  for m in range(m_max + 1))
+        return cfg.n_layers * E * (rotf + so2) * 1.0
+    return 0.0
+
+
+def _gnn_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
+    cfg: GNNConfig = mod.CONFIG
+    dims = GNN_CELL_DIMS[shape.name]
+    # large edge sets pad to a chunkable+shardable multiple (64 chunks × 512)
+    e_pad = _pad_up(dims["E"], 32768 if dims["E"] >= 1 << 20 else 4096)
+    m, mc = _gnn_forward_builder(cfg.family, cfg, dims, e_pad)
+    g_avals = _gnn_graph_avals(dims, e_pad)
+    g_specs = _gnn_graph_specs(dims, mesh)
+    aa = all_axes(mesh)
+    # graph tensors shard over every mesh axis; model params replicate
+    grules = ShardRules(data=aa, model=None, active=True)
+    opt = adamw(1e-3)
+
+    extra_avals = {}
+    extra_specs = {}
+    t_cap = 0
+    if cfg.family == "dimenet":
+        t_cap = _pad_up(4 * dims["E"], 4096)
+        extra_avals = dict(t_in=_sd((t_cap,), jnp.int32),
+                           t_out=_sd((t_cap,), jnp.int32),
+                           t_valid=_sd((t_cap,), jnp.bool_))
+        extra_specs = dict(t_in=P(aa), t_out=P(aa), t_valid=P(aa))
+
+    if dims["task"] == "node":
+        label_aval = _sd((dims["N"],), jnp.int32)
+        label_spec = P(aa)
+    else:
+        label_aval = _sd((dims["n_graphs"],), jnp.float32)
+        label_spec = P(None)
+
+    def loss_fn(params, batch):
+        graph, labels = batch["graph"], batch["labels"]
+        if cfg.family == "dimenet":
+            tri = (batch["t_in"], batch["t_out"], batch["t_valid"])
+            node, gout = m.forward(mc, params, graph, tri, rules=grules)
+        else:
+            node, gout = m.forward(mc, params, graph, rules=grules)
+        if dims["task"] == "node":
+            lz = jax.nn.logsumexp(node, -1)
+            gold = jnp.take_along_axis(node, labels[:, None], -1)[:, 0]
+            per = (lz - gold) * graph.node_valid
+            loss = per.sum() / jnp.maximum(graph.node_valid.sum(), 1)
+        else:
+            loss = jnp.mean((gout[:, 0] - labels) ** 2)
+        return loss, dict(nll=loss)
+
+    params_avals = jax.eval_shape(lambda k: m.init_params(k, mc),
+                                  _sd((2,), jnp.uint32))
+    opt_avals = jax.eval_shape(opt.init, params_avals)
+    state_avals = TrainState(params=params_avals, opt_state=opt_avals,
+                             step=_sd((), jnp.int32), ef=None)
+    state_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state_avals)
+
+    batch_avals = dict(graph=g_avals, labels=label_aval, **extra_avals)
+    batch_sh = _ns(mesh, dict(graph=g_specs, labels=label_spec, **extra_specs))
+    fn = make_train_step(loss_fn, opt)
+    return CellPlan(arch, shape.name, fn, (state_avals, batch_avals),
+                    (state_sh, batch_sh), donate=(0,),
+                    model_flops=3.0 * _gnn_flops(cfg.family, cfg, dims, t_cap),
+                    note=f"{dims['task']} E={dims['E']} t_cap={t_cap}")
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+
+
+def _recsys_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
+    from repro.models.recsys import bst
+
+    cfg: RecSysConfig = mod.CONFIG
+    rules = _rules(mesh)
+    B = shape.global_batch
+    bag = 4
+    params_avals = jax.eval_shape(lambda k: bst.init_params(cfg, k),
+                                  _sd((2,), jnp.uint32))
+    pspecs = _remap(bst.param_specs(cfg), mesh)
+    d = cfg.embed_dim
+    mlp_flops = 0
+    dims = ((cfg.seq_len + 1) * d + cfg.n_sparse_fields * d,) + cfg.mlp_dims + (1,)
+    for a, b in zip(dims[:-1], dims[1:]):
+        mlp_flops += 2 * a * b
+    attn_flops = cfg.n_blocks * (cfg.seq_len + 1) ** 2 * d * 4 + \
+        cfg.n_blocks * 8 * d * d * (cfg.seq_len + 1)
+
+    if shape.kind == "train":
+        opt = adamw(1e-3)
+        opt_avals = jax.eval_shape(opt.init, params_avals)
+        opt_specs = opt.state_specs(pspecs)
+        state_avals = TrainState(params=params_avals, opt_state=opt_avals,
+                                 step=_sd((), jnp.int32), ef=None)
+        state_sh = TrainState(params=_ns(mesh, pspecs),
+                              opt_state=_ns(mesh, opt_specs),
+                              step=NamedSharding(mesh, P()), ef=None)
+        batch_avals = dict(
+            hist=_sd((B, cfg.seq_len), jnp.int32),
+            target=_sd((B,), jnp.int32),
+            fields=_sd((B, cfg.n_sparse_fields, bag), jnp.int32),
+            field_valid=_sd((B, cfg.n_sparse_fields, bag), jnp.bool_),
+            label=_sd((B,), jnp.bool_),
+        )
+        bspec = _remap(dict(hist=P("data", None), target=P("data"),
+                            fields=P("data", None, None),
+                            field_valid=P("data", None, None),
+                            label=P("data")), mesh)
+        fn = make_train_step(lambda p, b: bst.loss_fn(cfg, p, b, rules),
+                             adamw(1e-3))
+        return CellPlan(arch, shape.name, fn, (state_avals, batch_avals),
+                        (state_sh, _ns(mesh, bspec)), donate=(0,),
+                        model_flops=3.0 * B * (mlp_flops + attn_flops))
+
+    if shape.kind == "serve":
+        batch_avals = dict(
+            hist=_sd((B, cfg.seq_len), jnp.int32),
+            target=_sd((B,), jnp.int32),
+            fields=_sd((B, cfg.n_sparse_fields, bag), jnp.int32),
+            field_valid=_sd((B, cfg.n_sparse_fields, bag), jnp.bool_),
+        )
+        bspec = _remap(dict(hist=P("data", None), target=P("data"),
+                            fields=P("data", None, None),
+                            field_valid=P("data", None, None)), mesh)
+        fn = lambda p, b: bst.forward(cfg, p, b, rules)
+        return CellPlan(arch, shape.name, fn, (params_avals, batch_avals),
+                        (_ns(mesh, pspecs), _ns(mesh, bspec)),
+                        model_flops=B * (mlp_flops + attn_flops))
+
+    # retrieval: one query vs n_candidates (padded to a shardable multiple)
+    n_cand = _pad_up(shape.extras["n_candidates"], 512)
+    aa = all_axes(mesh)
+    batch_avals = dict(hist=_sd((1, cfg.seq_len), jnp.int32),
+                       cand_ids=_sd((n_cand,), jnp.int32))
+    bspec = dict(hist=P(None, None), cand_ids=P(aa))
+    fn = lambda p, b: bst.retrieval_scores(cfg, p, b, rules)
+    return CellPlan(arch, shape.name, fn, (params_avals, batch_avals),
+                    (_ns(mesh, pspecs), _ns(mesh, bspec)),
+                    model_flops=2.0 * n_cand * cfg.embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# tripoll cells (the paper's own workload)
+
+
+def _tripoll_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
+    from repro.core.dodgr import dodgr_spec
+    from repro.core.engine import EngineConfig, make_survey_fn
+    from repro.core.surveys import ClosureTime
+
+    cfg: TriPollConfig = mod.CONFIG
+    S = int(np.prod(list(mesh.shape.values())))
+    n_loc = -(-cfg.n_global // S)
+    e_cap = cfg.e_cap * 256 // S
+    aa = all_axes(mesh)
+    mode = shape.extras["mode"]
+    # exchange buffers are [S, cap]-per-shard: scale caps inversely with S so
+    # bytes/shard stay constant across meshes (supersteps scale up instead)
+    up = max(1, S // 256)
+    ecfg = EngineConfig(
+        mode=mode, push_cap=max(256, cfg.push_cap // up),
+        n_push_steps=cfg.n_push_steps * up,
+        pull_q_cap=max(1, cfg.pull_q_cap // up),
+        pull_edge_cap=max(4, cfg.pull_edge_cap // up),
+        n_pull_steps=(cfg.n_pull_steps * up) if mode == "pushpull" else 0,
+        unroll_steps=cfg.unroll, shard_axis=aa,
+    )
+    gr = dodgr_spec(S=S, n_global=cfg.n_global, n_loc=n_loc, e_cap=e_cap,
+                    d_plus_max=cfg.d_plus_max, dvi=cfg.dvi, dvf=cfg.dvf,
+                    dei=cfg.dei, def_=cfg.def_)
+    spec_first = lambda aval: P(aa, *([None] * (len(aval.shape) - 1)))
+    gr_sh = jax.tree.map(lambda a: NamedSharding(mesh, spec_first(a)), gr)
+    fn = make_survey_fn(ClosureTime(), ecfg)
+    # useful work: one keyed binary search per wedge (≈ log2(L) × 8 ops)
+    wedges = S * S * cfg.push_cap * (cfg.n_push_steps + cfg.n_pull_steps)
+    flops = wedges * np.log2(max(2, cfg.d_plus_max)) * 8.0
+    return CellPlan(arch, shape.name, fn, (gr,), (gr_sh,),
+                    model_flops=flops,
+                    note=f"S={S} e_cap={e_cap} mode={mode}")
+
+
+# ---------------------------------------------------------------------------
+
+
+class _ModProxy:
+    """Config-module proxy with an overridden CONFIG (cost-correction runs)."""
+
+    def __init__(self, mod, cfg):
+        self._mod = mod
+        self.CONFIG = cfg
+
+    def __getattr__(self, name):
+        return getattr(self._mod, name)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               overrides: dict | None = None) -> CellPlan:
+    """``overrides``: dataclass field replacements applied to CONFIG —
+    used by the loop-cost correction pass (roofline) to lower unrolled /
+    reduced-depth variants of the same cell."""
+    mod = config_registry.get_arch(arch_id)
+    if overrides:
+        mod = _ModProxy(mod, replace(mod.CONFIG, **overrides))
+    shape = next(s for s in mod.SHAPES if s.name == shape_name)
+    kind = mod.KIND
+    if kind == "lm":
+        return _lm_cell(arch_id, mod, shape, mesh)
+    if kind == "gnn":
+        return _gnn_cell(arch_id, mod, shape, mesh)
+    if kind == "recsys":
+        return _recsys_cell(arch_id, mod, shape, mesh)
+    if kind == "tripoll":
+        return _tripoll_cell(arch_id, mod, shape, mesh)
+    raise KeyError(kind)
+
+
+def all_cells(include_tripoll=True):
+    out = []
+    for arch in config_registry.list_archs():
+        mod = config_registry.get_arch(arch)
+        if mod.KIND == "tripoll" and not include_tripoll:
+            continue
+        for s in mod.SHAPES:
+            out.append((arch, s.name))
+    return out

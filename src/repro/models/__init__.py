@@ -1,0 +1,2 @@
+# Model zoo: LM transformers (dense + MoE), GNNs, recsys — each exposing
+# init_params / param_specs / step functions consumed by launch/ and train/.

@@ -1,0 +1,4 @@
+# GNN zoo: SchNet / DimeNet (triplet gather), NequIP (E(3) tensor product),
+# EquiformerV2 (eSCN SO(2) graph attention). Message passing is
+# segment_sum over edge indices — the same partitioned-CSR substrate the
+# TriPoll engine uses (DESIGN.md §4).

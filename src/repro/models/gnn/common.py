@@ -1,0 +1,181 @@
+"""Shared GNN substrate: graph batches, segment message passing, bases.
+
+JAX has no sparse message-passing primitive beyond BCOO; per the brief the
+edge-index → gather → segment_sum path *is* the system. Edges live on the
+shard of their destination at scale (DESIGN.md §4); at smoke scale the
+same code runs unsharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GraphBatch:
+    """Padded static-shape (batched) graph."""
+
+    node_feat: jax.Array | None    # [N, F] float or None
+    species: jax.Array | None      # [N] int32 or None
+    positions: jax.Array           # [N, 3] f32
+    edge_src: jax.Array            # [E] int32
+    edge_dst: jax.Array            # [E] int32
+    edge_valid: jax.Array          # [E] bool
+    node_valid: jax.Array          # [N] bool
+    graph_id: jax.Array            # [N] int32 (readout segments)
+    n_graphs: int
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["node_feat", "species", "positions", "edge_src", "edge_dst",
+                 "edge_valid", "node_valid", "graph_id"],
+    meta_fields=["n_graphs"],
+)
+
+
+def segment_mp(messages, edge_dst, n_nodes, edge_valid=None):
+    """Scatter-sum messages [E, ...] to destination nodes [N, ...]."""
+    if edge_valid is not None:
+        messages = messages * edge_valid.reshape((-1,) + (1,) * (messages.ndim - 1))
+    return jax.ops.segment_sum(messages, edge_dst, num_segments=n_nodes)
+
+
+def segment_softmax(scores, edge_dst, n_nodes, edge_valid=None):
+    """Edge-softmax over incoming edges per destination node."""
+    if edge_valid is not None:
+        scores = jnp.where(edge_valid.reshape((-1,) + (1,) * (scores.ndim - 1)),
+                           scores, -1e30)
+    mx = jax.ops.segment_max(scores, edge_dst, num_segments=n_nodes)
+    ex = jnp.exp(scores - mx[edge_dst])
+    if edge_valid is not None:
+        ex = ex * edge_valid.reshape((-1,) + (1,) * (scores.ndim - 1))
+    den = jax.ops.segment_sum(ex, edge_dst, num_segments=n_nodes)
+    return ex / jnp.maximum(den[edge_dst], 1e-30)
+
+
+def edge_vectors(g: GraphBatch):
+    """Relative vectors, distances (clamped), unit directions."""
+    vec = g.positions[g.edge_dst] - g.positions[g.edge_src]
+    d = jnp.linalg.norm(vec, axis=-1)
+    d_safe = jnp.maximum(d, 1e-6)
+    return vec, d, vec / d_safe[:, None]
+
+
+def gaussian_rbf(d, n_rbf: int, cutoff: float):
+    """SchNet-style Gaussian radial basis on [0, cutoff]."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (d[:, None] - centers[None, :]) ** 2)
+
+
+def bessel_rbf(d, n_rbf: int, cutoff: float):
+    """DimeNet/NequIP Bessel radial basis sqrt(2/c)·sin(nπd/c)/d."""
+    d_safe = jnp.maximum(d, 1e-6)[:, None]
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    return np.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * d_safe / cutoff) / d_safe
+
+
+def cosine_cutoff(d, cutoff: float):
+    """Smooth envelope → 0 at the cutoff radius."""
+    return jnp.where(d < cutoff, 0.5 * (jnp.cos(np.pi * d / cutoff) + 1.0), 0.0)
+
+
+def polynomial_cutoff(d, cutoff: float, p: int = 6):
+    """DimeNet envelope u(d) (Eq. 8)."""
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2.0)
+    c = -p * (p + 1) / 2.0
+    return (1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)) * (x < 1.0)
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - np.log(2.0)
+
+
+def build_triplets(edge_src: np.ndarray, edge_dst: np.ndarray, n_nodes: int,
+                   max_triplets: int | None = None):
+    """Host-side triplet index lists for directional MP (DimeNet).
+
+    For every pair of edges (k→j) and (j→i) with k != i, emit
+    (edge_kj, edge_ji). Returns padded (t_in, t_out, valid).
+    """
+    E = len(edge_src)
+    by_dst: dict[int, list[int]] = {}
+    for e in range(E):
+        by_dst.setdefault(int(edge_dst[e]), []).append(e)
+    t_in, t_out = [], []
+    for e_ji in range(E):
+        j = int(edge_src[e_ji])
+        i = int(edge_dst[e_ji])
+        for e_kj in by_dst.get(j, ()):
+            if int(edge_src[e_kj]) != i:
+                t_in.append(e_kj)
+                t_out.append(e_ji)
+    n = len(t_in)
+    cap = max_triplets or max(1, n)
+    if n > cap:
+        raise ValueError(f"triplet overflow: {n} > {cap}")
+    ti = np.zeros(cap, np.int32)
+    to = np.zeros(cap, np.int32)
+    tv = np.zeros(cap, bool)
+    ti[:n], to[:n], tv[:n] = t_in, t_out, True
+    return ti, to, tv
+
+
+# ---------------------------------------------------------------------------
+# synthetic graph batches for smoke tests / benchmarks
+
+
+def random_graph_batch(key, n_nodes: int, n_edges: int, d_feat: int = 0,
+                       n_species: int = 0, n_graphs: int = 1,
+                       box: float = 8.0) -> GraphBatch:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pos = jax.random.uniform(k1, (n_nodes, 3)) * box
+    src = jax.random.randint(k2, (n_edges,), 0, n_nodes)
+    dst = jax.random.randint(k3, (n_edges,), 0, n_nodes)
+    dst = jnp.where(dst == src, (dst + 1) % n_nodes, dst)
+    gid = (jnp.arange(n_nodes) * n_graphs) // n_nodes
+    return GraphBatch(
+        node_feat=(jax.random.normal(k4, (n_nodes, d_feat)) if d_feat else None),
+        species=(jax.random.randint(k4, (n_nodes,), 0, n_species)
+                 if n_species else None),
+        positions=pos,
+        edge_src=src.astype(jnp.int32),
+        edge_dst=dst.astype(jnp.int32),
+        edge_valid=jnp.ones((n_edges,), bool),
+        node_valid=jnp.ones((n_nodes,), bool),
+        graph_id=gid.astype(jnp.int32),
+        n_graphs=n_graphs,
+    )
+
+
+def radius_graph_batch(key, n_nodes: int, cutoff: float, box: float,
+                       e_cap: int, n_graphs: int = 1, n_species: int = 8):
+    """Positions in a box; edges = pairs within cutoff (host build, padded)."""
+    pos = np.asarray(jax.random.uniform(key, (n_nodes, 3))) * box
+    diff = pos[:, None] - pos[None, :]
+    d = np.sqrt((diff ** 2).sum(-1))
+    src, dst = np.nonzero((d < cutoff) & (d > 0))
+    if len(src) > e_cap:
+        keep = np.random.default_rng(0).choice(len(src), e_cap, replace=False)
+        src, dst = src[keep], dst[keep]
+    n = len(src)
+    pad = e_cap - n
+    gid = (np.arange(n_nodes) * n_graphs) // n_nodes
+    return GraphBatch(
+        node_feat=None,
+        species=jnp.asarray(np.random.default_rng(1).integers(0, n_species, n_nodes),
+                            jnp.int32),
+        positions=jnp.asarray(pos, jnp.float32),
+        edge_src=jnp.asarray(np.pad(src, (0, pad)), jnp.int32),
+        edge_dst=jnp.asarray(np.pad(dst, (0, pad)), jnp.int32),
+        edge_valid=jnp.asarray(np.pad(np.ones(n, bool), (0, pad))),
+        node_valid=jnp.ones((n_nodes,), bool),
+        graph_id=jnp.asarray(gid, jnp.int32),
+        n_graphs=n_graphs,
+    )

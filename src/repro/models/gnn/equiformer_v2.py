@@ -1,0 +1,251 @@
+"""EquiformerV2 [arXiv:2306.12059]: eSCN-style SO(2) graph attention.
+
+Brief config: n_layers=12, d_hidden=128, l_max=6, m_max=2, n_heads=8,
+equivariance = SO(2)-eSCN. The core mechanism (the paper's contribution)
+is implemented faithfully: per edge, source irreps are rotated into the
+edge-aligned frame (Wigner-D, ``so3.rotation_to_z``), where the full
+O(L⁶) tensor product collapses to independent per-m SO(2) linear maps
+with |m| ≤ m_max (O(L³)); messages rotate back and aggregate under
+attention whose logits come from the rotation-invariant m=0 components.
+The S2 pointwise activation of the original is simplified to a gated
+nonlinearity (recorded in DESIGN.md §7).
+
+Per-edge rotation matrices are stored per-l (Σ(2l+1)² = 455 floats/edge
+at l_max=6, not (L+1)⁴ = 2401) and shard with the edge partition; at
+ogb_products scale that is ~440 MB/device on the production mesh.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.gnn import so3
+from repro.models.gnn.common import (
+    GraphBatch,
+    bessel_rbf,
+    cosine_cutoff,
+    edge_vectors,
+)
+from repro.models.layers import NO_RULES, ShardRules, truncated_normal
+
+
+def _dense(key, din, dout):
+    return dict(w=truncated_normal(key, (din, dout), 1.0 / np.sqrt(din), jnp.float32),
+                b=jnp.zeros((dout,), jnp.float32))
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _m_groups(l_max: int, m_max: int):
+    """Rows of the (l_max+1)² irrep vector participating per |m| ≤ m_max.
+
+    Returns dict m → (rows_pos, rows_neg); for m=0 rows_neg is None.
+    Row index of (l, m) in the concatenated layout is l² + l + m.
+    """
+    groups = {}
+    for m in range(0, m_max + 1):
+        pos = [l * l + l + m for l in range(max(m, 0), l_max + 1) if m <= l]
+        if m == 0:
+            groups[0] = (np.array(pos), None)
+        else:
+            neg = [l * l + l - m for l in range(m, l_max + 1)]
+            groups[m] = (np.array(pos), np.array(neg))
+    return groups
+
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Cfg:
+    n_layers: int = 12
+    channels: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 32
+    d_feat: int = 0
+    d_out: int = 1
+    # >1: process edges in this many chunks with streaming segment-softmax
+    # (flash-attention-style running (max, denom, acc) per node) so per-edge
+    # transients (rotations, messages) never materialize at full |E|.
+    edge_chunks: int = 1
+
+
+def init_params(key, cfg: Cfg):
+    n_layers, channels, l_max, m_max = cfg.n_layers, cfg.channels, cfg.l_max, cfg.m_max
+    n_heads, n_rbf, cutoff = cfg.n_heads, cfg.n_rbf, cfg.cutoff
+    n_species, d_feat, d_out = cfg.n_species, cfg.d_feat, cfg.d_out
+    groups = _m_groups(l_max, m_max)
+    ks = iter(jax.random.split(key, n_layers * (3 + 3 * len(groups)) + 8))
+    p = dict(layers=[])
+    if d_feat:
+        p["embed"] = _dense(next(ks), d_feat, channels)
+    else:
+        p["embed"] = dict(w=truncated_normal(next(ks), (n_species, channels),
+                                             1.0, jnp.float32))
+    for _ in range(n_layers):
+        layer = dict(radial=_dense(next(ks), n_rbf, channels),
+                     alpha=_dense(next(ks), len(groups[0][0]) * channels, n_heads),
+                     so2={}, ffn1=_dense(next(ks), channels, channels * 2),
+                     ffn2=_dense(next(ks), channels * 2, channels),
+                     gates=_dense(next(ks), channels, channels * l_max))
+        for m, (pos, neg) in groups.items():
+            n_l = len(pos)
+            sc = 1.0 / np.sqrt(n_l * channels)
+            if m == 0:
+                layer["so2"][str(m)] = dict(
+                    wr=truncated_normal(next(ks), (n_l * channels, n_l * channels),
+                                        sc, jnp.float32))
+            else:
+                layer["so2"][str(m)] = dict(
+                    wr=truncated_normal(next(ks), (n_l * channels, n_l * channels),
+                                        sc, jnp.float32),
+                    wi=truncated_normal(next(ks), (n_l * channels, n_l * channels),
+                                        sc, jnp.float32))
+        p["layers"].append(layer)
+    p["head1"] = _dense(next(ks), channels, channels)
+    p["head2"] = _dense(next(ks), channels, d_out)
+    return p
+
+
+def _equiv_norm(x, l_max):
+    """RMS norm per l-block over (m, channels)."""
+    outs = []
+    for l, (a, b) in enumerate(so3.l_slices(l_max)):
+        blk = x[:, a:b, :]
+        rms = jnp.sqrt(jnp.mean(blk * blk, axis=(1, 2), keepdims=True) + 1e-6)
+        outs.append(blk / rms)
+    return jnp.concatenate(outs, 1)
+
+
+def _so2_conv(layer, groups, x_rot, rad):
+    """Per-m SO(2) linear maps in the edge frame. x_rot [e, (L+1)², C]."""
+    e, _, C = x_rot.shape
+    out = jnp.zeros_like(x_rot)
+    for m, (pos, neg) in groups.items():
+        wp = layer["so2"][str(m)]
+        xp = (x_rot[:, pos, :] * rad[:, None, :]).reshape(e, -1)
+        if m == 0:
+            yp = xp @ wp["wr"]
+            out = out.at[:, pos, :].set(yp.reshape(e, len(pos), C))
+        else:
+            xn = (x_rot[:, neg, :] * rad[:, None, :]).reshape(e, -1)
+            yp = xp @ wp["wr"] - xn @ wp["wi"]
+            yn = xp @ wp["wi"] + xn @ wp["wr"]
+            out = out.at[:, pos, :].set(yp.reshape(e, len(pos), C))
+            out = out.at[:, neg, :].set(yn.reshape(e, len(pos), C))
+    return out
+
+
+def forward(cfg: Cfg, p, g: GraphBatch, rules: ShardRules = NO_RULES):
+    l_max, m_max, C = cfg.l_max, cfg.m_max, cfg.channels
+    H = cfg.n_heads
+    groups = _m_groups(l_max, m_max)
+    n_irr = so3.irreps_dim(l_max)
+    N = g.positions.shape[0]
+    E = g.edge_src.shape[0]
+
+    if g.node_feat is not None:
+        scal = _apply(p["embed"], g.node_feat)
+    else:
+        scal = p["embed"]["w"][g.species]
+    x = jnp.zeros((N, n_irr, C), jnp.float32).at[:, 0, :].set(scal)
+
+    _, d, unit = edge_vectors(g)
+    rbf = bessel_rbf(d, cfg.n_rbf, cfg.cutoff) * cosine_cutoff(d, cfg.cutoff)[:, None]
+    sl = so3.l_slices(l_max)
+    m0_rows = groups[0][0]
+
+    def rotate(rot, feats_e, transpose):
+        outs = []
+        for l, (a, b) in enumerate(sl):
+            blk = feats_e[:, a:b, :]
+            eq = "eba,ebc->eac" if transpose else "eab,ebc->eac"
+            outs.append(jnp.einsum(eq, rot[l], blk))
+        return jnp.concatenate(outs, 1)
+
+    def edge_messages(layer, xn, src_ids, dst_ids, valid, rbf_c, unit_c):
+        """Per-edge-chunk: rotate → SO(2) conv → rotate back → logits."""
+        e = src_ids.shape[0]
+        rot = {l: so3.rotation_to_z(l, unit_c) for l in range(l_max + 1)}
+        rad = jax.nn.silu(_apply(layer["radial"], rbf_c))     # [e, C]
+        src = rules.cons(xn[src_ids], "data", None, None)     # [e, n_irr, C]
+        x_rot = rules.cons(rotate(rot, src, transpose=False), "data", None, None)
+        msg_rot = _so2_conv(layer, groups, x_rot, rad)
+        msg = rules.cons(rotate(rot, msg_rot, transpose=True), "data", None, None)
+        inv = msg_rot[:, m0_rows, :].reshape(e, -1)
+        logits = _apply(layer["alpha"], inv)                  # [e, H]
+        logits = jnp.where(valid[:, None], logits, -1e30)
+        return msg, logits
+
+    def attention_agg(layer, xn):
+        """Segment-softmax attention over incoming edges; optionally in
+        streaming chunks (running max/denominator/accumulator per node)."""
+        nb = max(1, cfg.edge_chunks)
+        if nb == 1 or E % nb:
+            msg, logits = edge_messages(layer, xn, g.edge_src, g.edge_dst,
+                                        g.edge_valid, rbf, unit)
+            ev = g.edge_valid.astype(jnp.float32)
+            mx = jax.ops.segment_max(logits, g.edge_dst, num_segments=N)
+            w = jnp.exp(logits - mx[g.edge_dst]) * ev[:, None]
+            den = jax.ops.segment_sum(w, g.edge_dst, num_segments=N)
+            w = w / jnp.maximum(den[g.edge_dst], 1e-30)
+            mh = msg.reshape(E, n_irr, H, C // H) * w[:, None, :, None]
+            return jax.ops.segment_sum(mh.reshape(E, n_irr, C), g.edge_dst,
+                                       num_segments=N)
+
+        blk = E // nb
+        split = lambda a: a.reshape((nb, blk) + a.shape[1:])
+        xs = (split(g.edge_src), split(g.edge_dst), split(g.edge_valid),
+              split(rbf), split(unit))
+        m0 = jnp.full((N, H), -1e30, jnp.float32)
+        l0 = jnp.zeros((N, H), jnp.float32)
+        a0 = jnp.zeros((N, n_irr, H, C // H), jnp.float32)
+
+        def body(carry, chunk):
+            m, l, acc = carry
+            src_c, dst_c, val_c, rbf_c, unit_c = chunk
+            msg, logits = edge_messages(layer, xn, src_c, dst_c, val_c,
+                                        rbf_c, unit_c)
+            cm = jax.ops.segment_max(logits, dst_c, num_segments=N)
+            m_new = jnp.maximum(m, cm)
+            corr = jnp.exp(m - m_new)
+            wexp = jnp.exp(logits - m_new[dst_c]) * val_c[:, None]
+            l = l * corr + jax.ops.segment_sum(wexp, dst_c, num_segments=N)
+            mh = msg.reshape(blk, n_irr, H, C // H) * wexp[:, None, :, None]
+            acc = acc * corr[:, None, :, None] + jax.ops.segment_sum(
+                mh, dst_c, num_segments=N)
+            return (m_new, l, acc), None
+
+        xs = jax.tree.map(lambda a: rules.cons(
+            a, None, "data", *([None] * (a.ndim - 2))), xs)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l[:, None, :, None], 1e-30)
+        # zero out nodes with no incoming edges (l == 0)
+        out = out * (l[:, None, :, None] > 0)
+        return out.reshape(N, n_irr, C)
+
+    for layer in p["layers"]:
+        xn = _equiv_norm(x, l_max)
+        agg = attention_agg(layer, xn)
+        x = rules.cons(x + agg, "data", None, None)
+        # gated FFN on scalars, gates modulate l>0 blocks
+        s = x[:, 0, :]
+        h = _apply(layer["ffn2"], jax.nn.silu(_apply(layer["ffn1"], s)))
+        gates = jax.nn.sigmoid(_apply(layer["gates"], s)).reshape(N, l_max, C)
+        upd = x.at[:, 0, :].add(h)
+        for l in range(1, l_max + 1):
+            a, b = sl[l]
+            upd = upd.at[:, a:b, :].multiply(gates[:, l - 1][:, None, :])
+        x = upd
+
+    node = _apply(p["head2"], jax.nn.silu(_apply(p["head1"], x[:, 0, :])))
+    node = node * g.node_valid[:, None]
+    graph = jax.ops.segment_sum(node, g.graph_id, num_segments=g.n_graphs)
+    return node, graph

@@ -1,0 +1,153 @@
+"""NequIP [arXiv:2101.03164]: E(3)-equivariant interatomic potential.
+
+Brief config: n_layers=5, d_hidden=32 channels, l_max=2, n_rbf=8,
+cutoff=5, equivariance = E(3) tensor product. Features are irreps
+[N, C, (l_max+1)²]; each interaction layer couples node features with
+edge spherical harmonics through real Clebsch-Gordan tensor products,
+radially modulated per path (Bessel RBF → MLP), scatter-summed to
+destinations, then mixed linearly per output l with a gated
+nonlinearity (scalars: silu; l>0: sigmoid-gated by dedicated scalars).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.gnn import so3
+from repro.models.gnn.common import (
+    GraphBatch,
+    bessel_rbf,
+    cosine_cutoff,
+    edge_vectors,
+    segment_mp,
+)
+from repro.models.layers import NO_RULES, ShardRules, truncated_normal
+
+
+def tp_paths(l_max: int):
+    """All coupling paths (l1, l2, l3) with l1,l3 ≤ l_max, l2 ≤ l_max."""
+    paths = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l_max, l1 + l2) + 1):
+                paths.append((l1, l2, l3))
+    return paths
+
+
+def _dense(key, din, dout):
+    return dict(w=truncated_normal(key, (din, dout), 1.0 / np.sqrt(din), jnp.float32),
+                b=jnp.zeros((dout,), jnp.float32))
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Cfg:
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 32
+    d_feat: int = 0
+    d_out: int = 1
+    radial_hidden: int = 32
+
+
+def init_params(key, cfg: Cfg):
+    n_layers, channels, l_max = cfg.n_layers, cfg.channels, cfg.l_max
+    n_rbf, cutoff, radial_hidden = cfg.n_rbf, cfg.cutoff, cfg.radial_hidden
+    n_species, d_feat, d_out = cfg.n_species, cfg.d_feat, cfg.d_out
+    paths = tp_paths(l_max)
+    ks = iter(jax.random.split(key, n_layers * (4 + len(paths)) + 8))
+    p = dict(layers=[])
+    if d_feat:
+        p["embed"] = _dense(next(ks), d_feat, channels)
+    else:
+        p["embed"] = dict(w=truncated_normal(next(ks), (n_species, channels),
+                                             1.0, jnp.float32))
+    for _ in range(n_layers):
+        layer = dict(
+            radial1=_dense(next(ks), n_rbf, radial_hidden),
+            radial2=_dense(next(ks), radial_hidden, len(paths) * channels),
+            gates=_dense(next(ks), channels, channels * l_max),
+            mix={}, self_mix={},
+        )
+        for l3 in range(l_max + 1):
+            n_in = sum(1 for (a, b, c) in paths if c == l3)
+            layer["mix"][str(l3)] = truncated_normal(
+                next(ks), (n_in * channels, channels),
+                1.0 / np.sqrt(max(1, n_in * channels)), jnp.float32)
+            layer["self_mix"][str(l3)] = truncated_normal(
+                next(ks), (channels, channels), 1.0 / np.sqrt(channels), jnp.float32)
+        p["layers"].append(layer)
+    p["head1"] = _dense(next(ks), channels, channels)
+    p["head2"] = _dense(next(ks), channels, d_out)
+    return p
+
+
+def _init_feats(p, g: GraphBatch, l_max: int, channels: int):
+    if g.node_feat is not None:
+        scal = _apply(p["embed"], g.node_feat)
+    else:
+        scal = p["embed"]["w"][g.species]
+    n = g.positions.shape[0]
+    feats = {0: scal[:, :, None]}
+    for l in range(1, l_max + 1):
+        feats[l] = jnp.zeros((n, channels, 2 * l + 1), jnp.float32)
+    return feats
+
+
+def forward(cfg: Cfg, p, g: GraphBatch, rules: ShardRules = NO_RULES):
+    l_max, n_rbf, cutoff = cfg.l_max, cfg.n_rbf, cfg.cutoff
+    paths = tp_paths(l_max)
+    channels = cfg.channels
+    feats = _init_feats(p, g, l_max, channels)
+    N = g.positions.shape[0]
+
+    _, d, unit = edge_vectors(g)
+    rbf = bessel_rbf(d, n_rbf, cutoff) * cosine_cutoff(d, cutoff)[:, None]
+    sh = so3.real_sph_harm(l_max, unit)                       # [E, (L+1)²]
+    sl = so3.l_slices(l_max)
+    sh_l = {l: sh[:, a:b] for l, (a, b) in enumerate(sl)}
+    ev = g.edge_valid.astype(jnp.float32)
+
+    for layer in p["layers"]:
+        rad = jax.nn.silu(_apply(layer["radial1"], rbf))
+        rad = _apply(layer["radial2"], rad).reshape(-1, len(paths), channels)
+        # tensor-product messages per path, gathered at source
+        agg = {l3: [] for l3 in range(l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            cg = jnp.asarray(so3.cg_real(l1, l2, l3), jnp.float32)
+            src = feats[l1][g.edge_src]                       # [E, C, 2l1+1]
+            msg = jnp.einsum("eci,ej,ijk->eck", src, sh_l[l2], cg)
+            msg = msg * (rad[:, pi] * ev[:, None])[:, :, None]
+            msg = rules.cons(msg, "data", None, None)
+            agg[l3].append(rules.cons(segment_mp(msg, g.edge_dst, N),
+                                      "data", None, None))
+        # per-l linear mix over contributing paths + self connection
+        new = {}
+        for l3 in range(l_max + 1):
+            stacked = jnp.concatenate(agg[l3], 1)             # [N, n_in·C, 2l3+1]
+            mixed = jnp.einsum("nim,ic->ncm", stacked, layer["mix"][str(l3)])
+            self_c = jnp.einsum("ncm,cd->ndm", feats[l3], layer["self_mix"][str(l3)])
+            new[l3] = mixed + self_c
+        # gated nonlinearity
+        scal = new[0][:, :, 0]
+        gates = jax.nn.sigmoid(_apply(layer["gates"], scal))
+        gates = gates.reshape(N, channels, l_max) if l_max else None
+        out = {0: jax.nn.silu(scal)[:, :, None]}
+        for l in range(1, l_max + 1):
+            out[l] = new[l] * gates[:, :, l - 1][:, :, None]
+        feats = out
+
+    node = _apply(p["head2"], jax.nn.silu(_apply(p["head1"], feats[0][:, :, 0])))
+    node = node * g.node_valid[:, None]
+    graph = jax.ops.segment_sum(node, g.graph_id, num_segments=g.n_graphs)
+    return node, graph

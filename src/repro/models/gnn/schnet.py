@@ -1,0 +1,93 @@
+"""SchNet [arXiv:1706.08566]: continuous-filter convolutions.
+
+Brief config: n_interactions=3, d_hidden=64, rbf=300, cutoff=10.
+Node inputs: species embedding (molecular) or linear projection of
+``node_feat`` (citation-style shapes; DESIGN.md §4 adaptation note).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (
+    GraphBatch,
+    cosine_cutoff,
+    edge_vectors,
+    gaussian_rbf,
+    segment_mp,
+    shifted_softplus,
+)
+from repro.models.layers import NO_RULES, ShardRules, truncated_normal
+
+
+def _dense(key, din, dout):
+    return dict(w=truncated_normal(key, (din, dout), 1.0 / np.sqrt(din), jnp.float32),
+                b=jnp.zeros((dout,), jnp.float32))
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Cfg:
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_species: int = 32
+    d_feat: int = 0
+    d_out: int = 1
+
+
+def init_params(key, cfg: Cfg):
+    n_interactions, d_hidden, n_rbf = cfg.n_interactions, cfg.d_hidden, cfg.n_rbf
+    n_species, d_feat, d_out = cfg.n_species, cfg.d_feat, cfg.d_out
+    ks = iter(jax.random.split(key, 6 * n_interactions + 6))
+    p = dict(blocks=[])
+    if d_feat:
+        p["embed"] = _dense(next(ks), d_feat, d_hidden)
+    else:
+        p["embed"] = dict(w=truncated_normal(next(ks), (n_species, d_hidden),
+                                             1.0, jnp.float32))
+    for _ in range(n_interactions):
+        p["blocks"].append(dict(
+            filt1=_dense(next(ks), n_rbf, d_hidden),
+            filt2=_dense(next(ks), d_hidden, d_hidden),
+            w_in=_dense(next(ks), d_hidden, d_hidden),
+            w_out1=_dense(next(ks), d_hidden, d_hidden),
+            w_out2=_dense(next(ks), d_hidden, d_hidden),
+        ))
+    p["head1"] = _dense(next(ks), d_hidden, d_hidden // 2)
+    p["head2"] = _dense(next(ks), d_hidden // 2, d_out)
+    return p
+
+
+def forward(cfg: Cfg, p, g: GraphBatch, rules: ShardRules = NO_RULES):
+    """→ (node_out [N, d_out], graph_out [n_graphs, d_out])."""
+    if g.node_feat is not None:
+        h = _apply(p["embed"], g.node_feat)
+    else:
+        h = p["embed"]["w"][g.species]
+    _, d, _ = edge_vectors(g)
+    rbf = gaussian_rbf(d, cfg.n_rbf, cfg.cutoff)
+    env = cosine_cutoff(d, cfg.cutoff)
+
+    h = rules.cons(h, "data", None)
+    for blk in p["blocks"]:
+        w = _apply(blk["filt2"], shifted_softplus(_apply(blk["filt1"], rbf)))
+        msg = _apply(blk["w_in"], h)[g.edge_src] * w * env[:, None]
+        msg = rules.cons(msg, "data", None)
+        agg = segment_mp(msg, g.edge_dst, h.shape[0], g.edge_valid)
+        agg = rules.cons(agg, "data", None)
+        v = _apply(blk["w_out2"], shifted_softplus(_apply(blk["w_out1"], agg)))
+        h = h + v
+
+    node = _apply(p["head2"], shifted_softplus(_apply(p["head1"], h)))
+    node = node * g.node_valid[:, None]
+    graph = jax.ops.segment_sum(node, g.graph_id, num_segments=g.n_graphs)
+    return node, graph

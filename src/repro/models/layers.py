@@ -1,0 +1,141 @@
+"""Shared neural layers: norms, RoPE, chunked (flash-style) attention.
+
+Attention never materializes the [S, S] score matrix: the KV axis is
+processed in blocks under ``lax.scan`` with running (max, denom, acc)
+statistics in f32 — the IO-aware streaming form that keeps the compiled
+HLO's memory term at block granularity (critical for the 32k prefill
+cells; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class ShardRules:
+    """Logical→mesh axis mapping; ``None`` disables constraints (CPU tests)."""
+
+    data: tuple | str | None = None      # batch-like axes ('pod','data') multi-pod
+    model: str | None = None
+    dm: tuple | None = None              # composite (data…, model) megatokens
+    active: bool = False
+
+    def cons(self, x, *dims):
+        if not self.active:
+            return x
+        spec = P(*[getattr(self, d) if d else None for d in dims])
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+NO_RULES = ShardRules()
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x, pos, theta: float):
+    """x [B, S, H, dh]; pos [B, S] int32 — LLaMA-style half rotation."""
+    dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(dh, theta))
+    ang = pos.astype(jnp.float32)[..., None] * inv           # [B,S,dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, kv_valid=None, chunk: int = 1024,
+                      causal: bool = True):
+    """Streaming softmax attention (GQA via repeat-KV).
+
+    q [B,Sq,H,dh]; k,v [B,Skv,Hkv,dh]; q_pos [B,Sq]; kv_pos [B,Skv].
+    Returns [B,Sq,H,dh]. Skv is padded internally to a chunk multiple.
+
+    KV heads are *repeated* to H rather than grouping q into a
+    [.., Hkv, G, ..] 5-D form: a reshape splitting the head axis breaks
+    GSPMD head sharding whenever Hkv < the model-axis size (measured as a
+    fully replicated 17 GB score tensor on kimi-k2 before the change —
+    EXPERIMENTS §Perf log).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    scale = 1.0 / np.sqrt(dh)
+
+    if Skv > chunk and Skv % chunk:
+        pad = (-Skv) % chunk
+        if kv_valid is None:
+            kv_valid = jnp.ones((B, Skv), bool)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+        Skv += pad
+
+    if Skv <= chunk:
+        s = jnp.einsum("bqhd,bchd->bqhc", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((B, 1, 1, Skv), bool)
+        if causal:
+            mask = kv_pos[:, None, None, :] <= q_pos[:, :, None, None]
+        if kv_valid is not None:
+            mask = mask & kv_valid[:, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bqhc,bchd->bqhd", p.astype(v.dtype), v)
+
+    nb = Skv // chunk
+    ks = jnp.moveaxis(k.reshape(B, nb, chunk, H, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, chunk, H, dh), 1, 0)
+    ps = jnp.moveaxis(kv_pos.reshape(B, nb, chunk), 1, 0)
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), bool)
+    ms = jnp.moveaxis(kv_valid.reshape(B, nb, chunk), 1, 0)
+
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb, vb_mask = blk
+        s = jnp.einsum("bqhd,bchd->bqhc", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = vb_mask[:, None, None, :]
+        if causal:
+            mask = mask & (pb[:, None, None, :] <= q_pos[:, :, None, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bqhc,bchd->bqhd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps, ms))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)

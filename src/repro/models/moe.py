@@ -1,0 +1,125 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dense dispatch.
+
+Baseline follows the GShard/Switch dense dispatch-einsum form (grouped
+tokens × one-hot dispatch tensors) because it is deterministic-shape and
+MXU-friendly; experts shard over the ``model`` axis (EP), so the
+dispatch/combine einsums carry the token→expert all-to-all. The dispatch
+tensor is the known memory hog at kimi-k2 scale — ``group_size`` and
+``moe_group_chunks`` bound it, and the §Perf hillclimb replaces it with a
+sort-based dispatch where profitable (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.models.layers import ShardRules, truncated_normal
+
+
+def init_moe_params(key, d_model: int, spec: MoESpec, n_layers: int, dtype):
+    ks = jax.random.split(key, 4)
+    E, F = spec.n_experts, spec.d_ff_expert
+    sc_in = 1.0 / np.sqrt(d_model)
+    sc_out = 1.0 / np.sqrt(F)
+    shape = (n_layers, E, d_model, F)
+    return dict(
+        router=truncated_normal(ks[0], (n_layers, d_model, E), sc_in, jnp.float32),
+        wg=truncated_normal(ks[1], shape, sc_in, dtype),
+        wu=truncated_normal(ks[2], shape, sc_in, dtype),
+        wd=truncated_normal(ks[3], (n_layers, E, F, d_model), sc_out, dtype),
+    )
+
+
+def moe_param_specs(P):
+    # experts over model (EP) + FSDP over data on d_model (see
+    # transformer.param_specs — replication does not fit at kimi scale)
+    return dict(
+        router=P(None, "data", None),
+        wg=P(None, "model", "data", None),
+        wu=P(None, "model", "data", None),
+        wd=P(None, "model", None, "data"),
+    )
+
+
+def _capacity(gs: int, spec: MoESpec) -> int:
+    c = int(np.ceil(gs * spec.top_k / spec.n_experts * spec.capacity_factor))
+    return max(4, int(np.ceil(c / 4)) * 4)
+
+
+def moe_layer(x, p, spec: MoESpec, rules: ShardRules):
+    """x [T, D] → (y [T, D], aux losses dict). T % group_size == 0."""
+    T, D = x.shape
+    gs = min(spec.group_size, T)
+    G = T // gs
+    E, k = spec.n_experts, spec.top_k
+    C = _capacity(gs, spec)
+    # groups are (batch, seq-block) megatokens: with group_size = S/|model|
+    # the reshape from sequence-parallel [B,S,D] is resharding-free and the
+    # group axis carries the composite (data, model) sharding; the
+    # token→expert all-to-all then happens at the dispatch einsum below
+    xg = x.reshape(G, gs, D)
+    xg = rules.cons(xg, "dm", None, None)
+
+    # router in mixed precision: bf16 operands, f32 accumulation — a full
+    # f32 upcast of xg materializes the whole token stream (30 GB/device at
+    # kimi scale; EXPERIMENTS §Perf log)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # [G,gs,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue
+    oh = jax.nn.one_hot(eidx, E, dtype=jnp.int32)            # [G,gs,k,E]
+    flat = oh.reshape(G, gs * k, E)
+    pos = jnp.cumsum(flat, 1) * flat - 1                     # [G,gs*k,E]
+    pos = pos.reshape(G, gs, k, E).max(-1)                   # [G,gs,k]
+    keep = (pos >= 0) & (pos < C)
+
+    def chunk_fn(args):
+        xg_c, oh_c, pos_c, keep_c, gate_c = args
+        xg_c = rules.cons(xg_c, "dm", None, None)   # lax.map drops constraints
+        dt = xg_c.dtype
+        # dispatch [g,t,E,C] built per top-k slot (k is small and static)
+        dis = None
+        comb = None
+        for kk in range(k):
+            d_k = (oh_c[:, :, kk, :, None]
+                   * jax.nn.one_hot(pos_c[:, :, kk], C, dtype=jnp.int32)[:, :, None, :]
+                   * keep_c[:, :, kk, None, None])
+            dis = d_k if dis is None else dis + d_k
+            comb = (d_k * gate_c[:, :, kk, None, None] if comb is None
+                    else comb + d_k * gate_c[:, :, kk, None, None])
+        dis = dis.astype(dt)
+        comb = comb.astype(dt)
+        xe = jnp.einsum("gtec,gtd->gecd", dis, xg_c)         # all-to-all →EP
+        xe = rules.cons(xe, "data", "model", None, None)
+        h = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+        h = rules.cons(h, "data", "model", None, None)
+        u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+        h = jax.nn.silu(h) * u
+        ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+        ye = rules.cons(ye, "data", "model", None, None)
+        y = jnp.einsum("gtec,gecd->gtd", comb, ye,
+                       preferred_element_type=jnp.float32)
+        return rules.cons(y.astype(dt), "dm", None, None)
+
+    nchunk = min(getattr(spec, "group_chunks", 1) or 1, G)
+    if nchunk > 1 and G % nchunk == 0:
+        split = lambda a: a.reshape((nchunk, G // nchunk) + a.shape[1:])
+        y = jax.lax.map(chunk_fn, (split(xg), split(oh), split(pos),
+                                   split(keep), split(gate)))
+        y = y.reshape(G, gs, D)
+    else:
+        y = chunk_fn((xg, oh, pos, keep, gate))
+
+    # aux losses (Switch §4): load balance + router z-loss
+    me = probs.mean((0, 1))                                   # [E]
+    ce = (oh.sum(2).astype(jnp.float32)).mean((0, 1))         # assignment frac
+    aux = dict(
+        load_balance=E * jnp.sum(me * ce) * spec.aux_loss,
+        router_z=jnp.mean(jax.nn.logsumexp(logits, -1) ** 2) * spec.router_z_loss,
+    )
+    return y.reshape(T, D), aux

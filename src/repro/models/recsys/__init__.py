@@ -1,0 +1,1 @@
+# RecSys: sharded embedding tables (the hot path) + BST ranking model.

@@ -1,0 +1,46 @@
+"""Sharded embedding lookup / EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag``; per the brief the bag is built
+from ``jnp.take`` + ``jax.ops.segment_sum`` — this *is* part of the
+system, not a stub. Tables row-shard over the ``model`` axis
+(P('model', None)); the gather's cross-shard traffic is the classic
+distributed-embedding all-to-all and shows up in the roofline's
+collective term.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+
+def init_table(key, n_rows: int, dim: int, dtype=jnp.float32):
+    return truncated_normal(key, (n_rows, dim), 1.0 / np.sqrt(dim), dtype)
+
+
+def embedding_lookup(table, ids):
+    """Plain row gather: ids [...]→ [..., dim]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, ids, valid=None, mode: str = "mean"):
+    """Multi-hot pooled lookup: ids [B, K] → [B, dim].
+
+    Flattens to a single gather then reduces by bag via segment_sum —
+    the jnp.take + segment_sum formulation the brief calls for. ``valid``
+    masks ragged bags (padded id slots).
+    """
+    B, K = ids.shape
+    flat = jnp.take(table, ids.reshape(-1), axis=0)          # [B·K, dim]
+    if valid is not None:
+        flat = flat * valid.reshape(-1, 1).astype(flat.dtype)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), K)
+    out = jax.ops.segment_sum(flat, seg, num_segments=B)
+    if mode == "sum":
+        return out
+    if valid is None:
+        return out / K
+    cnt = valid.sum(-1, keepdims=True).astype(out.dtype)
+    return out / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,122 @@
+"""Roofline terms from compiled dry-run artifacts (brief: ROOFLINE ANALYSIS).
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` reports the *per-device* SPMD module, so its
+flops/bytes divide by peak directly. Collective bytes are not in
+cost_analysis: we parse the optimized (post-partitioning, per-device
+shapes) HLO text and sum the payload bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, applying a
+ring factor 2 to all-reduce (reduce-scatter + all-gather phases).
+
+Hardware model (TPU v5e-class, brief constants): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # B/s
+    link_bw: float = 50e9            # B/s per ICI link
+    hbm_bytes: float = 16e9          # capacity
+
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind payload bytes (per device), from optimized HLO text."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        counts[kind] += 1
+    wire = sum(v * (2 if k == "all-reduce" else 1) for k, v in out.items())
+    return dict(per_kind=out, counts=counts, wire_bytes=wire)
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops_total: float,
+                     hw: HW = HW()) -> dict:
+    """Roofline terms from one compiled executable (per-device module)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+
+    mem = compiled.memory_analysis()
+    mem_info = dict(
+        argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        output_bytes=getattr(mem, "output_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        alias_bytes=getattr(mem, "alias_size_in_bytes", 0),
+        code_bytes=getattr(mem, "generated_code_size_in_bytes", 0),
+    )
+    peak_dev = (mem_info["argument_bytes"] + mem_info["output_bytes"]
+                + mem_info["temp_bytes"] - mem_info["alias_bytes"])
+
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = bytes_dev / hw.hbm_bw
+    t_coll = coll["wire_bytes"] / hw.link_bw
+    terms = dict(compute_s=t_compute, memory_s=t_memory, collective_s=t_coll)
+    dominant = max(terms, key=terms.get)
+    hlo_flops_total = flops_dev * n_devices
+    return dict(
+        n_devices=n_devices,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collectives=coll,
+        memory=mem_info,
+        peak_device_bytes=peak_dev,
+        fits_hbm=bool(peak_dev <= hw.hbm_bytes),
+        terms=terms,
+        dominant=dominant,
+        bound_time_s=max(terms.values()),
+        model_flops_total=model_flops_total,
+        hlo_flops_total=hlo_flops_total,
+        useful_flops_ratio=(model_flops_total / hlo_flops_total
+                            if hlo_flops_total else 0.0),
+        roofline_fraction=(model_flops_total / n_devices / hw.peak_flops
+                           / max(terms.values())
+                           if max(terms.values()) > 0 else 0.0),
+    )

@@ -1,0 +1,4 @@
+from repro.train.optimizer import adamw, adafactor, sgd_momentum
+from repro.train.trainer import TrainState, make_train_step
+
+__all__ = ["adamw", "adafactor", "sgd_momentum", "TrainState", "make_train_step"]

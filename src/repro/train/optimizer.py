@@ -1,0 +1,169 @@
+"""Shard-aware optimizers (optax-style pairs, no external deps).
+
+AdamW keeps f32 moments (12 B/param — fine ≤ ~100 B params on the
+production mesh). Adafactor factors the second moment (row/col vectors)
+— the deliberate choice for the 400 B / 1 T-param configs where Adam
+state cannot fit 16 GB HBM × 256 (DESIGN.md §4). Optimizer state inherits
+the parameter PartitionSpecs leaf-for-leaf (vectors reduce along the
+factored dim), so state shards wherever params shard.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable      # params -> state
+    update: callable    # (grads, state, params) -> (new_params, new_state)
+    state_specs: callable  # param_specs -> state specs (same tree shapes)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: float | None = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return dict(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, dict(step=step, m=new_m, v=new_v)
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        return dict(step=P(), m=param_specs, v=param_specs)
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern) with factored 2nd moment, no momentum."""
+
+    # the stats tree is deeper than the param tree (a dict per param leaf),
+    # so state is kept as a flat list aligned with tree_flatten(params).
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        flat, _ = jax.tree.flatten(params)
+        stats = []
+        for p in flat:
+            if _factored(p):
+                stats.append(dict(vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                                  vc=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                               jnp.float32)))
+            else:
+                stats.append(dict(v=jnp.zeros(p.shape, jnp.float32)))
+        return dict(step=jnp.zeros((), jnp.int32), stats=stats)
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+        p_flat, treedef = jax.tree.flatten(params)
+        g_flat = treedef.flatten_up_to(grads)
+        new_p, new_s = [], []
+        for g, s, p in zip(g_flat, state["stats"], p_flat):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., :, None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s.append(dict(vr=vr, vc=vc))
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s.append(dict(v=v))
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            u = u + weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+        return treedef.unflatten(new_p), dict(step=step, stats=new_s)
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        flat, _ = jax.tree.flatten(
+            param_specs, is_leaf=lambda x: isinstance(x, P) or x is None)
+        stats = []
+        for spec in flat:
+            parts = tuple(spec) if spec is not None else ()
+            if len(parts) >= 2:
+                stats.append(dict(vr=P(*parts[:-1]),
+                                  vc=P(*(parts[:-2] + parts[-1:]))))
+            else:
+                stats.append(dict(v=spec))
+        return dict(step=P(), stats=stats)
+
+    return Optimizer(init, update, state_specs)
+
+
+def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return dict(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, dict(step=state["step"] + 1, m=new_m)
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        return dict(step=P(), m=param_specs)
+
+    return Optimizer(init, update, state_specs)
+
+
+def global_norm(tree):
+    sq = jax.tree.reduce(
+        lambda a, x: a + jnp.sum(x.astype(jnp.float32) ** 2), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,79 @@
+"""Small shared utilities: hashing, padding, integer helpers.
+
+Device-side code uses int32 ids and uint32 hashes throughout (x64 stays
+disabled). The splitmix-style mixer below is the deterministic tie-break
+``hash(u)`` from the paper (Sec. 3), identical on host (numpy) and device
+(jnp) so DODGr orientation agrees everywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "splitmix32",
+    "splitmix32_np",
+    "key_less",
+    "key_less_eq",
+    "ceil_div",
+    "pad_to",
+    "pad_axis_to",
+]
+
+
+def _mix(x, xp):
+    # xor-shift / multiply mixer (finalizer of MurmurHash3 / splitmix).
+    x = x.astype(xp.uint32)
+    x = (x ^ (x >> xp.uint32(16))) * xp.uint32(0x7FEB352D)
+    x = (x ^ (x >> xp.uint32(15))) * xp.uint32(0x846CA68B)
+    x = x ^ (x >> xp.uint32(16))
+    return x
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic 32-bit mixer (device)."""
+    return _mix(x, jnp)
+
+
+def splitmix32_np(x: np.ndarray) -> np.ndarray:
+    """Deterministic 32-bit mixer (host); bit-identical to :func:`splitmix32`."""
+    with np.errstate(over="ignore"):
+        return _mix(np.asarray(x), np)
+
+
+def key_less(d1, h1, i1, d2, h2, i2):
+    """Lexicographic `(degree, hash, id) <` — the paper's ``<₊`` total order.
+
+    The id component makes the order total even under hash collisions.
+    Works on numpy or jnp arrays (broadcasting).
+    """
+    return (
+        (d1 < d2)
+        | ((d1 == d2) & (h1 < h2))
+        | ((d1 == d2) & (h1 == h2) & (i1 < i2))
+    )
+
+
+def key_less_eq(d1, h1, i1, d2, h2, i2):
+    return key_less(d1, h1, i1, d2, h2, i2) | ((d1 == d2) & (h1 == h2) & (i1 == i2))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad 1-D array to length ``n`` with ``fill``."""
+    if x.shape[0] > n:
+        raise ValueError(f"cannot pad length {x.shape[0]} down to {n}")
+    out = np.full((n,) + x.shape[1:], fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+def pad_axis_to(x: np.ndarray, axis: int, n: int, fill=0) -> np.ndarray:
+    if x.shape[axis] > n:
+        raise ValueError(f"cannot pad axis {axis} of {x.shape} to {n}")
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - x.shape[axis])
+    return np.pad(x, pad, constant_values=fill)

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.graphs import generators
+from repro.graphs.csr import HostGraph, MetaSpec
+from repro.graphs.partition import owner_of, local_of, global_of
+from repro.utils import splitmix32, splitmix32_np
+
+
+def test_partition_roundtrip():
+    v = np.arange(1000)
+    for S in (1, 3, 8, 256):
+        o, l = owner_of(v, S), local_of(v, S)
+        assert (global_of(o, l, S) == v).all()
+        assert (o < S).all()
+
+
+def test_hash_host_device_agree():
+    x = np.arange(4096, dtype=np.uint32)
+    assert (np.asarray(splitmix32(x)) == splitmix32_np(x)).all()
+
+
+def test_from_edges_dedup_and_loops():
+    g = HostGraph.from_edges(5, [0, 1, 1, 2, 3, 3], [1, 0, 2, 1, 3, 4])
+    # (0,1) deduped with (1,0); (1,2) with (2,1); (3,3) loop dropped
+    assert g.m == 3
+    assert set(zip(g.src.tolist(), g.dst.tolist())) == {(0, 1), (1, 2), (3, 4)}
+
+
+def test_from_edges_keeps_earliest_timestamp():
+    spec = MetaSpec(e_float=("ts",))
+    ts = np.array([[5.0], [1.0], [9.0]], np.float32)
+    g = HostGraph.from_edges(3, [0, 1, 0], [1, 0, 1], spec=spec,
+                             emeta_f=ts, dedup_keep="min_float0")
+    assert g.m == 1
+    assert g.emeta_f[0, 0] == 1.0
+
+
+def test_clique_counts():
+    g = generators.clique(6)
+    assert g.m == 15
+    assert (g.degrees() == 5).all()
+
+
+def test_rmat_shape_and_determinism():
+    g1 = generators.rmat(6, 4, seed=7)
+    g2 = generators.rmat(6, 4, seed=7)
+    assert g1.n == 64
+    assert (g1.src == g2.src).all() and (g1.dst == g2.dst).all()
+    assert g1.m > 0
+
+
+def test_temporal_social_metadata():
+    g = generators.temporal_social(100, 500, seed=0)
+    assert g.spec.e_float == ("ts",)
+    assert g.spec.v_int == ("label",)
+    assert g.emeta_f.shape == (g.m, 1)
+    assert (g.emeta_f[:, 0] >= 0).all()
+
+
+def test_with_degree_meta():
+    g = generators.clique(5).with_degree_meta()
+    assert g.spec.v_int[-1] == "degree"
+    assert (g.vmeta_i[:, -1] == 4).all()

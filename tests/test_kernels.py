@@ -1,0 +1,165 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp/NumPy oracles,
+with shape sweeps and hypothesis property tests."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.hist.ops import hist_add
+from repro.kernels.hist.ref import hist_add_ref
+from repro.kernels.intersect.ops import intersect
+from repro.kernels.intersect.ref import intersect_numpy, intersect_ref
+from repro.kernels.wedge_check.ops import wedge_check
+from repro.kernels.wedge_check.ref import lower_bound_numpy, lower_bound_ref
+
+
+def _sorted_keys(rng, n):
+    """Random (d, h, id) keys sorted by the total order."""
+    d = rng.integers(0, 8, n).astype(np.int32)
+    h = rng.integers(0, 1 << 16, n).astype(np.uint32)
+    i = rng.permutation(n).astype(np.int32)
+    order = np.lexsort((i, h, d))
+    return d[order], h[order], i[order]
+
+
+# ---------------------------------------------------------------------------
+# wedge_check
+
+
+@pytest.mark.parametrize("e_cap,nq,bq", [(64, 32, 8), (256, 1000, 128),
+                                         (1024, 4096, 1024), (8, 3, 8)])
+def test_wedge_check_vs_oracles(e_cap, nq, bq):
+    rng = np.random.default_rng(e_cap + nq)
+    kd, kh, ki = _sorted_keys(rng, e_cap)
+    lo = rng.integers(0, e_cap, nq).astype(np.int32)
+    hi = (lo + rng.integers(0, e_cap, nq)).clip(0, e_cap).astype(np.int32)
+    qd = rng.integers(0, 8, nq).astype(np.int32)
+    qh = rng.integers(0, 1 << 16, nq).astype(np.uint32)
+    qi = rng.integers(0, e_cap, nq).astype(np.int32)
+    want = lower_bound_numpy(kd, kh, ki, lo, hi, qd, qh, qi)
+    got_ref = np.asarray(lower_bound_ref(*map(jnp.asarray, (kd, kh, ki, lo, hi, qd, qh, qi))))
+    got_pl = np.asarray(wedge_check(*map(jnp.asarray, (kd, kh, ki, lo, hi, qd, qh, qi)),
+                                    bq=bq, interpret=True))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_wedge_check_property(e_cap, nq, seed):
+    """Property: result is the true lower bound — all keys below are <, key at
+    position (if in range) is ≥."""
+    rng = np.random.default_rng(seed)
+    kd, kh, ki = _sorted_keys(rng, e_cap)
+    lo = np.zeros(nq, np.int32)
+    hi = np.full(nq, e_cap, np.int32)
+    qd = rng.integers(0, 8, nq).astype(np.int32)
+    qh = rng.integers(0, 1 << 16, nq).astype(np.uint32)
+    qi = rng.integers(0, e_cap, nq).astype(np.int32)
+    pos = np.asarray(wedge_check(*map(jnp.asarray, (kd, kh, ki, lo, hi, qd, qh, qi)),
+                                 bq=64, interpret=True))
+    keys = list(zip(kd.tolist(), kh.tolist(), ki.tolist()))
+    for b in range(nq):
+        key = (int(qd[b]), int(qh[b]), int(qi[b]))
+        p = int(pos[b])
+        assert all(k < key for k in keys[:p])
+        if p < e_cap:
+            assert keys[p] >= key
+
+
+# ---------------------------------------------------------------------------
+# intersect
+
+
+@pytest.mark.parametrize("B,L,bb", [(4, 16, 8), (64, 128, 32), (100, 64, 128),
+                                    (128, 256, 128)])
+def test_intersect_vs_oracles(B, L, bb):
+    rng = np.random.default_rng(B * L)
+    rows = [_sorted_keys(rng, L) for _ in range(B)]
+    rd = np.stack([r[0] for r in rows])
+    rh = np.stack([r[1] for r in rows])
+    ri = np.stack([r[2] for r in rows])
+    ln = rng.integers(0, L + 1, B).astype(np.int32)
+    qd = rng.integers(0, 8, (B, L)).astype(np.int32)
+    qh = rng.integers(0, 1 << 16, (B, L)).astype(np.uint32)
+    qi = rng.integers(0, L, (B, L)).astype(np.int32)
+    want = intersect_numpy(rd, rh, ri, ln, qd, qh, qi)
+    got_ref = np.asarray(intersect_ref(*map(jnp.asarray, (rd, rh, ri, ln, qd, qh, qi))))
+    got_pl = np.asarray(intersect(*map(jnp.asarray, (rd, rh, ri, ln, qd, qh, qi)),
+                                  bb=bb, interpret=True))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+def test_intersect_finds_common_elements():
+    """End-to-end semantic check: hits == set intersection."""
+    rng = np.random.default_rng(0)
+    L = 32
+    # shared key space so intersections are non-trivial
+    d = np.zeros(64, np.int32)
+    h = np.arange(64, dtype=np.uint32)
+    ids = np.arange(64, dtype=np.int32)
+    a_idx = np.sort(rng.choice(64, L, replace=False))
+    b_idx = np.sort(rng.choice(64, L, replace=False))
+    rd, rh, ri = d[a_idx][None], h[a_idx][None], ids[a_idx][None]
+    qd, qh, qi = d[b_idx][None], h[b_idx][None], ids[b_idx][None]
+    ln = np.array([L], np.int32)
+    pos = np.asarray(intersect(*map(jnp.asarray, (rd, rh, ri, ln, qd, qh, qi)),
+                               interpret=True))[0]
+    hits = {int(qi[0, k]) for k in range(L)
+            if pos[k] < L and ri[0, pos[k]] == qi[0, k]}
+    assert hits == set(a_idx) & set(b_idx)
+
+
+# ---------------------------------------------------------------------------
+# hist
+
+
+@pytest.mark.parametrize("B,cap,bb,ct", [(32, 64, 8, 16), (1000, 512, 256, 512),
+                                         (4096, 4096, 1024, 512), (5, 8, 8, 8)])
+def test_hist_vs_ref(B, cap, bb, ct):
+    rng = np.random.default_rng(B + cap)
+    slots = rng.integers(0, cap, B).astype(np.int32)
+    amt = rng.integers(0, 5, B).astype(np.int32)
+    want = np.asarray(hist_add_ref(jnp.asarray(slots), jnp.asarray(amt), cap))
+    got = np.asarray(hist_add(jnp.asarray(slots), jnp.asarray(amt), cap,
+                              bb=bb, cap_tile=ct, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == amt.sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.sampled_from([8, 64, 256]), st.integers(0, 2**31 - 1))
+def test_hist_property_mass_conservation(B, cap, seed):
+    rng = np.random.default_rng(seed)
+    slots = rng.integers(0, cap, B).astype(np.int32)
+    amt = rng.integers(0, 7, B).astype(np.int32)
+    got = np.asarray(hist_add(jnp.asarray(slots), jnp.asarray(amt), cap,
+                              bb=64, cap_tile=8, interpret=True))
+    assert got.sum() == amt.sum()
+    want = np.bincount(slots, weights=amt, minlength=cap).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# engine × kernel integration: the engine produces identical results with
+# use_pallas on and off.
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_engine_with_pallas_kernels(mode):
+    from repro.core.dodgr import shard_dodgr
+    from repro.core.engine import survey_push_only, survey_push_pull
+    from repro.core.pushpull import plan_engine
+    from repro.core.ref import count_triangles_ref
+    from repro.core.surveys import TriangleCount
+    from repro.graphs import generators
+
+    g = generators.rmat(6, 8, seed=11)
+    t_ref = count_triangles_ref(g)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode=mode, push_cap=64, pull_q_cap=4,
+                         use_pallas=True)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    res, st = run(gr, TriangleCount(), cfg)
+    assert res == t_ref

@@ -1,0 +1,114 @@
+"""GNN models: shape/NaN smoke + physics invariance properties."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common, dimenet, equiformer_v2, nequip, schnet
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return common.radius_graph_batch(jax.random.PRNGKey(0), n_nodes=24,
+                                     cutoff=3.0, box=6.0, e_cap=128, n_graphs=2)
+
+
+def _rotated(g, R):
+    return common.GraphBatch(
+        node_feat=g.node_feat, species=g.species,
+        positions=g.positions @ jnp.asarray(R.T, jnp.float32),
+        edge_src=g.edge_src, edge_dst=g.edge_dst, edge_valid=g.edge_valid,
+        node_valid=g.node_valid, graph_id=g.graph_id, n_graphs=g.n_graphs)
+
+
+def _rand_rot(seed=0):
+    rng = np.random.default_rng(seed)
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    Rz = lambda t: np.array([[np.cos(t), -np.sin(t), 0],
+                             [np.sin(t), np.cos(t), 0], [0, 0, 1]])
+    Ry = lambda t: np.array([[np.cos(t), 0, np.sin(t)], [0, 1, 0],
+                             [-np.sin(t), 0, np.cos(t)]])
+    return Rz(a) @ Ry(b) @ Rz(c)
+
+
+def test_schnet_forward_and_invariance(graph):
+    cfg = schnet.Cfg(n_interactions=3, d_hidden=64, n_rbf=32, cutoff=3.0)
+    p = schnet.init_params(jax.random.PRNGKey(1), cfg)
+    node, g_out = schnet.forward(cfg, p, graph)
+    assert node.shape == (24, 1) and g_out.shape == (2, 1)
+    assert np.isfinite(np.asarray(node)).all()
+    # E(3) invariance: SchNet depends on distances only
+    node_r, _ = schnet.forward(cfg, p, _rotated(graph, _rand_rot()))
+    np.testing.assert_allclose(np.asarray(node), np.asarray(node_r), atol=1e-4)
+
+
+def test_dimenet_forward_and_invariance(graph):
+    src, dst = np.asarray(graph.edge_src), np.asarray(graph.edge_dst)
+    ti, to, tv = common.build_triplets(src, dst, 24)
+    ev = np.asarray(graph.edge_valid)
+    tv = tv & ev[ti] & ev[to]
+    tri = (jnp.asarray(ti), jnp.asarray(to), jnp.asarray(tv))
+    cfg = dimenet.Cfg(n_blocks=2, d_hidden=32, cutoff=3.0)
+    p = dimenet.init_params(jax.random.PRNGKey(2), cfg)
+    node, _ = dimenet.forward(cfg, p, graph, tri)
+    assert np.isfinite(np.asarray(node)).all()
+    node_r, _ = dimenet.forward(cfg, p, _rotated(graph, _rand_rot(1)), tri)
+    np.testing.assert_allclose(np.asarray(node), np.asarray(node_r), atol=2e-4)
+
+
+def test_nequip_forward_and_invariance(graph):
+    cfg = nequip.Cfg(n_layers=2, channels=8, l_max=2, cutoff=3.0)
+    p = nequip.init_params(jax.random.PRNGKey(3), cfg)
+    node, _ = nequip.forward(cfg, p, graph)
+    assert np.isfinite(np.asarray(node)).all()
+    assert np.abs(np.asarray(node)).sum() > 1e-6
+    # scalar readout of an E(3)-equivariant net is rotation invariant
+    node_r, _ = nequip.forward(cfg, p, _rotated(graph, _rand_rot(2)))
+    np.testing.assert_allclose(np.asarray(node), np.asarray(node_r),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_equiformer_forward_and_invariance(graph):
+    cfg = equiformer_v2.Cfg(n_layers=2, channels=16, l_max=3, m_max=2,
+                            n_heads=4, cutoff=3.0)
+    p = equiformer_v2.init_params(jax.random.PRNGKey(4), cfg)
+    node, _ = equiformer_v2.forward(cfg, p, graph)
+    assert np.isfinite(np.asarray(node)).all()
+    assert np.abs(np.asarray(node)).sum() > 1e-6
+    node_r, _ = equiformer_v2.forward(cfg, p, _rotated(graph, _rand_rot(3)))
+    np.testing.assert_allclose(np.asarray(node), np.asarray(node_r),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_bessel_basis_device_vs_host():
+    xs = np.concatenate([np.linspace(0.01, 0.49, 10), np.linspace(0.5, 30, 60)])
+    jl = dimenet._spherical_jn_all_jnp(6, jnp.asarray(xs, jnp.float32))
+    for l in range(7):
+        ref = dimenet._spherical_jn_np(l, xs)
+        assert np.abs(np.asarray(jl[l]) - ref).max() < 5e-4
+
+
+def test_bessel_roots_are_roots():
+    roots = np.asarray(dimenet.bessel_roots(7, 6))
+    assert roots.shape == (7, 6)
+    for l in range(7):
+        assert (np.abs(dimenet._spherical_jn_np(l, roots[l])) < 1e-9).all()
+        assert (np.diff(roots[l]) > 0).all()
+
+
+def test_triplet_builder():
+    # path graph 0-1-2 (undirected as two directed edges each)
+    src = np.array([0, 1, 1, 2])
+    dst = np.array([1, 0, 2, 1])
+    ti, to, tv = common.build_triplets(src, dst, 3)
+    pairs = {(int(a), int(b)) for a, b, v in zip(ti, to, tv) if v}
+    # (0→1, 1→2) and (2→1, 1→0) are the only k→j→i chains with k != i
+    assert pairs == {(0, 2), (3, 1)}
+
+
+def test_segment_softmax_normalizes():
+    scores = jnp.asarray(np.random.default_rng(0).normal(size=(10, 2)), jnp.float32)
+    dst = jnp.asarray([0, 0, 0, 1, 1, 2, 2, 2, 2, 2], jnp.int32)
+    w = common.segment_softmax(scores, dst, 3)
+    sums = jax.ops.segment_sum(w, dst, num_segments=3)
+    np.testing.assert_allclose(np.asarray(sums), 1.0, atol=1e-5)

@@ -1,0 +1,68 @@
+"""Planner invariants + paper-trend checks (Secs 4.4, 5.10, Tabs 3-4)."""
+import numpy as np
+import pytest
+
+from repro.core.dodgr import meta_widths, shard_dodgr
+from repro.core.engine import survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.ref import wedge_count_ref
+from repro.core.surveys import TriangleCount
+from repro.graphs import generators
+
+
+def test_push_only_volume_is_wedges():
+    g = generators.rmat(7, 8, seed=1)
+    w_push = meta_widths(0, 0, 0, 0)[0]
+    _, rep = plan_engine(g, 4, mode="push")
+    assert rep.push_only_entries == wedge_count_ref(g)
+    assert rep.push_only_bytes == rep.push_only_entries * w_push * 4
+
+
+def test_pushpull_reduces_volume_on_skewed_graph():
+    # scale-free R-MAT: hubs make pulling profitable (paper Tab. 4 uk-2007 trend)
+    g = generators.rmat(9, 16, seed=5)
+    _, rep = plan_engine(g, 4, mode="pushpull")
+    assert rep.pushpull_bytes < rep.push_only_bytes
+    assert rep.reduction > 1.5
+
+
+def test_aggregation_shrinks_with_more_shards():
+    """Paper Sec 5.4/5.10: fewer edges per rank ⇒ fewer pull opportunities."""
+    g = generators.rmat(9, 16, seed=5)
+    reductions = []
+    for S in (1, 2, 4, 8, 16):
+        _, rep = plan_engine(g, S, mode="pushpull")
+        reductions.append(rep.reduction)
+    assert reductions == sorted(reductions, reverse=True)
+
+
+def test_pulls_per_rank_decreases(capsys):
+    """Paper Tab. 3: average pulls per rank drops as ranks increase."""
+    g = generators.rmat(9, 16, seed=5)
+    prev = None
+    for S in (2, 4, 8, 16):
+        _, rep = plan_engine(g, S, mode="pushpull")
+        if prev is not None:
+            assert rep.pulls_per_rank <= prev
+        prev = rep.pulls_per_rank
+
+
+def test_planner_engine_decision_agreement():
+    """Host plan and device execution must agree on pull decisions exactly."""
+    g = generators.temporal_social(150, 1500, seed=7)
+    for S in (2, 5):
+        gr, _ = shard_dodgr(g, S=S)
+        cfg, rep = plan_engine(g, S, mode="pushpull", push_cap=64, pull_q_cap=4)
+        _, st = survey_push_pull(gr, TriangleCount(), cfg)
+        assert int(st["pull_requests"]) == rep.pushpull_requests
+        assert int(st["wedges_pulled"]) == rep.pulled_wedges
+        assert int(st["wedges_pushed"]) == rep.pushpull_push_entries
+
+
+def test_bytes_model_pulls_no_less_than_entries_when_meta_heavy():
+    """With wide push entries (lots of metadata), byte-costing should make
+    pulling at least as attractive as entry-costing."""
+    g = generators.temporal_social(150, 1500, seed=7).with_degree_meta()
+    _, rep_e = plan_engine(g, 4, mode="pushpull", cost_model="entries")
+    _, rep_b = plan_engine(g, 4, mode="pushpull", cost_model="bytes")
+    assert rep_b.pushpull_requests >= rep_e.pushpull_requests

@@ -1,0 +1,77 @@
+"""SO(3) machinery: equivariance to machine precision (NequIP/EquiformerV2)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import so3
+
+
+def _rot(a, b, c):
+    def Rz(t):
+        return np.array([[np.cos(t), -np.sin(t), 0], [np.sin(t), np.cos(t), 0],
+                         [0, 0, 1]])
+
+    def Ry(t):
+        return np.array([[np.cos(t), 0, np.sin(t)], [0, 1, 0],
+                         [-np.sin(t), 0, np.cos(t)]])
+
+    return Rz(a) @ Ry(b) @ Rz(c)
+
+
+@pytest.mark.parametrize("l", range(7))
+def test_sh_equivariance(l):
+    rng = np.random.default_rng(l)
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    R = _rot(a, b, c)
+    v = rng.normal(size=(16, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    s0, s1 = so3.l_slices(l)[l]
+    Y = np.asarray(so3.real_sph_harm(l, jnp.asarray(v)))[:, s0:s1]
+    Yr = np.asarray(so3.real_sph_harm(l, jnp.asarray(v @ R.T)))[:, s0:s1]
+    D = so3.wigner_d_real_np(l, a, b, c)
+    assert np.abs(D @ D.T - np.eye(2 * l + 1)).max() < 1e-12
+    np.testing.assert_allclose(Yr, Y @ D.T, atol=2e-5)
+
+
+@pytest.mark.parametrize("l", range(1, 7))
+def test_rotation_to_z_device(l):
+    rng = np.random.default_rng(l + 100)
+    v = rng.normal(size=(12, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    s0, s1 = so3.l_slices(l)[l]
+    Y = np.asarray(so3.real_sph_harm(l, jnp.asarray(v)))[:, s0:s1]
+    D = np.asarray(so3.rotation_to_z(l, jnp.asarray(v)))
+    Yz = np.einsum("nab,nb->na", D, Y)
+    z = np.tile([0.0, 0.0, 1.0], (12, 1))
+    Yz_ref = np.asarray(so3.real_sph_harm(l, jnp.asarray(z)))[:, s0:s1]
+    np.testing.assert_allclose(Yz, Yz_ref, atol=5e-4)
+    # orthogonality of the assembled device rotation
+    eye = np.einsum("nab,ncb->nac", D, D)
+    np.testing.assert_allclose(eye, np.tile(np.eye(2 * l + 1), (12, 1, 1)),
+                               atol=5e-4)
+
+
+@pytest.mark.parametrize("lll", [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 2),
+                                 (2, 2, 2), (2, 2, 4), (3, 2, 1), (4, 3, 2)])
+def test_real_cg_equivariance(lll):
+    l1, l2, l3 = lll
+    W = so3.cg_real(l1, l2, l3)
+    assert np.abs(W).max() > 0.1
+    rng = np.random.default_rng(sum(lll))
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    D1, D2, D3 = (so3.wigner_d_real_np(l, a, b, c) for l in lll)
+    lhs = np.einsum("abf,ax,by->xyf", W, D1, D2)
+    rhs = np.einsum("xyf,gf->xyg", W, D3)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5), st.floats(0.01, 6.2), st.floats(0.01, 3.1),
+       st.floats(0.01, 6.2))
+def test_wigner_property_orthogonal_homomorphism(l, a, b, c):
+    D = so3.wigner_d_real_np(l, a, b, c)
+    assert np.abs(D @ D.T - np.eye(2 * l + 1)).max() < 1e-10
+    # composition with the inverse rotation gives identity
+    Dinv = so3.wigner_d_real_np(l, -c, -b, -a)
+    assert np.abs(D @ Dinv - np.eye(2 * l + 1)).max() < 1e-10

@@ -1,0 +1,159 @@
+"""Trainer / optimizer / compression / checkpoint tests."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+from repro.comm import make_int8_compressor
+from repro.configs.base import LMConfig
+from repro.data import lm_batch
+from repro.models import transformer as T
+from repro.train import TrainState, adafactor, adamw, make_train_step, sgd_momentum
+from repro.train.trainer import init_state
+
+CFG = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+               d_ff=64, vocab=101, dtype="float32", param_dtype="float32",
+               attn_chunk=16)
+
+
+def _loss(params, batch):
+    return T.loss_fn(CFG, params, batch)
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor", "sgd"])
+def test_loss_decreases(opt_name):
+    opt = dict(adamw=adamw(3e-3), adafactor=adafactor(3e-2),
+               sgd=sgd_momentum(3e-3))[opt_name]
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(_loss, opt))
+    losses = []
+    for i in range(30):
+        batch = lm_batch(0, i % 4, 8, 17, CFG.vocab)
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.15, losses
+
+
+def test_grad_accumulation_equivalence():
+    opt = sgd_momentum(1e-2, momentum=0.0)
+    params = T.init_params(CFG, jax.random.PRNGKey(1))
+    big = lm_batch(0, 0, 8, 17, CFG.vocab)
+    s1 = init_state(params, opt)
+    s1, _ = jax.jit(make_train_step(_loss, opt))(s1, big)
+    s2 = init_state(params, opt)
+    micro = big.reshape(4, 2, 17)
+    s2, _ = jax.jit(make_train_step(_loss, opt, accum_steps=4))(s2, micro)
+    d = jax.tree.reduce(
+        lambda a, x: max(a, float(jnp.abs(x).max())),
+        jax.tree.map(lambda a, b: a - b, s1.params, s2.params), 0.0)
+    assert d < 5e-6, d
+
+
+def test_int8_compression_trains():
+    opt = adamw(3e-3)
+    params = T.init_params(CFG, jax.random.PRNGKey(2))
+    state = init_state(params, opt, compression=True)
+    step = jax.jit(make_train_step(_loss, opt,
+                                   grad_transform=make_int8_compressor()))
+    losses = []
+    for i in range(30):
+        state, m = step(state, lm_batch(1, i % 4, 8, 17, CFG.vocab))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.15
+
+
+def test_error_feedback_reduces_bias():
+    from repro.comm.collectives import int8_dequantize, int8_quantize
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)) * 0.01, jnp.float32)
+    # with EF, accumulated dequantized updates converge to accumulated g
+    ef = jnp.zeros_like(g)
+    tot = jnp.zeros_like(g)
+    for _ in range(50):
+        x = g + ef
+        q, s = int8_quantize(x)
+        deq = int8_dequantize(q, s)
+        ef = x - deq
+        tot = tot + deq
+    err = float(jnp.abs(tot - 50 * g).max())
+    assert err < float(jnp.abs(g).max()) * 2  # residual bounded, not growing
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = dict(a=jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+                b=[jnp.ones((2,)), dict(c=jnp.zeros((5,), jnp.int32))])
+    p = str(tmp_path / "ckpt")
+    save_pytree(p, tree, extra=dict(step=7))
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = restore_pytree(p, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "run"), keep=2)
+    tree = dict(w=jnp.ones((4, 4)))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, jax.tree.map(lambda x: x * s, tree))
+    mgr.wait()
+    assert mgr.latest_step() == 4
+    kept = sorted(os.listdir(str(tmp_path / "run")))
+    assert len(kept) == 2
+    like = dict(w=jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    back, extra = mgr.restore_latest(like)
+    assert extra["step"] == 4
+    np.testing.assert_array_equal(np.asarray(back["w"]), 4.0)
+    mgr.close()
+
+
+def test_checkpoint_restore_resumes_training():
+    """Full restart flow: train → save → restore → identical continuation."""
+    opt = adamw(1e-3)
+    params = T.init_params(CFG, jax.random.PRNGKey(3))
+    state = init_state(params, opt)
+    step = jax.jit(make_train_step(_loss, opt))
+    for i in range(3):
+        state, _ = step(state, lm_batch(2, i, 4, 17, CFG.vocab))
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck")
+        save_pytree(path, state, extra=dict(data_step=3, seed=2))
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored = restore_pytree(path, like)
+    s_a, _ = step(state, lm_batch(2, 3, 4, 17, CFG.vocab))
+    s_b, _ = step(restored, lm_batch(2, 3, 4, 17, CFG.vocab))
+    d = jax.tree.reduce(
+        lambda a, x: max(a, float(jnp.abs(x).max())),
+        jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                     s_a.params, s_b.params), 0.0)
+    assert d == 0.0
+
+
+def test_sampler_shapes_and_locality():
+    from repro.graphs import generators
+    from repro.graphs.sampler import CSRHost, sample_subgraph
+
+    g = generators.rmat(8, 8, seed=3)
+    csr = CSRHost.from_graph(g)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(g.n, 16, replace=False)
+    sub = sample_subgraph(csr, seeds, (5, 3), rng)
+    assert sub["nodes"].shape == (16 + 80 + 240,)
+    assert sub["edge_src"].shape == sub["edge_dst"].shape == (320,)
+    ne = sub["n_edges"]
+    # every sampled edge is a real edge of the graph
+    es = set(map(tuple, np.stack([g.src, g.dst], 1).tolist()))
+    es |= {(b, a) for a, b in es}
+    for i in range(ne):
+        u = sub["nodes"][sub["edge_src"][i]]
+        v = sub["nodes"][sub["edge_dst"][i]]
+        assert (int(u), int(v)) in es
+    # seeds occupy the first slots
+    np.testing.assert_array_equal(sub["nodes"][:16], seeds)

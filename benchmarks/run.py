@@ -21,7 +21,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_closure, bench_counting, bench_kernels,
-                            bench_metadata, bench_pushpull, bench_scaling)
+                            bench_metadata, bench_multi_survey,
+                            bench_pushpull, bench_scaling)
 
     suites = dict(
         pushpull=bench_pushpull,     # Tab. 3 / Tab. 4
@@ -30,6 +31,7 @@ def main() -> None:
         scaling=bench_scaling,       # Fig. 4 / Fig. 5
         metadata=bench_metadata,     # Fig. 9
         kernels=bench_kernels,       # kernel layer
+        multi_survey=bench_multi_survey,  # SurveyBundle amortization + DOULION
     )
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only.split(",")}

@@ -21,5 +21,8 @@ SMOKE = TriPollConfig(
 SHAPES = (
     ShapeCell("survey_pushpull", "graph", extras=dict(mode="pushpull")),
     ShapeCell("survey_push", "graph", extras=dict(mode="push")),
+    # multi-survey polling: 4 surveys folded in one pushpull traversal —
+    # same exchange volume as survey_pushpull, ~4× the survey answers
+    ShapeCell("survey_bundle", "graph", extras=dict(mode="pushpull", bundle=True)),
 )
 KIND = "tripoll"

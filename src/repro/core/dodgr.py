@@ -71,6 +71,11 @@ class ShardedDODGr:
     vmeta_f: jax.Array   # [S, n_loc, dvf] f32
     vdeg: jax.Array      # [S, n_loc] i32 full degree of local vertex
     dplus: jax.Array     # [S, n_loc] i32 out-degree of local vertex
+    # --- DOULION sampling provenance (static) — the engine entry points
+    # cross-check these against EngineConfig so a graph ingested with one
+    # (p, seed) can never run under a plan built for another ---
+    sample_p: float = 1.0
+    sample_seed: int = 0
 
     def __post_init__(self):
         pass
@@ -88,7 +93,8 @@ jax.tree_util.register_dataclass(
         "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
         "vdeg", "dplus",
     ],
-    meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max"],
+    meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max",
+                 "sample_p", "sample_seed"],
 )
 
 
@@ -120,8 +126,31 @@ def orient_edges(g: HostGraph):
     return p, q, deg, h
 
 
-def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None) -> tuple[ShardedDODGr, RoutingStats]:
-    """Host-side ingestion: orient, partition cyclically, build padded CSR shards."""
+def sparsify_edges(g: HostGraph, p: float, seed: int = 0) -> HostGraph:
+    """DOULION sparsification (Tsourakakis et al.): keep each undirected edge
+    i.i.d. with probability ``p``. A triangle survives with probability p³,
+    so count-type survey results debias by 1/p³
+    (:meth:`Survey.scale_sampled`). Deterministic in ``seed`` so ingestion
+    (:func:`shard_dodgr`) and planning (``pushpull.plan_engine``) sparsify
+    identically and the static plan matches the sampled graph exactly."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"sample_p must be in (0, 1], got {p}")
+    if p >= 1.0:
+        return g
+    rng = np.random.default_rng(seed)
+    keep = rng.random(g.m) < p
+    return HostGraph(g.n, g.src[keep], g.dst[keep], g.spec,
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[keep], g.emeta_f[keep])
+
+
+def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
+                sample_p: float = 1.0, sample_seed: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
+    """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
+
+    ``sample_p < 1`` ingests a DOULION-sparsified view of ``g`` (see
+    :func:`sparsify_edges`); pass the same (p, seed) to ``plan_engine``.
+    """
+    g = sparsify_edges(g, sample_p, sample_seed)
     p, q, deg, h = orient_edges(g)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
 
@@ -212,6 +241,7 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None) -> tuple[Sharded
     gr = ShardedDODGr(
         S=S, n_global=g.n, n_loc=n_loc, e_cap=e_cap,
         d_plus_max=max(1, d_plus_max),
+        sample_p=sample_p, sample_seed=sample_seed,
         row_ptr=jnp.asarray(row_ptr), edge_src=jnp.asarray(edge_src),
         nbr=jnp.asarray(nbr), nbr_d=jnp.asarray(nbr_d),
         nbr_h=jnp.asarray(nbr_h), nbr_dplus=jnp.asarray(nbr_dp),

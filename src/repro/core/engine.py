@@ -56,6 +56,10 @@ class EngineConfig:
     use_pallas: bool = False      # route search/intersect through Pallas kernels
     pallas_interpret: bool = True  # interpret mode (CPU container validation)
     shard_axis: str | None = None  # mesh axis name for sharding constraints
+    sample_p: float = 1.0         # DOULION edge-keep probability the graph was
+    #                               sparsified with (host-side); < 1 debiases
+    #                               count-type results by 1/p³ at finalize
+    sample_seed: int = 0          # sparsification seed (must match ingestion)
 
 
 def _constrain(x, cfg: EngineConfig, *trailing):
@@ -503,15 +507,51 @@ def _meta_widths(gr: ShardedDODGr):
     return meta_widths(dvi, dvf, dei, def_)
 
 
+def _finalize_run(survey: Survey, cfg: EngineConfig, merged, stats):
+    """Host-side epilogue shared by the entry points: per-survey stats,
+    DOULION debiasing + its variance estimate (Tsourakakis et al.)."""
+    stats = jax.tree.map(float, jax.device_get(stats))
+    members = getattr(survey, "surveys", (survey,))
+    stats["n_surveys"] = float(len(members))
+    result = survey.finalize(merged)
+    if cfg.sample_p < 1.0:
+        p = cfg.sample_p
+        result = survey.scale_sampled(result, p)
+        raw = stats["tris_push"] + stats["tris_pull"]
+        est = raw / p**3
+        # Var[T̂] ≈ T(1/p³ − 1) (independent-triangle term; the shared-edge
+        # covariance term needs the per-edge triangle multiset — see ref.py)
+        var = est * (1.0 / p**3 - 1.0)
+        stats["sample_p"] = p
+        stats["sample_scale"] = 1.0 / p**3
+        stats["sample_variance"] = var
+        stats["sample_rel_stderr"] = float(np.sqrt(var) / max(est, 1.0))
+    return result, stats
+
+
+def _check_sampling(gr: ShardedDODGr, cfg: EngineConfig):
+    g_key = (gr.sample_p, gr.sample_seed)
+    c_key = (cfg.sample_p, cfg.sample_seed)
+    if gr.sample_p == cfg.sample_p == 1.0:
+        return  # unsampled on both sides; seeds are irrelevant
+    if g_key != c_key:
+        raise ValueError(
+            f"sampling mismatch: graph ingested with (p, seed)={g_key} but "
+            f"plan built with {c_key}; pass the same sample_p/sample_seed to "
+            "shard_dodgr and plan_engine")
+
+
 def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+    _check_sampling(gr, cfg)
     cfg = replace(cfg, mode="push")
     fn = jax.jit(make_survey_fn(survey, cfg))
     merged, stats = fn(gr)
-    return survey.finalize(merged), jax.tree.map(float, jax.device_get(stats))
+    return _finalize_run(survey, cfg, merged, stats)
 
 
 def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+    _check_sampling(gr, cfg)
     cfg = replace(cfg, mode="pushpull")
     fn = jax.jit(make_survey_fn(survey, cfg))
     merged, stats = fn(gr)
-    return survey.finalize(merged), jax.tree.map(float, jax.device_get(stats))
+    return _finalize_run(survey, cfg, merged, stats)

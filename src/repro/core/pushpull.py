@@ -17,7 +17,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.dodgr import orient_edges, meta_widths
+from repro.core.dodgr import orient_edges, meta_widths, sparsify_edges
 from repro.core.engine import EngineConfig
 from repro.graphs.csr import HostGraph
 from repro.utils import ceil_div
@@ -52,8 +52,16 @@ def plan_engine(
     cost_model: str = "entries",
     use_pallas: bool = False,
     shard_axis: str | None = None,
+    sample_p: float = 1.0,
+    sample_seed: int = 0,
 ) -> tuple[EngineConfig, VolumeReport]:
-    """Plan static superstep counts/capacities and account communication."""
+    """Plan static superstep counts/capacities and account communication.
+
+    ``sample_p < 1`` plans against the same DOULION-sparsified view that
+    ``shard_dodgr(..., sample_p, sample_seed)`` ingests, and stamps the
+    probability into the config so the engine debiases at finalize.
+    """
+    g = sparsify_edges(g, sample_p, sample_seed)
     p, q, deg, h = orient_edges(g)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
     s = (p % S).astype(np.int64)
@@ -150,5 +158,7 @@ def plan_engine(
         cost_model=cost_model,
         use_pallas=use_pallas,
         shard_axis=shard_axis,
+        sample_p=sample_p,
+        sample_seed=sample_seed,
     )
     return cfg, report

@@ -70,6 +70,26 @@ def count_triangles_networkx(g: HostGraph) -> int:
     return sum(nx.triangles(g.to_networkx()).values()) // 3
 
 
+def top_weighted_triangles_ref(g: HostGraph, k: int, weight_col: int = 0):
+    """Brute-force oracle for :class:`~repro.core.surveys.TopKWeightedTriangles`.
+
+    Weight = e_pq + e_pr + e_qr of float column ``weight_col``, accumulated
+    in float32 in the engine's operand order so results compare bitwise.
+    Returns (weights [≤k] f32 descending, triangles [≤k, 3] canonical order).
+    """
+    rows = []
+
+    def cb(p, q, r, meta):
+        e_pq, e_pr, e_qr = (np.float32(m[weight_col]) for m in meta["e_f"])
+        rows.append((np.float32(np.float32(e_pq + e_pr) + e_qr), (p, q, r)))
+
+    survey_triangles_ref(g, cb)
+    rows.sort(key=lambda t: -t[0])
+    top = rows[:k]
+    return (np.array([w for w, _ in top], np.float32),
+            np.array([t for _, t in top], np.int64).reshape(-1, 3))
+
+
 def wedge_count_ref(g: HostGraph) -> int:
     """|W₊| — DODGr wedge checks, the engine's work unit (paper Sec. 3)."""
     adj, _, _ = dodgr_adjacency(g)

@@ -21,6 +21,18 @@ from repro.core.counting_set import CountingSet
 # ---------------------------------------------------------------------------
 
 
+def _sort3(a, b, c):
+    """Exact 3-way sort via a min/max network — elementwise, no XLA sort.
+
+    Survey folds run on every (padded) triangle slot each superstep, so a
+    ``jnp.sort`` here is the fold hot path; the network is ~10× cheaper on
+    CPU and bitwise-identical (pure min/max, no arithmetic)."""
+    lo = jnp.minimum(jnp.minimum(a, b), c)
+    hi = jnp.maximum(jnp.maximum(a, b), c)
+    mid = jnp.maximum(jnp.minimum(a, b), jnp.minimum(jnp.maximum(a, b), c))
+    return lo, mid, hi
+
+
 @dataclass(frozen=True)
 class TriangleBatch:
     """A masked batch of triangles Δ_pqr with their six metadata items."""
@@ -69,10 +81,26 @@ class Survey:
     def finalize(self, merged):
         return jax.tree.map(np.asarray, merged)
 
+    def scale_sampled(self, result, p: float):
+        """Debias a finalized result computed on a DOULION-sparsified graph
+        (edges kept i.i.d. with probability ``p``). Count-like surveys scale
+        by 1/p³ (each triangle survives w.p. p³); surveys whose output is not
+        a count (e.g. enumeration) return it unchanged."""
+        return result
+
 
 # ---------------------------------------------------------------------------
 # 64-bit counter from uint32 limbs (x64 stays disabled; global triangle
 # counts overflow int32 at paper scale — 9.65T on WDC-2012).
+
+def _scale_counting_set(result: dict, p: float) -> dict:
+    """1/p³ debias for a finalized CountingSet readout (counts go float)."""
+    return dict(
+        counts={k: v / p**3 for k, v in result["counts"].items()},
+        n_collided_slots=result["n_collided_slots"],
+        count_in_collided=result["count_in_collided"] / p**3,
+    )
+
 
 def counter64_zero():
     return dict(lo=jnp.zeros((), jnp.uint32), hi=jnp.zeros((), jnp.uint32))
@@ -98,21 +126,22 @@ class TriangleCount(Survey):
         return counter64_add(state, tri.valid.sum(dtype=jnp.uint32))
 
     def merge(self, stacked):
-        lo = stacked["lo"].astype(jnp.uint64) if False else stacked["lo"]
-        # sum limbs with carry: do it pairwise-safe via float-free loop
-        def add2(a, b):
-            lo = a["lo"] + b["lo"]
-            carry = (lo < a["lo"]).astype(jnp.uint32)
-            return dict(lo=lo, hi=a["hi"] + b["hi"] + carry)
-
-        n = stacked["lo"].shape[0]
-        acc = dict(lo=stacked["lo"][0], hi=stacked["hi"][0])
-        for i in range(1, n):
-            acc = add2(acc, dict(lo=stacked["lo"][i], hi=stacked["hi"][i]))
-        return acc
+        # Vectorized limb reduction (x64 stays off): split lo into 16-bit
+        # halves so per-half uint32 sums are exact for S ≤ 2¹⁶ shards, then
+        # recombine — mid carries every 2³² wrap into hi.
+        lo, hi = stacked["lo"], stacked["hi"]
+        s_lo16 = (lo & jnp.uint32(0xFFFF)).sum(dtype=jnp.uint32)
+        s_hi16 = (lo >> jnp.uint32(16)).sum(dtype=jnp.uint32)
+        mid = s_hi16 + (s_lo16 >> jnp.uint32(16))
+        total_lo = (mid << jnp.uint32(16)) | (s_lo16 & jnp.uint32(0xFFFF))
+        total_hi = hi.sum(dtype=jnp.uint32) + (mid >> jnp.uint32(16))
+        return dict(lo=total_lo, hi=total_hi)
 
     def finalize(self, merged):
         return counter64_value(merged)
+
+    def scale_sampled(self, result, p: float):
+        return result / p**3
 
 
 class LocalVertexCount(Survey):
@@ -134,6 +163,9 @@ class LocalVertexCount(Survey):
         state = state.at[tri.q].add(amt)
         state = state.at[tri.r].add(amt)
         return state
+
+    def scale_sampled(self, result, p: float):
+        return np.asarray(result) / p**3
 
 
 class ClosureTime(Survey):
@@ -158,9 +190,7 @@ class ClosureTime(Survey):
 
     def update(self, state, tri):
         c = self.ts_col
-        ts = jnp.stack([tri.e_pq_f[:, c], tri.e_pr_f[:, c], tri.e_qr_f[:, c]], -1)
-        ts = jnp.sort(ts, axis=-1)
-        t1, t2, t3 = ts[:, 0], ts[:, 1], ts[:, 2]
+        t1, t2, t3 = _sort3(tri.e_pq_f[:, c], tri.e_pr_f[:, c], tri.e_qr_f[:, c])
         open_b = self._bucket(t2 - t1)
         close_b = self._bucket(t3 - t1)
         return state.at[open_b, close_b].add(tri.valid.astype(jnp.int32))
@@ -168,6 +198,9 @@ class ClosureTime(Survey):
     def finalize(self, merged):
         joint = np.asarray(merged)
         return dict(joint=joint, close_marginal=joint.sum(0), open_marginal=joint.sum(1))
+
+    def scale_sampled(self, result, p: float):
+        return {k: v / p**3 for k, v in result.items()}
 
 
 class MaxEdgeLabelDist(Survey):
@@ -189,6 +222,9 @@ class MaxEdgeLabelDist(Survey):
         mx = jnp.clip(mx, 0, self.n_labels - 1)
         return state.at[mx].add((tri.valid & distinct).astype(jnp.int32))
 
+    def scale_sampled(self, result, p: float):
+        return np.asarray(result) / p**3
+
 
 class DegreeTriples(Survey):
     """Sec. 5.9 — count (⌈log₂ d(p)⌉, ⌈log₂ d(q)⌉, ⌈log₂ d(r)⌉) triples.
@@ -207,6 +243,9 @@ class DegreeTriples(Survey):
 
     def init(self):
         return self.cs.init()
+
+    def scale_sampled(self, result, p: float):
+        return _scale_counting_set(result, p)
 
     def update(self, state, tri):
         c = self.deg_col
@@ -239,12 +278,14 @@ class LabelTripleSet(Survey):
 
     def update(self, state, tri):
         c = self.vc
-        lab = jnp.stack([tri.vp_i[:, c], tri.vq_i[:, c], tri.vr_i[:, c]], -1)
-        lab = jnp.sort(lab, axis=-1)
+        l1, l2, l3 = _sort3(tri.vp_i[:, c], tri.vq_i[:, c], tri.vr_i[:, c])
         valid = tri.valid
         if self.require_distinct:
-            valid = valid & (lab[:, 0] != lab[:, 1]) & (lab[:, 1] != lab[:, 2])
-        return self.cs.increment(state, lab, valid)
+            valid = valid & (l1 != l2) & (l2 != l3)
+        return self.cs.increment(state, jnp.stack([l1, l2, l3], -1), valid)
+
+    def scale_sampled(self, result, p: float):
+        return _scale_counting_set(result, p)
 
     def merge(self, stacked):
         return self.cs.merge(stacked)
@@ -254,11 +295,16 @@ class LabelTripleSet(Survey):
 
 
 class Enumerate(Survey):
-    """Full triangle enumeration into a fixed-capacity buffer.
+    """Triangle enumeration into a fixed-capacity per-shard ring buffer.
 
-    The paper notes enumeration is just another callback; here it appends
-    (p, q, r) into a per-shard ring buffer (capacity overflow counted, not
-    silently dropped-without-trace).
+    The paper notes enumeration is just another callback. ``triangles`` in
+    the finalized result is a *capacity-bounded sample*: once a shard finds
+    more than ``capacity`` triangles the ring wraps and earlier entries are
+    overwritten (never duplicated — each triangle is written to exactly one
+    slot; which writer survives a wrapped slot is backend-defined, as JAX
+    scatter ties are unordered). ``total_found``
+    stays the exact count and ``overflowed`` reports how many triangles are
+    missing from the buffer (Σ per shard of max(0, n − capacity)).
     """
 
     def __init__(self, capacity: int):
@@ -285,4 +331,101 @@ class Enumerate(Survey):
     def finalize(self, merged):
         tris = np.asarray(merged["tris"]).reshape(-1, 3)
         tris = tris[tris[:, 0] >= 0]
-        return dict(triangles=tris, total_found=int(np.asarray(merged["n"]).sum()))
+        n = np.asarray(merged["n"], np.int64)
+        return dict(
+            triangles=tris,
+            total_found=int(n.sum()),
+            overflowed=int(np.maximum(n - self.capacity, 0).sum()),
+        )
+
+
+# ---------------------------------------------------------------------------
+# SurveyBundle — N surveys folded in one traversal (the "poll" in TriPoll)
+
+
+class SurveyBundle(Survey):
+    """Composite survey: fans one :class:`TriangleBatch` into N members.
+
+    The member states live in a single tuple pytree, so ``make_survey_fn``
+    compiles *one* superstep scan whose push queries and pulled rows are
+    paid once while every member's fold is fused into the same program —
+    polling N questions costs one traversal, not N (paper Sec. 4.5: the
+    callback is arbitrary, so a tuple of callbacks is just another
+    callback).
+    """
+
+    def __init__(self, surveys, names=None):
+        self.surveys = tuple(surveys)
+        if names is None:
+            names, seen = [], {}
+            for s in self.surveys:
+                base = type(s).__name__
+                k = seen.get(base, 0)
+                seen[base] = k + 1
+                names.append(base if k == 0 else f"{base}_{k}")
+        if len(names) != len(self.surveys):
+            raise ValueError("names/surveys length mismatch")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate survey names: {names}")
+        self.names = tuple(names)
+
+    def init(self):
+        return tuple(s.init() for s in self.surveys)
+
+    def update(self, state, tri):
+        return tuple(s.update(st, tri) for s, st in zip(self.surveys, state))
+
+    def merge(self, stacked):
+        return tuple(s.merge(st) for s, st in zip(self.surveys, stacked))
+
+    def finalize(self, merged):
+        return {n: s.finalize(m)
+                for n, s, m in zip(self.names, self.surveys, merged)}
+
+    def scale_sampled(self, result, p: float):
+        return {n: s.scale_sampled(result[n], p)
+                for n, s in zip(self.names, self.surveys)}
+
+
+class TopKWeightedTriangles(Survey):
+    """Top-k heaviest triangles, weight = Σ of an edge float column
+    (after Kumar et al., *Retrieving Top Weighted Triangles in Graphs*).
+
+    Per-shard state is a k-slot weight heap kept sorted by ``lax.top_k``
+    against each incoming batch; the cross-shard ``merge`` is the paper's
+    merge-by-sort over the S·k stacked candidates. Exact because the engine
+    discovers every triangle exactly once (push or pull, never both).
+    """
+
+    def __init__(self, k: int, weight_col: int = 0):
+        self.k = k
+        self.wc = weight_col
+
+    def init(self):
+        return dict(
+            w=jnp.full((self.k,), -jnp.inf, jnp.float32),
+            tri=jnp.full((self.k, 3), -1, jnp.int32),
+        )
+
+    def _select(self, w, tri):
+        topw, idx = jax.lax.top_k(w, self.k)
+        return dict(w=topw, tri=tri[idx])
+
+    def update(self, state, tri):
+        c = self.wc
+        w = tri.e_pq_f[:, c] + tri.e_pr_f[:, c] + tri.e_qr_f[:, c]
+        w = jnp.where(tri.valid, w, -jnp.inf)
+        rows = jnp.stack([tri.p, tri.q, tri.r], -1)
+        return self._select(jnp.concatenate([state["w"], w]),
+                            jnp.concatenate([state["tri"], rows]))
+
+    def merge(self, stacked):
+        S = stacked["w"].shape[0]
+        return self._select(stacked["w"].reshape(S * self.k),
+                            stacked["tri"].reshape(S * self.k, 3))
+
+    def finalize(self, merged):
+        w = np.asarray(merged["w"])
+        tri = np.asarray(merged["tri"])
+        keep = np.isfinite(w)
+        return dict(weights=w[keep], triangles=tri[keep])

@@ -416,7 +416,8 @@ def _recsys_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
 def _tripoll_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
     from repro.core.dodgr import dodgr_spec
     from repro.core.engine import EngineConfig, make_survey_fn
-    from repro.core.surveys import ClosureTime
+    from repro.core.surveys import (ClosureTime, SurveyBundle,
+                                    TopKWeightedTriangles, TriangleCount)
 
     cfg: TriPollConfig = mod.CONFIG
     S = int(np.prod(list(mesh.shape.values())))
@@ -440,7 +441,13 @@ def _tripoll_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
                     dei=cfg.dei, def_=cfg.def_)
     spec_first = lambda aval: P(aa, *([None] * (len(aval.shape) - 1)))
     gr_sh = jax.tree.map(lambda a: NamedSharding(mesh, spec_first(a)), gr)
-    fn = make_survey_fn(ClosureTime(), ecfg)
+    if shape.extras.get("bundle"):
+        survey = SurveyBundle([TriangleCount(), ClosureTime(),
+                               ClosureTime(n_buckets=32),
+                               TopKWeightedTriangles(k=128)])
+    else:
+        survey = ClosureTime()
+    fn = make_survey_fn(survey, ecfg)
     # useful work: one keyed binary search per wedge (≈ log2(L) × 8 ops)
     wedges = S * S * cfg.push_cap * (cfg.n_push_steps + cfg.n_pull_steps)
     flops = wedges * np.log2(max(2, cfg.d_plus_max)) * 8.0

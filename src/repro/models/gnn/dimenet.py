@@ -55,7 +55,15 @@ def _spherical_jn_np(l: int, x: np.ndarray) -> np.ndarray:
                 want = np.where(big, want * 1e-200, want)
     if l == 0:
         want = jc
-    out = want * ((np.sin(xs) / xs) / jc)
+    # Normalize by a closed-form order: j0 = sin(x)/x, or j1 where x sits at
+    # a root of j0 (there jc cancels to exactly 0 and j0/jc is 0/0; j0 and j1
+    # have no common roots, and jp is the unnormalized j1).
+    j0_true = np.sin(xs) / np.where(tiny, 1.0, xs)
+    j1_true = np.sin(xs) / xs**2 - np.cos(xs) / xs
+    use_j1 = np.abs(j0_true) < 1e-8
+    denom = np.where(use_j1, jp, jc)
+    scale = np.where(use_j1, j1_true, j0_true) / np.where(denom == 0, 1.0, denom)
+    out = want * scale
     return np.where(tiny, 1.0 if l == 0 else 0.0, out)
 
 

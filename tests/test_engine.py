@@ -6,7 +6,9 @@ from repro.core.dodgr import shard_dodgr
 from repro.core.engine import survey_push_only, survey_push_pull
 from repro.core.pushpull import plan_engine
 from repro.core.ref import count_triangles_ref, count_triangles_networkx, wedge_count_ref
-from repro.core.surveys import TriangleCount, Enumerate
+from repro.core.surveys import (ClosureTime, Enumerate, LabelTripleSet,
+                                SurveyBundle, TopKWeightedTriangles,
+                                TriangleCount)
 from repro.graphs import generators
 
 GRAPHS = {
@@ -83,6 +85,83 @@ def test_tiny_capacity_still_exact():
     res, st = survey_push_pull(gr, TriangleCount(), cfg)
     assert res == t_ref
     assert st["pull_overflow"] == 0
+
+
+def test_bundle_is_single_pass():
+    """4 bundled surveys pay the traversal once: every communication stat
+    matches a single-survey run exactly (ISSUE acceptance)."""
+    g = generators.temporal_social(120, 1200, seed=4)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=64, pull_q_cap=8)
+    bundle = SurveyBundle([TriangleCount(), ClosureTime(),
+                           LabelTripleSet(capacity=1 << 12),
+                           TopKWeightedTriangles(k=8)])
+    res_b, st_b = survey_push_pull(gr, bundle, cfg)
+    res_1, st_1 = survey_push_pull(gr, TriangleCount(), cfg)
+    for key in ("wedges_pushed", "wedges_pulled", "pull_requests",
+                "pull_overflow", "tris_push", "tris_pull"):
+        assert st_b[key] == st_1[key], key
+    assert st_b["n_surveys"] == 4
+    assert res_b["TriangleCount"] == res_1
+
+
+def test_sampled_p1_is_exact():
+    """sample_p=1.0 must be the identity: same graph, same results, no
+    debias stats."""
+    g = generators.temporal_social(120, 1200, seed=4)
+    gr, _ = shard_dodgr(g, S=4, sample_p=1.0)
+    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=64, pull_q_cap=8,
+                         sample_p=1.0)
+    res, st = survey_push_pull(gr, TriangleCount(), cfg)
+    assert res == count_triangles_ref(g)
+    assert "sample_variance" not in st
+
+
+def test_sampled_debias_covers_all_bundle_members():
+    """Every count-type survey in a sampled bundle must be debiased
+    consistently — the histogram mass equals the scaled global count."""
+    g = generators.temporal_social(120, 1200, seed=4)
+    p, seed = 0.5, 3
+    gr, _ = shard_dodgr(g, S=2, sample_p=p, sample_seed=seed)
+    cfg, _ = plan_engine(g, 2, mode="push", push_cap=64,
+                         sample_p=p, sample_seed=seed)
+    res, _ = survey_push_only(
+        gr, SurveyBundle([TriangleCount(), ClosureTime()]), cfg)
+    assert np.isclose(res["ClosureTime"]["joint"].sum(),
+                      res["TriangleCount"])
+
+
+def test_sampling_mismatch_raises():
+    """A graph ingested with one (p, seed) must refuse a plan built for
+    another — silent 1000× miscounts otherwise."""
+    g = generators.temporal_social(120, 1200, seed=4)
+    gr_full, _ = shard_dodgr(g, S=2)
+    gr_smp, _ = shard_dodgr(g, S=2, sample_p=0.5, sample_seed=1)
+    cfg_smp, _ = plan_engine(g, 2, mode="push", sample_p=0.5, sample_seed=1)
+    cfg_full, _ = plan_engine(g, 2, mode="push")
+    cfg_seed2, _ = plan_engine(g, 2, mode="push", sample_p=0.5, sample_seed=2)
+    for gr_bad, cfg_bad in ((gr_full, cfg_smp), (gr_smp, cfg_full),
+                            (gr_smp, cfg_seed2)):
+        with pytest.raises(ValueError, match="sampling mismatch"):
+            survey_push_only(gr_bad, TriangleCount(), cfg_bad)
+
+
+def test_sampled_estimate_within_10pct():
+    """DOULION at p=0.1 on rmat(12, 8): debiased estimate within 10% of the
+    exact count (seeded; ISSUE acceptance)."""
+    g = generators.rmat(12, 8, seed=0)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode="push", push_cap=4096)
+    true, _ = survey_push_only(gr, TriangleCount(), cfg)
+
+    p, seed = 0.1, 1
+    gr_s, _ = shard_dodgr(g, S=4, sample_p=p, sample_seed=seed)
+    cfg_s, _ = plan_engine(g, 4, mode="push", push_cap=1024,
+                           sample_p=p, sample_seed=seed)
+    est, st = survey_push_only(gr_s, TriangleCount(), cfg_s)
+    assert st["sample_p"] == p
+    assert st["sample_variance"] > 0
+    assert abs(est - true) / true < 0.10, (est, true)
 
 
 def test_triangle_free_graph():

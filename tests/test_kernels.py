@@ -3,6 +3,8 @@ with shape sweeps and hypothesis property tests."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.hist.ops import hist_add

@@ -21,8 +21,8 @@ def test_all_cells_enumeration():
     cells = all_cells()
     archs = {a for a, _ in cells}
     assert len(archs) == 11
-    # 10 assigned archs × 4 shapes + tripoll × 2
-    assert len(cells) == 10 * 4 + 2
+    # 10 assigned archs × 4 shapes + tripoll × 3
+    assert len(cells) == 10 * 4 + 3
 
 
 @pytest.mark.parametrize("arch,shape", [
@@ -34,6 +34,7 @@ def test_all_cells_enumeration():
     ("equiformer-v2", "ogb_products"),
     ("bst", "retrieval_cand"),
     ("tripoll", "survey_pushpull"),
+    ("tripoll", "survey_bundle"),
 ])
 def test_build_cell_plans_are_abstract(arch, shape):
     """Plans must be pure ShapeDtypeStructs (no device allocation)."""

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.gnn import so3

@@ -11,15 +11,28 @@ from repro.core.ref import survey_triangles_ref
 from repro.core.surveys import (
     ClosureTime,
     DegreeTriples,
+    Enumerate,
     LabelTripleSet,
     LocalVertexCount,
     MaxEdgeLabelDist,
+    SurveyBundle,
+    TopKWeightedTriangles,
     TriangleCount,
     counter64_add,
     counter64_value,
     counter64_zero,
 )
 from repro.graphs import generators
+
+
+def _tree_equal(a, b):
+    """Bitwise equality over nested dict/array/scalar results."""
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.shape == b.shape and (a == b).all()
+    return a == b
 
 
 @pytest.fixture(scope="module")
@@ -103,6 +116,51 @@ def test_max_edge_label_dist():
     assert (np.asarray(res) == expect).all()
 
 
+@pytest.mark.parametrize("S", [1, 3, 4])
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_survey_bundle_matches_standalone(survey_refs, S, mode):
+    """One bundled pass must reproduce every member bitwise (satellite #5)."""
+    g, _, _, _, _ = survey_refs
+    gr, _ = shard_dodgr(g, S=S)
+    cfg, _ = plan_engine(g, S, mode=mode, push_cap=128, pull_q_cap=8)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    members = lambda: [TriangleCount(), ClosureTime(),
+                       LabelTripleSet(capacity=1 << 14)]
+    res, st = run(gr, SurveyBundle(members()), cfg)
+    assert st["n_surveys"] == 3
+    for name, single in zip(("TriangleCount", "ClosureTime", "LabelTripleSet"),
+                            members()):
+        res_1, st_1 = run(gr, single, cfg)
+        assert _tree_equal(res[name], res_1), name
+        # communication is paid once, identical to any single-survey pass
+        assert st["wedges_pushed"] == st_1["wedges_pushed"]
+        assert st["pull_requests"] == st_1["pull_requests"]
+
+
+@pytest.mark.parametrize("S,mode", [(1, "push"), (4, "push"), (4, "pushpull")])
+def test_topk_weighted_matches_oracle(survey_refs, S, mode):
+    from repro.core.ref import top_weighted_triangles_ref
+
+    g, _, _, _, _ = survey_refs
+    w_ref, t_ref = top_weighted_triangles_ref(g, 25, weight_col=0)
+    gr, _ = shard_dodgr(g, S=S)
+    cfg, _ = plan_engine(g, S, mode=mode, push_cap=128, pull_q_cap=8)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    res, _ = run(gr, TopKWeightedTriangles(k=25, weight_col=0), cfg)
+    assert (res["weights"] == w_ref).all()
+    assert (res["triangles"].astype(np.int64) == t_ref).all()
+
+
+def test_bundle_duplicate_members_get_distinct_names():
+    b = SurveyBundle([TriangleCount(), TriangleCount(), ClosureTime()])
+    assert b.names == ("TriangleCount", "TriangleCount_1", "ClosureTime")
+
+
+def test_bundle_rejects_duplicate_explicit_names():
+    with pytest.raises(ValueError, match="duplicate"):
+        SurveyBundle([TriangleCount(), ClosureTime()], names=["x", "x"])
+
+
 def test_counter64_carry():
     import jax.numpy as jnp
 
@@ -123,3 +181,48 @@ def test_triangle_count_merge_carry():
         dict(lo=jnp.uint32(0x20), hi=jnp.uint32(1)),
     )
     assert counter64_value(s.merge(states)) == 0xFFFFFFF0 + 0x20 + 2**32
+
+
+def test_triangle_count_merge_s8_near_2_32():
+    """Vectorized limb reduction: 8 shards each holding ≈2³² must carry
+    exactly (satellite #3 regression for the old O(S) python loop)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    lo = (2**32 - 1 - rng.integers(0, 64, 8)).astype(np.uint32)
+    hi = rng.integers(0, 16, 8).astype(np.uint32)
+    expect = int(sum(int(h) * 2**32 + int(l) for h, l in zip(hi, lo)))
+    merged = TriangleCount().merge(dict(lo=jnp.asarray(lo), hi=jnp.asarray(hi)))
+    assert counter64_value(merged) == expect
+
+
+def test_enumerate_overflow_is_explicit():
+    """Ring-buffer overflow: exact total, explicit overflow count, and the
+    surviving sample is duplicate-free (satellite #4)."""
+    from repro.core.ref import count_triangles_ref, survey_triangles_ref
+
+    g = generators.clique(10)  # 120 triangles, capacity 16 → heavy overflow
+    t_ref = count_triangles_ref(g)
+    gr, _ = shard_dodgr(g, S=2)
+    cfg, _ = plan_engine(g, 2, mode="pushpull", push_cap=32, pull_q_cap=4)
+    res, _ = survey_push_pull(gr, Enumerate(capacity=16), cfg)
+    assert res["total_found"] == t_ref
+    assert res["overflowed"] > 0
+    # kept sample = found − overflowed, with no triangle double-counted
+    tris = [tuple(t) for t in res["triangles"].tolist()]
+    assert len(tris) == t_ref - res["overflowed"]
+    assert len(set(tris)) == len(tris)
+    oracle = set()
+    survey_triangles_ref(g, lambda p, q, r, m: oracle.add((p, q, r)))
+    assert set(tris) <= oracle
+
+
+def test_enumerate_no_overflow_reports_zero():
+    from repro.core.ref import count_triangles_ref
+
+    g = generators.karate()
+    gr, _ = shard_dodgr(g, S=2)
+    cfg, _ = plan_engine(g, 2, mode="pushpull", push_cap=32, pull_q_cap=4)
+    res, _ = survey_push_pull(gr, Enumerate(capacity=4096), cfg)
+    assert res["overflowed"] == 0
+    assert res["total_found"] == count_triangles_ref(g)

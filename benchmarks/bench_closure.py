@@ -20,9 +20,11 @@ def run(quick=True):
     g = generators.temporal_social(n, m, seed=7).with_degree_meta()
     S = 4
     gr, _ = shard_dodgr(g, S=S)
-    cfg, _ = plan_engine(g, S, mode="pushpull", push_cap=512, pull_q_cap=16)
+    plan = lambda survey: plan_engine(g, S, survey, mode="pushpull",
+                                      push_cap=512, pull_q_cap=16)[0]
 
     # plain counting (the Fig-9 baseline)
+    cfg = plan(TriangleCount())
     survey_push_pull(gr, TriangleCount(), cfg)  # warm
     t0 = time.time()
     tris, st = survey_push_pull(gr, TriangleCount(), cfg)
@@ -32,6 +34,7 @@ def run(quick=True):
         triangles=tris, wedges_per_s=round(wedges / max(t_count, 1e-9)))))
 
     # closure-time survey (Alg. 4)
+    cfg = plan(ClosureTime())
     survey_push_pull(gr, ClosureTime(), cfg)  # warm
     t0 = time.time()
     res, _ = survey_push_pull(gr, ClosureTime(), cfg)
@@ -44,6 +47,7 @@ def run(quick=True):
     )))
 
     # degree-triple survey (Sec 5.9's nontrivial metadata + callback)
+    cfg = plan(DegreeTriples(deg_col=1))
     survey_push_pull(gr, DegreeTriples(deg_col=1), cfg)  # warm
     t0 = time.time()
     res2, _ = survey_push_pull(gr, DegreeTriples(deg_col=1), cfg)

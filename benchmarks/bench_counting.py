@@ -15,8 +15,8 @@ from repro.graphs import generators
 
 def _time_survey(g, S, mode, push_cap=512, pull_q_cap=16):
     gr, _ = shard_dodgr(g, S=S)
-    cfg, rep = plan_engine(g, S, mode=mode, push_cap=push_cap,
-                           pull_q_cap=pull_q_cap)
+    cfg, rep = plan_engine(g, S, TriangleCount(), mode=mode,
+                           push_cap=push_cap, pull_q_cap=pull_q_cap)
     run = survey_push_only if mode == "push" else survey_push_pull
     t0 = time.time()
     res, st = run(gr, TriangleCount(), cfg)   # includes jit compile

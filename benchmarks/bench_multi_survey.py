@@ -62,25 +62,35 @@ def run(quick=True):
     singles = [_timed(jax.jit(make_survey_fn(mk(), cfg)), gr) for mk in MEMBERS]
     for n in (1, 2, 4):
         bundle = SurveyBundle([mk() for mk in MEMBERS[:n]])
+        # survey-aware plan: the push-entry width is the union of the
+        # members' declared lanes, not the full metadata record
+        _, rep = plan_engine(g, S, bundle, mode="push", push_cap=1024)
         t_bundle = _timed(jax.jit(make_survey_fn(bundle, cfg)), gr)
         t_separate = sum(singles[:n])
         rows.append((f"multi_survey/bundle{n}/S{S}", t_bundle * 1e6, dict(
             separate_us=round(t_separate * 1e6, 1),
             amortization=round(t_separate / t_bundle, 2),
+            push_entry_width=rep.push_entry_width,
+            full_push_entry_width=rep.full_push_entry_width,
+            push_bytes=rep.push_only_bytes,
         )))
 
-    # DOULION sampling: exact vs p=0.1 debiased estimate
+    # DOULION sampling: exact vs p=0.1 debiased estimate. The graph is
+    # sparsified ONCE host-side (stamped); ingestion and planning both
+    # consume the stamped view without a second O(m) sampling pass.
     g2 = generators.rmat(12, 8, seed=0)
     gr_f, _ = shard_dodgr(g2, S=S)
-    cfg_f, _ = plan_engine(g2, S, mode="push", push_cap=4096)
+    cfg_f, _ = plan_engine(g2, S, TriangleCount(), mode="push", push_cap=4096)
     t_full = _timed(jax.jit(make_survey_fn(TriangleCount(), cfg_f)), gr_f)
     merged, _ = jax.jit(make_survey_fn(TriangleCount(), cfg_f))(gr_f)
     true = TriangleCount().finalize(jax.device_get(merged))
 
     p, seed = 0.1, 1
-    gr_s, _ = shard_dodgr(g2, S=S, sample_p=p, sample_seed=seed)
-    cfg_s, _ = plan_engine(g2, S, mode="push", push_cap=1024,
-                           sample_p=p, sample_seed=seed)
+    from repro.core.dodgr import sparsify_edges
+
+    g2_s = sparsify_edges(g2, p, seed)
+    gr_s, _ = shard_dodgr(g2_s, S=S)
+    cfg_s, _ = plan_engine(g2_s, S, TriangleCount(), mode="push", push_cap=1024)
     t_smp = _timed(jax.jit(make_survey_fn(TriangleCount(), cfg_s)), gr_s)
     merged, _ = jax.jit(make_survey_fn(TriangleCount(), cfg_s))(gr_s)
     est = TriangleCount().scale_sampled(

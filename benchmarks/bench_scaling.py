@@ -19,7 +19,8 @@ def run(quick=True):
     g = generators.rmat(9 if quick else 11, 16, seed=5)
     for S in (1, 2, 4, 8):
         gr, _ = shard_dodgr(g, S=S)
-        cfg, rep = plan_engine(g, S, mode="pushpull", push_cap=512, pull_q_cap=16)
+        cfg, rep = plan_engine(g, S, TriangleCount(), mode="pushpull",
+                               push_cap=512, pull_q_cap=16)
         survey_push_pull(gr, TriangleCount(), cfg)  # warm
         t0 = time.time()
         _, st = survey_push_pull(gr, TriangleCount(), cfg)
@@ -33,7 +34,8 @@ def run(quick=True):
     for i, S in enumerate((1, 2, 4, 8)):
         g = generators.rmat(base_scale + i, 8, seed=3)
         gr, _ = shard_dodgr(g, S=S)
-        cfg, _ = plan_engine(g, S, mode="pushpull", push_cap=512, pull_q_cap=16)
+        cfg, _ = plan_engine(g, S, TriangleCount(), mode="pushpull",
+                             push_cap=512, pull_q_cap=16)
         survey_push_pull(gr, TriangleCount(), cfg)  # warm
         t0 = time.time()
         _, st = survey_push_pull(gr, TriangleCount(), cfg)

@@ -17,8 +17,10 @@ def main():
     print(f"temporal graph: {g.n} users, {g.m} timestamped edges")
 
     gr, _ = shard_dodgr(g, S=4)
-    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=1024, pull_q_cap=16)
-    res, st = survey_push_pull(gr, ClosureTime(ts_col=0), cfg)
+    survey = ClosureTime(ts_col=0)
+    cfg, _ = plan_engine(g, 4, survey, mode="pushpull", push_cap=1024,
+                         pull_q_cap=16)
+    res, st = survey_push_pull(gr, survey, cfg)
     tris = int(res["joint"].sum())
     print(f"triangles surveyed: {tris} "
           f"(pushed {st['tris_push']:.0f}, pulled {st['tris_pull']:.0f})")

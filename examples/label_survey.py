@@ -31,8 +31,10 @@ def main():
     g.vmeta_i = hashes[dom_idx][:, None]
 
     gr, _ = shard_dodgr(g, S=4)
-    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=1024, pull_q_cap=16)
-    res, _ = survey_push_pull(gr, LabelTripleSet(capacity=1 << 16), cfg)
+    survey = LabelTripleSet(capacity=1 << 16)
+    cfg, _ = plan_engine(g, 4, survey, mode="pushpull", push_cap=1024,
+                         pull_q_cap=16)
+    res, _ = survey_push_pull(gr, survey, cfg)
 
     print(f"distinct 3-tuples: {len(res['counts'])}, "
           f"collided slots: {res['n_collided_slots']}")

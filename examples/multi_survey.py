@@ -20,7 +20,6 @@ def main():
 
     S = 4
     gr, _ = shard_dodgr(g, S=S)
-    cfg, _ = plan_engine(g, S, mode="pushpull", push_cap=1024, pull_q_cap=16)
 
     # --- one pass, four questions -------------------------------------
     bundle = SurveyBundle([
@@ -29,6 +28,12 @@ def main():
         LabelTripleSet(capacity=1 << 14),
         TopKWeightedTriangles(k=5, weight_col=0),
     ])
+    # survey-aware plan: entries carry only the union of the members'
+    # declared metadata lanes
+    cfg, rep = plan_engine(g, S, bundle, mode="pushpull", push_cap=1024,
+                           pull_q_cap=16)
+    print(f"push entries: {rep.push_entry_width} words projected "
+          f"(full metadata: {rep.full_push_entry_width})")
     res, st = survey_push_pull(gr, bundle, cfg)
     print(f"\none traversal ({st['wedges_pushed']:.0f} wedges pushed, "
           f"{st['pull_requests']:.0f} rows pulled) answered "
@@ -46,10 +51,15 @@ def main():
         print(f"    ({p}, {q}, {r})  weight {w:.0f}")
 
     # --- sampled approximate counting ---------------------------------
+    # sparsify ONCE; the stamped graph feeds ingestion and planning with
+    # no second sampling pass and full provenance checking
+    from repro.core.dodgr import sparsify_edges
+
     p = 0.25
-    gr_s, _ = shard_dodgr(g, S=S, sample_p=p, sample_seed=1)
-    cfg_s, _ = plan_engine(g, S, mode="pushpull", push_cap=1024,
-                           pull_q_cap=16, sample_p=p, sample_seed=1)
+    g_s = sparsify_edges(g, p, 1)
+    gr_s, _ = shard_dodgr(g_s, S=S)
+    cfg_s, _ = plan_engine(g_s, S, TriangleCount(), mode="pushpull",
+                           push_cap=1024, pull_q_cap=16)
     est, st_s = survey_push_pull(gr_s, TriangleCount(), cfg_s)
     err = abs(est - res["TriangleCount"]) / res["TriangleCount"]
     print(f"\nDOULION p={p}: estimate {est:.0f} vs exact "

@@ -21,14 +21,18 @@ def main():
     print(f"DODGr: |W+| = {stats.wedges_total} wedges, "
           f"max out-degree {gr.d_plus_max}")
 
-    # Push-Only (paper Alg. 1)
-    cfg, rep = plan_engine(g, 4, mode="push")
+    # Push-Only (paper Alg. 1); the planner is survey-aware — passing the
+    # survey narrows every entry to the metadata lanes it actually reads
+    # (TriangleCount reads none: 6-word wedge records)
+    cfg, rep = plan_engine(g, 4, TriangleCount(), mode="push")
     count, st = survey_push_only(gr, TriangleCount(), cfg)
     print(f"push-only:  {count} triangles, "
-          f"{rep.push_only_bytes/1e6:.2f} MB communicated")
+          f"{rep.push_only_bytes/1e6:.2f} MB communicated "
+          f"({rep.push_entry_width} words/entry, "
+          f"full metadata would be {rep.full_push_entry_width})")
 
     # Push-Pull (paper Sec. 4.4) — same answer, less communication
-    cfg, rep = plan_engine(g, 4, mode="pushpull")
+    cfg, rep = plan_engine(g, 4, TriangleCount(), mode="pushpull")
     count2, st = survey_push_pull(gr, TriangleCount(), cfg)
     assert count2 == count
     print(f"push-pull:  {count2} triangles, "

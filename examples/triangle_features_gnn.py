@@ -29,7 +29,8 @@ def main():
 
     # --- TriPoll pass: per-vertex triangle counts ---
     gr, _ = shard_dodgr(g, S=4)
-    cfg, _ = plan_engine(g, 4, mode="pushpull", push_cap=512, pull_q_cap=16)
+    cfg, _ = plan_engine(g, 4, LocalVertexCount(n), mode="pushpull",
+                         push_cap=512, pull_q_cap=16)
     counts, _ = survey_push_pull(gr, LocalVertexCount(n), cfg)
     counts = np.asarray(counts, np.float32)
     print(f"triangle participation: max {counts.max():.0f}, "

@@ -4,7 +4,9 @@
 # surveys.py (monoid survey callbacks), counting_set.py, ref.py (oracle).
 from repro.core.dodgr import ShardedDODGr, shard_dodgr
 from repro.core.surveys import (
+    MetaSpec,
     Survey,
+    SurveyBundle,
     TriangleBatch,
     TriangleCount,
     ClosureTime,
@@ -14,11 +16,14 @@ from repro.core.surveys import (
     LocalVertexCount,
 )
 from repro.core.engine import survey_push_only, survey_push_pull, EngineConfig
+from repro.core.pushpull import plan_engine, VolumeReport
 
 __all__ = [
     "ShardedDODGr",
     "shard_dodgr",
+    "MetaSpec",
     "Survey",
+    "SurveyBundle",
     "TriangleBatch",
     "TriangleCount",
     "ClosureTime",
@@ -29,4 +34,6 @@ __all__ = [
     "survey_push_only",
     "survey_push_pull",
     "EngineConfig",
+    "plan_engine",
+    "VolumeReport",
 ]

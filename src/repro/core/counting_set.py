@@ -11,6 +11,13 @@ Exactness: with no slot collisions the table is exact. Collisions are
 silently merged into wrong keys — a documented deviation from the paper's
 growable map (DESIGN.md §7.3). ``n_keys`` ≪ capacity keeps collisions at
 birthday-bound rates.
+
+Hot-path layout: keys, check-hash max, and check-hash min all live in one
+``[cap, K+2]`` uint32 table maintained by a *single* scatter-max —
+int32 keys are mapped order-preservingly into uint32 by flipping the sign
+bit, and the min is recorded as ``max(~chk)`` — so ``increment`` issues
+exactly two scatters (one add for counts, one max) instead of four.
+``finalize`` unpacks to the same readout as the unfused form, bit for bit.
 """
 from __future__ import annotations
 
@@ -33,54 +40,63 @@ def _fold_keys(keys: jax.Array, seed: jnp.uint32) -> jax.Array:
     return acc
 
 
+_SIGN = 0x80000000  # int32 → uint32 order-preserving sign-bit flip
+
+
 @dataclass(frozen=True)
 class CountingSet:
-    """Factory for counting-table state + vectorized increment/merge ops."""
+    """Factory for counting-table state + vectorized increment/merge ops.
+
+    State is ``{count: [cap] i32, packed: [cap, K+2] u32}`` where
+    ``packed[:, :K]`` holds sign-flipped keys, ``packed[:, K]`` the
+    check-hash max and ``packed[:, K+1]`` the *complemented* check-hash
+    min — all three recorded by one scatter-max (the all-zeros init is
+    the identity for every column)."""
 
     capacity: int
     n_key_cols: int
 
     def init(self):
         cap, k = self.capacity, self.n_key_cols
+        # zeros == (keys=int32.min, chk_max=0, chk_min=uint32.max) packed
         return dict(
             count=jnp.zeros((cap,), jnp.int32),
-            keys=jnp.full((cap, k), jnp.iinfo(jnp.int32).min, jnp.int32),
-            chk_min=jnp.full((cap,), jnp.iinfo(jnp.uint32).max, jnp.uint32),
-            chk_max=jnp.zeros((cap,), jnp.uint32),
+            packed=jnp.zeros((cap, k + 2), jnp.uint32),
         )
 
     def increment(self, state, keys: jax.Array, valid: jax.Array, amount=1):
-        """keys [B, K] int32, valid [B] bool — scatter-add into the table."""
+        """keys [B, K] int32, valid [B] bool — two scatters into the table."""
         cap = self.capacity
         slot = (_fold_keys(keys, jnp.uint32(0)) % jnp.uint32(cap)).astype(jnp.int32)
         chk = _fold_keys(keys, _CHK_SEED)
         amt = jnp.where(valid, jnp.asarray(amount, jnp.int32), 0)
         count = state["count"].at[slot].add(amt)
-        # record keys (max is a no-op when all writers agree; collisions are
-        # flagged by the check hash, so an arbitrary winner here is fine)
-        kmin = jnp.int32(jnp.iinfo(jnp.int32).min)
-        keys_w = jnp.where(valid[:, None], keys, kmin)
-        keys_t = state["keys"].at[slot].max(keys_w)
-        big = jnp.uint32(0xFFFFFFFF)
-        chk_min = state["chk_min"].at[slot].min(jnp.where(valid, chk, big))
-        chk_max = state["chk_max"].at[slot].max(jnp.where(valid, chk, jnp.uint32(0)))
-        return dict(count=count, keys=keys_t, chk_min=chk_min, chk_max=chk_max)
+        # keys recorded by max (a no-op when all writers agree; collisions
+        # are flagged by the check hash, so an arbitrary winner is fine)
+        keys_u = keys.astype(jnp.uint32) ^ jnp.uint32(_SIGN)
+        row = jnp.concatenate([keys_u, chk[:, None], (~chk)[:, None]], axis=-1)
+        row = jnp.where(valid[:, None], row, jnp.uint32(0))
+        packed = state["packed"].at[slot].max(row)
+        return dict(count=count, packed=packed)
 
     def merge(self, stacked):
         """Merge tables stacked on axis 0 (the cross-shard reduce)."""
         return dict(
             count=stacked["count"].sum(0),
-            keys=stacked["keys"].max(0),
-            chk_min=stacked["chk_min"].min(0),
-            chk_max=stacked["chk_max"].max(0),
+            packed=stacked["packed"].max(0),
         )
 
     def finalize(self, merged) -> dict:
         """Host-side read-out: {key_tuple: count}, plus collision report."""
         count = np.asarray(merged["count"])
-        keys = np.asarray(merged["keys"])
+        packed = np.asarray(merged["packed"], np.uint32)
+        k = self.n_key_cols
+        keys = (packed[:, :k] ^ np.uint32(_SIGN)).astype(np.int64)
+        keys[keys >= 2**31] -= 2**32  # back to signed int32 values
+        chk_max = packed[:, k]
+        chk_min = ~packed[:, k + 1]
         used = count > 0
-        collided = used & (np.asarray(merged["chk_min"]) != np.asarray(merged["chk_max"]))
+        collided = used & (chk_min != chk_max)
         out = {}
         for i in np.nonzero(used & ~collided)[0]:
             out[tuple(int(x) for x in keys[i])] = int(count[i])

@@ -30,18 +30,26 @@ PAD_ID = np.int32(2**31 - 1)  # sentinel target id for padded edge slots
 PAD_D = np.int32(2**30)       # sentinel degree (sorts after everything real)
 
 
-def meta_widths(dvi: int, dvf: int, dei: int, def_: int):
+def meta_widths(n_vp: int, n_vq: int, n_vr: int,
+                n_epq: int, n_epr: int, n_eqr: int):
     """Wire-format entry widths in 4-byte words, shared by the device engine
     and the host planner so push-vs-pull decisions agree byte-for-byte.
+
+    Takes the *declared lane count* (int + float) of each of the six
+    metadata items — the survey's resolved ``MetaSpec.lane_counts()`` —
+    not the raw storage widths, so the cost model (and therefore every
+    per-(shard, q) push-vs-pull decision) is survey-aware. A full-metadata
+    survey passes ``(dvi+dvf, dvi+dvf, dvi+dvf, dei+def, dei+def,
+    dei+def)`` and reproduces the historic full widths.
 
     (push_entry, row_entry, row_header, request_entry):
       push entry = q,r,key_d,key_h,p,ok + meta(p) + meta(pq) + meta(pr)
       row entry  = nbr,key_d,key_h + meta(q,v) + meta(v)
       row header = row_len + meta(q); request = q + ok
     """
-    w_push = 6 + dvi + dvf + 2 * (dei + def_)
-    w_row = 3 + dei + def_ + dvi + dvf
-    w_hdr = 2 + dvi + dvf
+    w_push = 6 + n_vp + n_epq + n_epr
+    w_row = 3 + n_eqr + n_vr
+    w_hdr = 2 + n_vq
     w_req = 2
     return w_push, w_row, w_hdr, w_req
 
@@ -132,15 +140,29 @@ def sparsify_edges(g: HostGraph, p: float, seed: int = 0) -> HostGraph:
     so count-type survey results debias by 1/p³
     (:meth:`Survey.scale_sampled`). Deterministic in ``seed`` so ingestion
     (:func:`shard_dodgr`) and planning (``pushpull.plan_engine``) sparsify
-    identically and the static plan matches the sampled graph exactly."""
+    identically and the static plan matches the sampled graph exactly.
+
+    The returned graph is *stamped* with ``(sample_p, sample_seed)``; a
+    stamped graph passes through untouched (no second O(m) RNG draw + copy
+    when the same view feeds both ingestion and planning), and a stamp
+    that disagrees with the requested ``(p, seed)`` raises — the runtime
+    provenance cross-check stays intact end to end."""
     if not 0.0 < p <= 1.0:
         raise ValueError(f"sample_p must be in (0, 1], got {p}")
+    if g.sample_p != 1.0:
+        if p != 1.0 and (g.sample_p, g.sample_seed) != (p, seed):
+            raise ValueError(
+                f"graph already sparsified with (p, seed)="
+                f"({g.sample_p}, {g.sample_seed}); cannot re-sparsify with "
+                f"({p}, {seed})")
+        return g
     if p >= 1.0:
         return g
     rng = np.random.default_rng(seed)
     keep = rng.random(g.m) < p
     return HostGraph(g.n, g.src[keep], g.dst[keep], g.spec,
-                     g.vmeta_i, g.vmeta_f, g.emeta_i[keep], g.emeta_f[keep])
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[keep], g.emeta_f[keep],
+                     sample_p=p, sample_seed=seed)
 
 
 def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
@@ -148,9 +170,13 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
 
     ``sample_p < 1`` ingests a DOULION-sparsified view of ``g`` (see
-    :func:`sparsify_edges`); pass the same (p, seed) to ``plan_engine``.
+    :func:`sparsify_edges`); pass the same (p, seed) to ``plan_engine`` —
+    or sparsify once up front and pass the stamped graph to both, which
+    skips the second O(m) sampling pass. The shard provenance always
+    reflects the graph's effective stamp.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
+    sample_p, sample_seed = g.sample_p, g.sample_seed
     p, q, deg, h = orient_edges(g)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
 

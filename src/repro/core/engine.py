@@ -18,6 +18,19 @@ Pull superstep: shard s requests `Adj₊ᵐ(q)` once per (shard, q) for targets
 whose row is cheaper to move than the wedge candidates (the paper's
 per-pair decision), receives padded rows, intersects its local suffixes
 against them (``kernels/intersect``) and folds the survey locally.
+
+Lane projection: both phases gather and exchange only the metadata lanes
+the survey's :class:`~repro.core.surveys.MetaSpec` declares. Push queries
+carry meta(p)/meta(pq)/meta(pr) at declared width; the padded pull reply —
+the dominant ``S·pcap·L`` volume — carries meta(qr)/meta(r) rows and the
+meta(q) header at declared width; fully-unread items skip their gathers
+entirely and reach the fold as zero-width ``[B, 0]`` fields. Wire lanes
+are re-expanded to storage indices (zero-filling undeclared lanes) before
+the fold, so survey ``update`` code is projection-agnostic and
+bitwise-identical to a full-metadata run. The bytes cost model uses the
+same projected widths as the host planner (stamped into
+``EngineConfig.meta_widths`` by ``pushpull.plan_engine``), keeping
+push-vs-pull decisions in lockstep.
 """
 from __future__ import annotations
 
@@ -29,8 +42,9 @@ import numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.dodgr import ShardedDODGr
-from repro.core.surveys import Survey, TriangleBatch
+from repro.core.dodgr import ShardedDODGr, meta_widths
+from repro.core.surveys import (MetaSpec, Survey, TriangleBatch, expand_lanes,
+                                narrow_lanes, project_lanes)
 from repro.utils import ceil_div
 
 BIG_I32 = jnp.int32(2**30)
@@ -60,6 +74,13 @@ class EngineConfig:
     #                               sparsified with (host-side); < 1 debiases
     #                               count-type results by 1/p³ at finalize
     sample_seed: int = 0          # sparsification seed (must match ingestion)
+    project_meta: bool = True     # lane-project metadata to the survey's
+    #                               MetaSpec; False ships all lanes (debug /
+    #                               bitwise-equivalence testing)
+    meta_widths: tuple | None = None  # (w_push, w_row, w_hdr, w_req) words,
+    #                               stamped by pushpull.plan_engine from the
+    #                               survey's resolved spec; None derives them
+    #                               from the running survey at compile time
 
 
 def _constrain(x, cfg: EngineConfig, *trailing):
@@ -135,12 +156,21 @@ def _stream_setup(gr: ShardedDODGr, weight_mask=None):
     return jax.vmap(per_shard)(gr.row_ptr, gr.edge_src, gr.nbr, wm)
 
 
-def _gen_push_queries(gr: ShardedDODGr, st, t, cap):
-    """Build the [S, S_dest, cap] push-query buffers for superstep ``t``."""
+def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec):
+    """Build the [S, S_dest, cap] push-query buffers for superstep ``t``.
+
+    Metadata travels in wire form: only the lanes ``spec`` declares for
+    meta(p), meta(pq), meta(pr); unread items ship zero-width."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+    vp_i = project_lanes(gr.vmeta_i, spec.vp_i)
+    vp_f = project_lanes(gr.vmeta_f, spec.vp_f)
+    epq_i = project_lanes(gr.emeta_i, spec.e_pq_i)
+    epq_f = project_lanes(gr.emeta_f, spec.e_pq_f)
+    epr_i = project_lanes(gr.emeta_i, spec.e_pr_i)
+    epr_f = project_lanes(gr.emeta_f, spec.e_pr_f)
 
     def per_shard(perm, cum, base, stream_len, row_ptr, edge_src, nbr, nbr_d,
-                  nbr_h, emeta_i, emeta_f, vmeta_i, vmeta_f):
+                  nbr_h, epq_i, epq_f, epr_i, epr_f, vp_i, vp_f):
         c = jnp.arange(cap, dtype=jnp.int32)
         offs = t * cap + c[None, :]                       # [S, cap]
         in_stream = offs < stream_len[:, None]
@@ -155,17 +185,17 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, cap):
         lp = jnp.clip(p // S, 0, n_loc - 1)
         out = dict(
             q=nbr[e], r=nbr[r_pos], rd=nbr_d[r_pos], rh=nbr_h[r_pos], p=p,
-            vp_i=vmeta_i[lp], vp_f=vmeta_f[lp],
-            epq_i=emeta_i[e], epq_f=emeta_f[e],
-            epr_i=emeta_i[r_pos], epr_f=emeta_f[r_pos],
+            vp_i=vp_i[lp], vp_f=vp_f[lp],
+            epq_i=epq_i[e], epq_f=epq_f[e],
+            epr_i=epr_i[r_pos], epr_f=epr_f[r_pos],
             ok=in_stream.reshape(-1),
         )
         return jax.tree.map(lambda x: x.reshape((S, cap) + x.shape[1:]), out)
 
     return jax.vmap(per_shard)(
         st["perm"], st["cum"], st["base"], st["stream_len"], gr.row_ptr,
-        gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f,
-        gr.vmeta_i, gr.vmeta_f)
+        gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, epq_i, epq_f, epr_i, epr_f,
+        vp_i, vp_f)
 
 
 def _exchange(tree, cfg: EngineConfig):
@@ -179,16 +209,27 @@ def _exchange(tree, cfg: EngineConfig):
     return jax.tree.map(one, tree)
 
 
-def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig) -> TriangleBatch:
-    """Owner-side wedge closure: search key(r) in Adj₊(q); gather metadata."""
+def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
+                         spec: MetaSpec) -> TriangleBatch:
+    """Owner-side wedge closure: search key(r) in Adj₊(q); gather metadata.
+
+    Shipped items (meta(p)/(pq)/(pr)) arrive in wire form and are expanded
+    to fold form; owner-local items (meta(q)/(r)/(qr)) are gathered at
+    declared width only — unread items skip the gather."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
     n_steps = max(1, int(np.ceil(np.log2(max(2, e_cap)))) + 1)
+    vq_i = narrow_lanes(gr.vmeta_i, spec.vq_i)
+    vq_f = narrow_lanes(gr.vmeta_f, spec.vq_f)
+    vr_i = narrow_lanes(gr.tmeta_i, spec.vr_i)
+    vr_f = narrow_lanes(gr.tmeta_f, spec.vr_f)
+    eqr_i = narrow_lanes(gr.emeta_i, spec.e_qr_i)
+    eqr_f = narrow_lanes(gr.emeta_f, spec.e_qr_f)
 
     if cfg.use_pallas:
         from repro.kernels.wedge_check import ops as wc_ops
 
-    def per_shard(row_ptr, nbr, nbr_d, nbr_h, emeta_i, emeta_f, tmeta_i,
-                  tmeta_f, vmeta_i, vmeta_f, q):
+    def per_shard(row_ptr, nbr, nbr_d, nbr_h, eqr_i, eqr_f, vr_i, vr_f,
+                  vq_i, vq_f, q):
         lq = jnp.clip(q["q"] // S, 0, n_loc - 1)
         lo = row_ptr[lq]
         hi = row_ptr[lq + 1]
@@ -202,23 +243,29 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig) -> TriangleBat
         found = q["ok"] & (pos < hi) & (nbr[pos_c] == q["r"])
         return TriangleBatch(
             p=q["p"], q=q["q"], r=q["r"],
-            vp_i=q["vp_i"], vq_i=vmeta_i[lq], vr_i=tmeta_i[pos_c],
-            vp_f=q["vp_f"], vq_f=vmeta_f[lq], vr_f=tmeta_f[pos_c],
-            e_pq_i=q["epq_i"], e_pr_i=q["epr_i"], e_qr_i=emeta_i[pos_c],
-            e_pq_f=q["epq_f"], e_pr_f=q["epr_f"], e_qr_f=emeta_f[pos_c],
+            vp_i=expand_lanes(q["vp_i"], spec.vp_i),
+            vq_i=vq_i[lq], vr_i=vr_i[pos_c],
+            vp_f=expand_lanes(q["vp_f"], spec.vp_f),
+            vq_f=vq_f[lq], vr_f=vr_f[pos_c],
+            e_pq_i=expand_lanes(q["epq_i"], spec.e_pq_i),
+            e_pr_i=expand_lanes(q["epr_i"], spec.e_pr_i),
+            e_qr_i=eqr_i[pos_c],
+            e_pq_f=expand_lanes(q["epq_f"], spec.e_pq_f),
+            e_pr_f=expand_lanes(q["epr_f"], spec.e_pr_f),
+            e_qr_f=eqr_f[pos_c],
             valid=found,
         )
 
     return jax.vmap(per_shard)(
-        gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f,
-        gr.tmeta_i, gr.tmeta_f, gr.vmeta_i, gr.vmeta_f, qr)
+        gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, eqr_i, eqr_f, vr_i, vr_f,
+        vq_i, vq_f, qr)
 
 
 # ---------------------------------------------------------------------------
 # pull-phase device planning (Sec. 4.4)
 
 
-def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, meta_widths):
+def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths):
     """Per-shard pull decisions + dest-major (dest, pulled, q) edge order.
 
     Returns per-shard arrays (vmapped):
@@ -231,7 +278,7 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, meta_widths):
       dest_start2 [S+1]
     """
     S, e_cap = gr.S, gr.e_cap
-    w_push, w_row, w_hdr, w_req = meta_widths
+    w_push, w_row, w_hdr, w_req = widths
 
     def per_shard(nbr, nbr_dplus, suffix, dest, valid):
         ordq = jnp.argsort(jnp.where(valid, nbr, BIG_I32), stable=True)
@@ -283,12 +330,33 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, meta_widths):
                                st["valid"])
 
 
-def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
-    """One pull superstep: request rows, answer, intersect, emit TriangleBatch."""
+def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
+                    spec: MetaSpec):
+    """One pull superstep: request rows, answer, intersect, emit TriangleBatch.
+
+    The padded reply — ``S·pcap·L`` row slots, the dominant pull-phase
+    volume — carries only the declared meta(qr)/meta(r) lanes plus the
+    declared meta(q) header lanes; local meta(p)/(pq)/(pr) are gathered at
+    declared width."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
     pcap, ecap = cfg.pull_q_cap, cfg.pull_edge_cap
     L = gr.d_plus_max
     n_steps = max(1, int(np.ceil(np.log2(max(2, L)))) + 1)
+
+    # wire-form metadata sources (owner side of the reply)
+    eqr_i_w = project_lanes(gr.emeta_i, spec.e_qr_i)
+    eqr_f_w = project_lanes(gr.emeta_f, spec.e_qr_f)
+    vr_i_w = project_lanes(gr.tmeta_i, spec.vr_i)
+    vr_f_w = project_lanes(gr.tmeta_f, spec.vr_f)
+    vq_i_w = project_lanes(gr.vmeta_i, spec.vq_i)
+    vq_f_w = project_lanes(gr.vmeta_f, spec.vq_f)
+    # fold-form local sources (requester side)
+    vp_i_l = narrow_lanes(gr.vmeta_i, spec.vp_i)
+    vp_f_l = narrow_lanes(gr.vmeta_f, spec.vp_f)
+    epq_i_l = narrow_lanes(gr.emeta_i, spec.e_pq_i)
+    epq_f_l = narrow_lanes(gr.emeta_f, spec.e_pq_f)
+    epr_i_l = narrow_lanes(gr.emeta_i, spec.e_pr_i)
+    epr_f_l = narrow_lanes(gr.emeta_f, spec.e_pr_f)
 
     # --- requester: build q-requests [S_dest, pcap] ---
     def gen_req(qrank2, qbase, qcount, ord2, nbr):
@@ -304,9 +372,9 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
     req = jax.vmap(gen_req)(ps["qrank2"], ps["qbase"], ps["qcount"], ps["ord2"], gr.nbr)
     req_x = _exchange(req, cfg)   # [S_owner, S_src*pcap]
 
-    # --- owner: reply with padded rows ---
-    def answer(row_ptr, nbr, nbr_d, nbr_h, emeta_i, emeta_f, tmeta_i, tmeta_f,
-               vmeta_i, vmeta_f, dplus, q, ok):
+    # --- owner: reply with padded rows (declared lanes only on the wire) ---
+    def answer(row_ptr, nbr, nbr_d, nbr_h, eqr_i, eqr_f, vr_i, vr_f,
+               vq_i, vq_f, dplus, q, ok):
         lq = jnp.clip(q // S, 0, n_loc - 1)
         lo = row_ptr[lq]                                   # [B]
         ln = jnp.where(ok, dplus[lq], 0)
@@ -317,17 +385,17 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
             r_nbr=jnp.where(mask, nbr[slots], BIG_I32),
             r_d=jnp.where(mask, nbr_d[slots], BIG_I32),
             r_h=jnp.where(mask, nbr_h[slots], jnp.uint32(0xFFFFFFFF)),
-            r_ei=emeta_i[slots] * mask[..., None].astype(jnp.int32),
-            r_ef=emeta_f[slots] * mask[..., None],
-            r_ti=tmeta_i[slots] * mask[..., None].astype(jnp.int32),
-            r_tf=tmeta_f[slots] * mask[..., None],
-            vq_i=vmeta_i[lq], vq_f=vmeta_f[lq],
+            r_ei=eqr_i[slots] * mask[..., None].astype(jnp.int32),
+            r_ef=eqr_f[slots] * mask[..., None],
+            r_ti=vr_i[slots] * mask[..., None].astype(jnp.int32),
+            r_tf=vr_f[slots] * mask[..., None],
+            vq_i=vq_i[lq], vq_f=vq_f[lq],
             ln=ln,
         )
 
-    rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i,
-                           gr.emeta_f, gr.tmeta_i, gr.tmeta_f, gr.vmeta_i,
-                           gr.vmeta_f, gr.dplus, req_x["q"], req_x["ok"])
+    rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, eqr_i_w,
+                           eqr_f_w, vr_i_w, vr_f_w, vq_i_w, vq_f_w,
+                           gr.dplus, req_x["q"], req_x["ok"])
     # reply routes back: reshape [S_owner, S_src, pcap, ...] → swap → [S_src, S_owner, pcap,...]
     def back(x):
         y = x.reshape((S, S, pcap) + x.shape[2:])
@@ -335,14 +403,24 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
         return _constrain(y, cfg)
 
     rep = jax.tree.map(back, rep)   # [S_req, S_dest, pcap, ...]
+    # off the wire: re-expand shipped lanes to fold form (storage indices)
+    rep = dict(
+        rep,
+        r_ei=expand_lanes(rep["r_ei"], spec.e_qr_i),
+        r_ef=expand_lanes(rep["r_ef"], spec.e_qr_f),
+        r_ti=expand_lanes(rep["r_ti"], spec.vr_i),
+        r_tf=expand_lanes(rep["r_tf"], spec.vr_f),
+        vq_i=expand_lanes(rep["vq_i"], spec.vq_i),
+        vq_f=expand_lanes(rep["vq_f"], spec.vq_f),
+    )
 
     # --- requester: intersect local suffixes against pulled rows ---
     if cfg.use_pallas:
         from repro.kernels.intersect import ops as is_ops
 
     def intersect(qrank2, qbase, qcount, pulled_end, dest_start2, ord2, pull,
-                  row_ptr, edge_src, nbr, nbr_d, nbr_h, emeta_i, emeta_f,
-                  vmeta_i, vmeta_f, rp):
+                  row_ptr, edge_src, nbr, nbr_d, nbr_h, epq_i, epq_f,
+                  epr_i, epr_f, vp_i, vp_f, rp):
         d = jnp.arange(S, dtype=jnp.int32)
         lo_rank = qbase + t * pcap
         hi_rank = qbase + jnp.minimum((t + 1) * pcap, qcount)
@@ -402,17 +480,17 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
             p=flat(jnp.broadcast_to(edge_src[e][..., None], (S, ecap, L))),
             q=flat(jnp.broadcast_to(nbr[e][..., None], (S, ecap, L))),
             r=flat(ci),
-            vp_i=flat(jnp.broadcast_to(vmeta_i[lp][:, :, None], (S, ecap, L, vmeta_i.shape[-1]))),
-            vq_i=flat(jnp.broadcast_to(pick(rp["vq_i"])[:, :, None], (S, ecap, L, vmeta_i.shape[-1]))),
+            vp_i=flat(jnp.broadcast_to(vp_i[lp][:, :, None], (S, ecap, L, vp_i.shape[-1]))),
+            vq_i=flat(jnp.broadcast_to(pick(rp["vq_i"])[:, :, None], (S, ecap, L, rp["vq_i"].shape[-1]))),
             vr_i=flat(row_at(rp["r_ti"])),
-            vp_f=flat(jnp.broadcast_to(vmeta_f[lp][:, :, None], (S, ecap, L, vmeta_f.shape[-1]))),
-            vq_f=flat(jnp.broadcast_to(pick(rp["vq_f"])[:, :, None], (S, ecap, L, vmeta_f.shape[-1]))),
+            vp_f=flat(jnp.broadcast_to(vp_f[lp][:, :, None], (S, ecap, L, vp_f.shape[-1]))),
+            vq_f=flat(jnp.broadcast_to(pick(rp["vq_f"])[:, :, None], (S, ecap, L, rp["vq_f"].shape[-1]))),
             vr_f=flat(row_at(rp["r_tf"])),
-            e_pq_i=flat(jnp.broadcast_to(emeta_i[e][:, :, None], (S, ecap, L, emeta_i.shape[-1]))),
-            e_pr_i=flat(emeta_i[r_pos]),
+            e_pq_i=flat(jnp.broadcast_to(epq_i[e][:, :, None], (S, ecap, L, epq_i.shape[-1]))),
+            e_pr_i=flat(epr_i[r_pos]),
             e_qr_i=flat(row_at(rp["r_ei"])),
-            e_pq_f=flat(jnp.broadcast_to(emeta_f[e][:, :, None], (S, ecap, L, emeta_f.shape[-1]))),
-            e_pr_f=flat(emeta_f[r_pos]),
+            e_pq_f=flat(jnp.broadcast_to(epq_f[e][:, :, None], (S, ecap, L, epq_f.shape[-1]))),
+            e_pr_f=flat(epr_f[r_pos]),
             e_qr_f=flat(row_at(rp["r_ef"])),
             valid=flat(hit),
         )
@@ -422,8 +500,8 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig):
     tri, checked, overflow = jax.vmap(intersect)(
         ps["qrank2"], ps["qbase"], ps["qcount"], ps["pulled_end"],
         ps["dest_start2"], ps["ord2"], ps["pull"], gr.row_ptr, gr.edge_src,
-        gr.nbr, gr.nbr_d, gr.nbr_h, gr.emeta_i, gr.emeta_f, gr.vmeta_i,
-        gr.vmeta_f, rep)
+        gr.nbr, gr.nbr_d, gr.nbr_h, epq_i_l, epq_f_l, epr_i_l, epr_f_l,
+        vp_i_l, vp_f_l, rep)
     n_req = req["ok"].sum(dtype=jnp.float32)
     return tri, checked, overflow, n_req
 
@@ -437,6 +515,7 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
 
     def run(gr: ShardedDODGr):
         S = gr.S
+        spec = resolve_survey_spec(survey, gr, cfg)
         state = jax.tree.map(lambda x: jnp.repeat(x[None], S, 0), survey.init())
 
         # routing tables live across every superstep: pin them to the shard
@@ -445,9 +524,12 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
         pin = lambda tree: jax.tree.map(lambda a: _constrain(a, cfg), tree)
 
         if cfg.mode == "pushpull":
-            meta_widths = _meta_widths(gr)
+            # planner-stamped widths win so host plan and device decisions
+            # agree even if the plan was built for a different spec
+            mw = (cfg.meta_widths if cfg.meta_widths is not None
+                  else meta_widths(*spec.lane_counts()))
             st0 = pin(_stream_setup(gr))
-            ps = pin(_pull_setup(gr, st0, cfg, meta_widths))
+            ps = pin(_pull_setup(gr, st0, cfg, mw))
             st = pin(_stream_setup(gr, weight_mask=~ps["pull"]))
         else:
             ps = None
@@ -464,9 +546,9 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
 
         def push_step(carry, t):
             state, stats = carry
-            qr = _gen_push_queries(gr, st, t, cfg.push_cap)
+            qr = _gen_push_queries(gr, st, t, cfg.push_cap, spec)
             qx = _exchange(qr, cfg)
-            tri = _answer_push_queries(gr, qx, cfg)
+            tri = _answer_push_queries(gr, qx, cfg, spec)
             state = jax.vmap(survey.update)(state, tri)
             stats = dict(stats)
             stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
@@ -480,7 +562,8 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
         if cfg.mode == "pushpull" and cfg.n_pull_steps > 0:
             def pull_step(carry, t):
                 state, stats = carry
-                tri, checked, overflow, n_req = _pull_superstep(gr, st0, ps, t, cfg)
+                tri, checked, overflow, n_req = _pull_superstep(
+                    gr, st0, ps, t, cfg, spec)
                 state = jax.vmap(survey.update)(state, tri)
                 stats = dict(stats)
                 stats["wedges_pulled"] += checked.sum()
@@ -499,12 +582,17 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
     return run
 
 
-def _meta_widths(gr: ShardedDODGr):
-    from repro.core.dodgr import meta_widths
-
+def resolve_survey_spec(survey: Survey, gr: ShardedDODGr,
+                        cfg: EngineConfig | None = None) -> MetaSpec:
+    """Concretize the survey's declared lanes against the graph's storage
+    widths (all static under jit). ``cfg.project_meta=False`` forces the
+    full-metadata spec — the historic all-lanes behavior."""
     dvi, dvf = gr.vmeta_i.shape[-1], gr.vmeta_f.shape[-1]
     dei, def_ = gr.emeta_i.shape[-1], gr.emeta_f.shape[-1]
-    return meta_widths(dvi, dvf, dei, def_)
+    spec = getattr(survey, "meta_spec", None)
+    if spec is None or (cfg is not None and not cfg.project_meta):
+        spec = MetaSpec.full()
+    return spec.resolve(dvi, dvf, dei, def_)
 
 
 def _finalize_run(survey: Survey, cfg: EngineConfig, merged, stats):

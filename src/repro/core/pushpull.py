@@ -10,6 +10,14 @@ device (``engine._pull_setup``) so the two always agree.
 The same pass yields byte-exact push-only vs push-pull communication volumes
 — the quantities of paper Table 4 — and the pulls-per-rank of Table 3,
 without running the engine.
+
+The plan is *survey-aware*: pass the survey (or its
+:class:`~repro.core.surveys.MetaSpec`) and every byte quantity — and
+therefore the per-(shard, q) push-vs-pull decision under the bytes cost
+model, the superstep counts, and the :class:`VolumeReport` — is computed
+at the survey's projected metadata widths. The resolved widths are
+stamped into ``EngineConfig.meta_widths`` so the device replica of the
+decision rule uses the exact same numbers.
 """
 from __future__ import annotations
 
@@ -19,13 +27,20 @@ import numpy as np
 
 from repro.core.dodgr import orient_edges, meta_widths, sparsify_edges
 from repro.core.engine import EngineConfig
+from repro.core.surveys import MetaSpec, Survey
 from repro.graphs.csr import HostGraph
 from repro.utils import ceil_div
 
 
 @dataclass(frozen=True)
 class VolumeReport:
-    """Analytic communication volumes (paper Tab. 3 / Tab. 4 quantities)."""
+    """Analytic communication volumes (paper Tab. 3 / Tab. 4 quantities).
+
+    Byte quantities use the *projected* per-entry widths (4-byte words) of
+    the survey the plan was built for; the ``*_width`` fields expose them,
+    with ``full_push_entry_width``/``full_pull_row_width`` keeping the
+    all-metadata widths for reference so the projection win is visible
+    analytically (``projected_fraction``)."""
 
     S: int
     wedges_total: int
@@ -37,15 +52,43 @@ class VolumeReport:
     pushpull_bytes: int
     pulls_per_rank: float            # Tab. 3
     pulled_wedges: int               # wedges resolved locally after pulling
+    # --- projected wire-format widths (words per entry) ---
+    push_entry_width: int = 0
+    pull_row_width: int = 0
+    pull_header_width: int = 0
+    request_width: int = 2
+    full_push_entry_width: int = 0
+    full_pull_row_width: int = 0
 
     @property
     def reduction(self) -> float:
         return self.push_only_bytes / max(1, self.pushpull_bytes)
 
+    @property
+    def projected_fraction(self) -> float:
+        """Projected push-entry bytes as a fraction of the full-metadata
+        entry — the analytic volume saving of lane projection."""
+        return self.push_entry_width / max(1, self.full_push_entry_width)
+
+
+def _resolve_plan_spec(survey, g: HostGraph) -> MetaSpec:
+    if isinstance(survey, str):
+        raise TypeError(
+            f"plan_engine's third argument is now the survey (or its "
+            f"MetaSpec), got {survey!r} — pass mode='{survey}' by keyword")
+    if survey is None:
+        spec = MetaSpec.full()
+    elif isinstance(survey, MetaSpec):
+        spec = survey
+    else:
+        spec = getattr(survey, "meta_spec", MetaSpec.full())
+    return spec.resolve(g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)
+
 
 def plan_engine(
     g: HostGraph,
     S: int,
+    survey: Survey | MetaSpec | None = None,
     mode: str = "pushpull",
     push_cap: int = 256,
     pull_q_cap: int = 32,
@@ -57,11 +100,18 @@ def plan_engine(
 ) -> tuple[EngineConfig, VolumeReport]:
     """Plan static superstep counts/capacities and account communication.
 
+    ``survey`` (a :class:`Survey` or bare :class:`MetaSpec`) narrows every
+    byte quantity to the metadata lanes that survey reads; ``None`` plans
+    at full metadata width (the conservative pre-projection behavior).
+
     ``sample_p < 1`` plans against the same DOULION-sparsified view that
     ``shard_dodgr(..., sample_p, sample_seed)`` ingests, and stamps the
-    probability into the config so the engine debiases at finalize.
+    probability into the config so the engine debiases at finalize. A
+    graph already stamped by :func:`~repro.core.dodgr.sparsify_edges` is
+    used as-is (no second sampling pass) and contributes its own stamp.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
+    sample_p, sample_seed = g.sample_p, g.sample_seed
     p, q, deg, h = orient_edges(g)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
     s = (p % S).astype(np.int64)
@@ -78,8 +128,11 @@ def plan_engine(
     pos = np.arange(len(p_o)) - np.repeat(row_start, row_len)
     suffix = (np.repeat(row_len, row_len) - pos - 1).astype(np.int64)
 
-    w_push, w_row, w_hdr, w_req = meta_widths(
-        g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)
+    rspec = _resolve_plan_spec(survey, g)
+    w_push, w_row, w_hdr, w_req = meta_widths(*rspec.lane_counts())
+    full_spec = MetaSpec.full().resolve(g.spec.dvi, g.spec.dvf,
+                                        g.spec.dei, g.spec.def_)
+    w_push_full, w_row_full, _, _ = meta_widths(*full_spec.lane_counts())
 
     # vol(s, q) and the pull decision (paper's inequality)
     sq = s_o * np.int64(g.n) + q_o
@@ -147,6 +200,12 @@ def plan_engine(
         pushpull_bytes=pp_bytes if mode == "pushpull" else push_only_bytes,
         pulls_per_rank=n_pulled_groups / S,
         pulled_wedges=int(suffix[pull_e].sum()),
+        push_entry_width=w_push,
+        pull_row_width=w_row,
+        pull_header_width=w_hdr,
+        request_width=w_req,
+        full_push_entry_width=w_push_full,
+        full_pull_row_width=w_row_full,
     )
     cfg = EngineConfig(
         mode=mode,
@@ -160,5 +219,6 @@ def plan_engine(
         shard_axis=shard_axis,
         sample_p=sample_p,
         sample_seed=sample_seed,
+        meta_widths=(w_push, w_row, w_hdr, w_req),
     )
     return cfg, report

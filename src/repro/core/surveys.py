@@ -2,21 +2,182 @@
 
 A :class:`Survey` is the TPU-native form of the paper's user callback:
 ``init`` builds per-shard state, ``update`` folds a masked batch of
-discovered triangles (all six metadata items present — the engine
-guarantees colocation), ``merge`` combines per-shard states (the paper's
+discovered triangles, ``merge`` combines per-shard states (the paper's
 "combine in an All-Reduce-type operation"), ``finalize`` renders results
 host-side. Every callback in the paper is commutative-associative
 aggregation, so this API loses no generality (DESIGN.md §2).
+
+Lane-projection contract: each survey declares a :class:`MetaSpec` naming
+the metadata lanes it actually reads from the six items of Δ_pqr (vp, vq,
+vr, e_pq, e_pr, e_qr; int and float lanes separately). The engine gathers
+and exchanges *only* the declared lanes and hands ``update`` a projected
+:class:`TriangleBatch`: items the survey never reads arrive zero-width
+(shape ``[B, 0]``), partially-read items are narrowed to
+``max(declared lane) + 1`` with undeclared lanes zero-filled so declared
+lanes keep their storage indices. ``update`` must therefore only index
+lanes its spec declares — under that contract the fold code is unchanged
+and its results are bitwise-identical to a full-metadata batch. The
+default ``Survey.meta_spec`` is :meth:`MetaSpec.full` (every lane of
+every item), so surveys that do not declare anything keep the old
+all-metadata behavior. :class:`SurveyBundle` reads the union of its
+members' specs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 
 import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.counting_set import CountingSet
+
+# ---------------------------------------------------------------------------
+# MetaSpec — survey-declared metadata lanes (communication narrowing)
+
+
+_V_ITEMS = ("vp", "vq", "vr")
+_E_ITEMS = ("e_pq", "e_pr", "e_qr")
+
+
+@dataclass(frozen=True)
+class MetaSpec:
+    """Which metadata lanes a survey reads from each of the six items.
+
+    Not to be confused with :class:`repro.graphs.csr.MetaSpec`, the *graph
+    schema* naming the storage columns — this spec declares which of those
+    columns (by lane index) a survey's ``update`` actually touches, per
+    triangle item. Each field is a tuple of lane indices into the storage
+    columns (``v_int``/``v_float`` for the vertex items ``vp/vq/vr``,
+    ``e_int``/``e_float`` for the edge items ``e_pq/e_pr/e_qr``), or
+    ``None`` meaning *all* lanes of that column — resolved against the
+    concrete graph widths at plan/compile time. The default is *nothing*.
+    """
+
+    vp_i: tuple | None = ()
+    vp_f: tuple | None = ()
+    vq_i: tuple | None = ()
+    vq_f: tuple | None = ()
+    vr_i: tuple | None = ()
+    vr_f: tuple | None = ()
+    e_pq_i: tuple | None = ()
+    e_pq_f: tuple | None = ()
+    e_pr_i: tuple | None = ()
+    e_pr_f: tuple | None = ()
+    e_qr_i: tuple | None = ()
+    e_qr_f: tuple | None = ()
+
+    @classmethod
+    def none(cls) -> "MetaSpec":
+        """Reads no metadata at all (e.g. :class:`TriangleCount`)."""
+        return cls()
+
+    @classmethod
+    def full(cls) -> "MetaSpec":
+        """Reads every lane of every item (the conservative default)."""
+        return cls(**{f.name: None for f in fields(cls)})
+
+    @classmethod
+    def vertices(cls, i=(), f=()) -> "MetaSpec":
+        """Same int/float lanes on all three vertex items vp, vq, vr."""
+        kw = {}
+        for it in _V_ITEMS:
+            kw[f"{it}_i"] = None if i is None else tuple(i)
+            kw[f"{it}_f"] = None if f is None else tuple(f)
+        return cls(**kw)
+
+    @classmethod
+    def edges(cls, i=(), f=()) -> "MetaSpec":
+        """Same int/float lanes on all three edge items e_pq, e_pr, e_qr."""
+        kw = {}
+        for it in _E_ITEMS:
+            kw[f"{it}_i"] = None if i is None else tuple(i)
+            kw[f"{it}_f"] = None if f is None else tuple(f)
+        return cls(**kw)
+
+    def union(self, other: "MetaSpec") -> "MetaSpec":
+        """Per-item lane union (``None`` = all lanes dominates)."""
+
+        def u(a, b):
+            if a is None or b is None:
+                return None
+            return tuple(sorted(set(a) | set(b)))
+
+        return MetaSpec(**{f.name: u(getattr(self, f.name), getattr(other, f.name))
+                           for f in fields(MetaSpec)})
+
+    __or__ = union
+
+    def resolve(self, dvi: int, dvf: int, dei: int, def_: int) -> "MetaSpec":
+        """Concretize against a graph's storage widths: ``None`` becomes
+        every lane; explicit lanes are deduplicated, sorted, and validated."""
+
+        def r(lanes, width, name):
+            if lanes is None:
+                return tuple(range(width))
+            lanes = tuple(sorted(set(int(l) for l in lanes)))
+            if lanes and (lanes[0] < 0 or lanes[-1] >= width):
+                raise ValueError(
+                    f"MetaSpec.{name} declares lanes {lanes} but the graph "
+                    f"stores only {width} lane(s) for that column")
+            return lanes
+
+        kw = {}
+        for f in fields(MetaSpec):
+            width = ((dvi if f.name.endswith("_i") else dvf)
+                     if f.name.startswith("v")
+                     else (dei if f.name.endswith("_i") else def_))
+            kw[f.name] = r(getattr(self, f.name), width, f.name)
+        return MetaSpec(**kw)
+
+    def lane_counts(self) -> tuple[int, int, int, int, int, int]:
+        """Total (int + float) declared lanes per item, in the order
+        :func:`repro.core.dodgr.meta_widths` expects:
+        ``(n_vp, n_vq, n_vr, n_epq, n_epr, n_eqr)``. Resolved specs only."""
+        out = []
+        for it in _V_ITEMS + _E_ITEMS:
+            li, lf = getattr(self, f"{it}_i"), getattr(self, f"{it}_f")
+            if li is None or lf is None:
+                raise ValueError("lane_counts() needs a resolved MetaSpec; "
+                                 "call .resolve(dvi, dvf, dei, def_) first")
+            out.append(len(li) + len(lf))
+        return tuple(out)
+
+
+def eff_width(lanes) -> int:
+    """Fold-slot width of a projected item: 0 when unread, else the smallest
+    width that keeps every declared lane at its storage index."""
+    return 0 if not lanes else max(lanes) + 1
+
+
+def project_lanes(x: jax.Array, lanes) -> jax.Array:
+    """Gather declared lanes from a full-width column: [..., W] → [..., k].
+
+    This is the wire form — only these lanes cross an exchange. An empty
+    spec skips the gather entirely (zero-width slice, no data movement)."""
+    if not lanes:
+        return x[..., :0]
+    if lanes == tuple(range(x.shape[-1])):
+        return x
+    return x[..., list(lanes)]
+
+
+def expand_lanes(x: jax.Array, lanes) -> jax.Array:
+    """Scatter wire lanes back to the fold form: [..., k] → [..., eff_width]
+    with undeclared lanes zero-filled, so folds index storage lanes."""
+    w = eff_width(lanes)
+    if not lanes:
+        return x[..., :0]
+    if lanes == tuple(range(w)):
+        return x
+    out = jnp.zeros(x.shape[:-1] + (w,), x.dtype)
+    return out.at[..., list(lanes)].set(x)
+
+
+def narrow_lanes(x: jax.Array, lanes) -> jax.Array:
+    """Project then re-expand in place — the owner-local (no-wire) form."""
+    return expand_lanes(project_lanes(x, lanes), lanes)
+
 
 # ---------------------------------------------------------------------------
 
@@ -35,21 +196,27 @@ def _sort3(a, b, c):
 
 @dataclass(frozen=True)
 class TriangleBatch:
-    """A masked batch of triangles Δ_pqr with their six metadata items."""
+    """A masked batch of triangles Δ_pqr with their six metadata items.
+
+    Lane-projected: each metadata field carries only the lanes of the
+    running survey's :class:`MetaSpec` (unread items are zero-width
+    ``[B, 0]``; partially-read items are ``[B, max(lane)+1]`` with declared
+    lanes at their storage indices). A full-spec survey sees the classic
+    full-width batch."""
 
     p: jax.Array          # [B] i32 global ids
     q: jax.Array
     r: jax.Array
-    vp_i: jax.Array       # [B, dvi] i32   meta(p)
+    vp_i: jax.Array       # [B, ≤dvi] i32   meta(p)
     vq_i: jax.Array
     vr_i: jax.Array
-    vp_f: jax.Array       # [B, dvf] f32
+    vp_f: jax.Array       # [B, ≤dvf] f32
     vq_f: jax.Array
     vr_f: jax.Array
-    e_pq_i: jax.Array     # [B, dei] i32   meta(p,q)
+    e_pq_i: jax.Array     # [B, ≤dei] i32   meta(p,q)
     e_pr_i: jax.Array
     e_qr_i: jax.Array
-    e_pq_f: jax.Array     # [B, def] f32
+    e_pq_f: jax.Array     # [B, ≤def] f32
     e_pr_f: jax.Array
     e_qr_f: jax.Array
     valid: jax.Array      # [B] bool
@@ -66,7 +233,11 @@ jax.tree_util.register_dataclass(
 
 
 class Survey:
-    """Base survey. Subclasses override the four hooks."""
+    """Base survey. Subclasses override the four hooks and (optionally)
+    declare ``meta_spec`` — the metadata lanes their ``update`` reads. The
+    default is every lane (safe but pays full-width communication)."""
+
+    meta_spec: MetaSpec = MetaSpec.full()
 
     def init(self):
         raise NotImplementedError
@@ -119,6 +290,8 @@ def counter64_value(c) -> int:
 class TriangleCount(Survey):
     """Alg. 2 — global triangle count (metadata ignored)."""
 
+    meta_spec = MetaSpec.none()
+
     def init(self):
         return counter64_zero()
 
@@ -151,6 +324,8 @@ class LocalVertexCount(Survey):
     hashed counting instead (paper Sec. 5.3 notes these are the same engine).
     """
 
+    meta_spec = MetaSpec.none()
+
     def __init__(self, n: int):
         self.n = n
 
@@ -179,6 +354,7 @@ class ClosureTime(Survey):
     def __init__(self, ts_col: int = 0, n_buckets: int = 64):
         self.ts_col = ts_col
         self.nb = n_buckets
+        self.meta_spec = MetaSpec.edges(f=(ts_col,))
 
     def _bucket(self, dt):
         dt = jnp.maximum(dt, 1.0)
@@ -210,6 +386,8 @@ class MaxEdgeLabelDist(Survey):
         self.n_labels = n_labels
         self.ec = e_label_col
         self.vc = v_label_col
+        self.meta_spec = (MetaSpec.vertices(i=(v_label_col,))
+                          | MetaSpec.edges(i=(e_label_col,)))
 
     def init(self):
         return jnp.zeros((self.n_labels,), jnp.int32)
@@ -237,6 +415,7 @@ class DegreeTriples(Survey):
     def __init__(self, deg_col: int = 0, capacity: int = 4096):
         self.deg_col = deg_col
         self.cs = CountingSet(capacity, 3)
+        self.meta_spec = MetaSpec.vertices(i=(deg_col,))
 
     def _lg(self, d):
         return jnp.ceil(jnp.log2(jnp.maximum(d.astype(jnp.float32), 1.0))).astype(jnp.int32)
@@ -272,6 +451,7 @@ class LabelTripleSet(Survey):
         self.vc = v_label_col
         self.require_distinct = require_distinct
         self.cs = CountingSet(capacity, 3)
+        self.meta_spec = MetaSpec.vertices(i=(v_label_col,))
 
     def init(self):
         return self.cs.init()
@@ -306,6 +486,8 @@ class Enumerate(Survey):
     stays the exact count and ``overflowed`` reports how many triangles are
     missing from the buffer (Σ per shard of max(0, n − capacity)).
     """
+
+    meta_spec = MetaSpec.none()
 
     def __init__(self, capacity: int):
         self.capacity = capacity
@@ -352,10 +534,19 @@ class SurveyBundle(Survey):
     polling N questions costs one traversal, not N (paper Sec. 4.5: the
     callback is arbitrary, so a tuple of callbacks is just another
     callback).
+
+    The bundle's ``meta_spec`` is the union of its members' specs, so the
+    engine ships exactly the lanes *some* member reads; each member still
+    only indexes its own declared lanes. A bundle of one is unwrapped: the
+    member's state flows through init/update/merge bare (no tuple-pytree
+    wrapper), eliminating the measured ~1.3× singleton overhead; only
+    ``finalize`` re-wraps the result under the member's name.
     """
 
     def __init__(self, surveys, names=None):
         self.surveys = tuple(surveys)
+        if not self.surveys:
+            raise ValueError("SurveyBundle needs at least one member survey")
         if names is None:
             names, seen = [], {}
             for s in self.surveys:
@@ -368,17 +559,30 @@ class SurveyBundle(Survey):
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate survey names: {names}")
         self.names = tuple(names)
+        self._solo = self.surveys[0] if len(self.surveys) == 1 else None
+        spec = MetaSpec.none()
+        for s in self.surveys:
+            spec = spec | getattr(s, "meta_spec", MetaSpec.full())
+        self.meta_spec = spec
 
     def init(self):
+        if self._solo is not None:
+            return self._solo.init()
         return tuple(s.init() for s in self.surveys)
 
     def update(self, state, tri):
+        if self._solo is not None:
+            return self._solo.update(state, tri)
         return tuple(s.update(st, tri) for s, st in zip(self.surveys, state))
 
     def merge(self, stacked):
+        if self._solo is not None:
+            return self._solo.merge(stacked)
         return tuple(s.merge(st) for s, st in zip(self.surveys, stacked))
 
     def finalize(self, merged):
+        if self._solo is not None:
+            return {self.names[0]: self._solo.finalize(merged)}
         return {n: s.finalize(m)
                 for n, s, m in zip(self.names, self.surveys, merged)}
 
@@ -400,6 +604,7 @@ class TopKWeightedTriangles(Survey):
     def __init__(self, k: int, weight_col: int = 0):
         self.k = k
         self.wc = weight_col
+        self.meta_spec = MetaSpec.edges(f=(weight_col,))
 
     def init(self):
         return dict(

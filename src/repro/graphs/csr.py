@@ -56,6 +56,10 @@ class HostGraph:
     vmeta_f: np.ndarray | None = None  # [n, dvf] float32
     emeta_i: np.ndarray | None = None  # [m, dei] int32
     emeta_f: np.ndarray | None = None  # [m, def] float32
+    # DOULION provenance: stamped by ``dodgr.sparsify_edges`` so a
+    # pre-sparsified graph is sampled once and never silently re-sampled
+    sample_p: float = 1.0
+    sample_seed: int = 0
 
     def __post_init__(self):
         m = len(self.src)
@@ -134,7 +138,8 @@ class HostGraph:
         )
         vmeta_i = np.concatenate([self.vmeta_i, deg[:, None]], axis=1)
         return HostGraph(self.n, self.src, self.dst, spec, vmeta_i,
-                         self.vmeta_f, self.emeta_i, self.emeta_f)
+                         self.vmeta_f, self.emeta_i, self.emeta_f,
+                         sample_p=self.sample_p, sample_seed=self.sample_seed)
 
     def to_networkx(self):
         import networkx as nx

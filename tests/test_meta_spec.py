@@ -1,0 +1,207 @@
+"""MetaSpec lane projection: declared-lanes runs must be bitwise-identical
+to full-metadata runs for every built-in survey, in both engine modes
+(ISSUE 2 acceptance). Deterministic coverage lives here so it runs even
+without hypothesis; the fuzzing twin is test_meta_spec_property.py."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.counting_set import CountingSet
+from repro.core.dodgr import meta_widths, shard_dodgr
+from repro.core.engine import survey_push_only, survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import (
+    ClosureTime,
+    DegreeTriples,
+    Enumerate,
+    LabelTripleSet,
+    LocalVertexCount,
+    MaxEdgeLabelDist,
+    MetaSpec,
+    Survey,
+    SurveyBundle,
+    TopKWeightedTriangles,
+    TriangleCount,
+    eff_width,
+)
+from repro.graphs import generators
+from repro.graphs.csr import HostGraph
+from repro.graphs.csr import MetaSpec as GraphSpec
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.shape == b.shape and (a == b).all()
+    return a == b
+
+
+class EverythingSurvey(Survey):
+    """Reads every lane of every item (meta_spec = full): sums all metadata.
+
+    The all-metadata bundle member for the mixing test — any projection
+    bug that clips or zeroes a lane shifts its checksums."""
+
+    meta_spec = MetaSpec.full()
+
+    def init(self):
+        import jax.numpy as jnp
+
+        return dict(i=jnp.zeros((), jnp.int32), f=jnp.zeros((), jnp.float32))
+
+    def update(self, state, tri):
+        import jax.numpy as jnp
+
+        m = tri.valid.astype(jnp.int32)
+        mi = sum(x.sum(-1) for x in (tri.vp_i, tri.vq_i, tri.vr_i,
+                                     tri.e_pq_i, tri.e_pr_i, tri.e_qr_i))
+        mf = sum(x.sum(-1) for x in (tri.vp_f, tri.vq_f, tri.vr_f,
+                                     tri.e_pq_f, tri.e_pr_f, tri.e_qr_f))
+        return dict(i=state["i"] + (mi * m).sum(),
+                    f=state["f"] + (mf * m.astype(jnp.float32)).sum())
+
+
+def _labeled_graph(n=120, m=1200, seed=4):
+    """temporal_social + degree vertex column + int edge label column, so
+    every built-in survey has the lanes it declares."""
+    g = generators.temporal_social(n, m, seed=seed).with_degree_meta()
+    spec = GraphSpec(v_int=g.spec.v_int, v_float=g.spec.v_float,
+                     e_int=g.spec.e_int + ("elabel",), e_float=g.spec.e_float)
+    lab = (np.arange(g.m, dtype=np.int32) % 7)[:, None]
+    emeta_i = np.concatenate([g.emeta_i, lab], axis=1)
+    return HostGraph(g.n, g.src, g.dst, spec, g.vmeta_i, g.vmeta_f,
+                     emeta_i, g.emeta_f)
+
+
+@pytest.fixture(scope="module")
+def labeled():
+    return _labeled_graph()
+
+
+def _builtin_surveys(g):
+    return [
+        TriangleCount(),
+        LocalVertexCount(g.n),
+        ClosureTime(),
+        MaxEdgeLabelDist(n_labels=8, e_label_col=0, v_label_col=0),
+        DegreeTriples(deg_col=1, capacity=1 << 12),
+        LabelTripleSet(v_label_col=0, capacity=1 << 12),
+        Enumerate(capacity=4096),
+        TopKWeightedTriangles(k=10),
+    ]
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_every_builtin_bitwise_identical_projected_vs_full(labeled, mode):
+    """ISSUE acceptance: declared MetaSpec vs full-metadata batch, bitwise."""
+    g = labeled
+    gr, _ = shard_dodgr(g, S=3)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    for survey in _builtin_surveys(g):
+        cfg, _ = plan_engine(g, 3, survey, mode=mode, push_cap=64, pull_q_cap=4)
+        res_on, _ = run(gr, survey, cfg)
+        res_off, _ = run(gr, survey, replace(cfg, project_meta=False))
+        assert _tree_equal(res_on, res_off), type(survey).__name__
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_bundle_mixing_none_and_full_members(labeled, mode):
+    """A bundle of a no-metadata and an all-metadata member reads the union
+    (= everything) yet each member folds its own lanes bitwise."""
+    g = labeled
+    gr, _ = shard_dodgr(g, S=3)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    mk = lambda: SurveyBundle([TriangleCount(), EverythingSurvey()])
+    bundle = mk()
+    assert bundle.meta_spec.resolve(2, 0, 2, 1) == MetaSpec.full().resolve(2, 0, 2, 1)
+    cfg, _ = plan_engine(g, 3, bundle, mode=mode, push_cap=64, pull_q_cap=4)
+    res_on, _ = run(gr, bundle, cfg)
+    res_off, _ = run(gr, mk(), replace(cfg, project_meta=False))
+    assert _tree_equal(res_on, res_off)
+    # and each member matches its standalone run
+    solo_cfg, _ = plan_engine(g, 3, TriangleCount(), mode=mode, push_cap=64,
+                              pull_q_cap=4)
+    res_tc, _ = run(gr, TriangleCount(), solo_cfg)
+    assert res_on["TriangleCount"] == res_tc
+
+
+def test_volume_report_triangle_count_is_ids_and_keys_only(labeled):
+    """ISSUE acceptance: a no-metadata survey's projected push entry is the
+    bare wedge record — q, r, key_d, key_h, p, ok — 6 words."""
+    cfg, rep = plan_engine(labeled, 4, TriangleCount(), mode="pushpull")
+    assert rep.push_entry_width == 6
+    assert rep.pull_row_width == 3          # nbr, key_d, key_h
+    assert rep.pull_header_width == 2       # row_len + no meta(q)
+    nv = labeled.spec.dvi + labeled.spec.dvf
+    ne = labeled.spec.dei + labeled.spec.def_
+    assert rep.full_push_entry_width == meta_widths(nv, nv, nv, ne, ne, ne)[0]
+    assert cfg.meta_widths == (6, 3, 2, 2)
+    assert rep.projected_fraction == 6 / rep.full_push_entry_width
+
+
+def test_meta_spec_union_and_resolve():
+    a = MetaSpec.vertices(i=(1,))
+    b = MetaSpec.edges(f=(0,))
+    u = a | b
+    assert u.vp_i == (1,) and u.e_qr_f == (0,) and u.vp_f == ()
+    full = MetaSpec.full()
+    assert (u | full) == full
+    r = u.resolve(2, 1, 1, 2)
+    assert r.vp_i == (1,) and r.vq_f == () and r.e_pq_f == (0,)
+    assert full.resolve(2, 1, 1, 2).vp_i == (0, 1)
+    assert r.lane_counts() == (1, 1, 1, 1, 1, 1)
+    with pytest.raises(ValueError, match="lanes"):
+        MetaSpec.vertices(i=(5,)).resolve(2, 1, 1, 2)
+
+
+def test_eff_width_contract():
+    assert eff_width(()) == 0
+    assert eff_width((0,)) == 1
+    assert eff_width((2,)) == 3       # declared lanes keep storage indices
+    assert eff_width((0, 3)) == 4
+
+
+def test_singleton_bundle_state_is_bare(labeled):
+    """Bundle-of-one unwraps the tuple pytree (satellite: singleton
+    overhead) but still namespaces its finalized result."""
+    solo = SurveyBundle([TriangleCount()])
+    assert not isinstance(solo.init(), tuple)
+    gr, _ = shard_dodgr(labeled, S=2)
+    cfg, _ = plan_engine(labeled, 2, solo, mode="push", push_cap=64)
+    res, st = survey_push_only(gr, solo, cfg)
+    res_bare, _ = survey_push_only(gr, TriangleCount(), cfg)
+    assert res == {"TriangleCount": res_bare}
+    assert st["n_surveys"] == 1
+
+
+def test_counting_set_two_scatters_and_exact_readout():
+    """Satellite: the fused hot path issues ≤ 2 scatter ops and finalize
+    is bitwise-identical to the reference counting semantics."""
+    import jax
+    import jax.numpy as jnp
+
+    cs = CountingSet(128, 2)
+    jaxpr = jax.make_jaxpr(lambda s, k, v: cs.increment(s, k, v))(
+        cs.init(), jnp.zeros((16, 2), jnp.int32), jnp.ones((16,), bool))
+    n_scatter = sum(1 for eq in jaxpr.jaxpr.eqns
+                    if eq.primitive.name.startswith("scatter"))
+    assert n_scatter <= 2
+
+    rng = np.random.default_rng(0)
+    keys = rng.integers(-50, 50, size=(512, 2)).astype(np.int32)
+    valid = rng.random(512) < 0.8
+    state = cs.init()
+    for lo in range(0, 512, 64):
+        state = cs.increment(state, jnp.asarray(keys[lo:lo + 64]),
+                             jnp.asarray(valid[lo:lo + 64]))
+    out = cs.finalize(cs.merge(jax.tree.map(lambda x: x[None], state)))
+    from collections import Counter
+
+    ref = Counter(tuple(int(v) for v in k) for k, ok in zip(keys, valid) if ok)
+    mass = sum(out["counts"].values()) + out["count_in_collided"]
+    assert mass == sum(ref.values())
+    for k, v in out["counts"].items():
+        assert ref[k] == v

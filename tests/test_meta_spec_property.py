@@ -1,0 +1,34 @@
+"""Hypothesis twin of test_meta_spec.py: random graphs/metadata, random
+built-in survey (or a bundle mixing a no-metadata and an all-metadata
+member), both engine modes — projected run ≡ full-metadata run, bitwise."""
+from dataclasses import replace
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_only, survey_push_pull
+from repro.core.pushpull import plan_engine
+from repro.core.surveys import SurveyBundle, TriangleCount
+
+from test_meta_spec import (EverythingSurvey, _builtin_surveys,
+                            _labeled_graph, _tree_equal)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.integers(60, 400),
+       mode=st.sampled_from(["push", "pushpull"]),
+       idx=st.integers(0, 8))
+def test_projection_bitwise_property(seed, m, mode, idx):
+    g = _labeled_graph(n=60, m=m, seed=seed)
+    surveys = _builtin_surveys(g) + [SurveyBundle([TriangleCount(),
+                                                   EverythingSurvey()])]
+    survey = surveys[idx]
+    gr, _ = shard_dodgr(g, S=3)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    cfg, _ = plan_engine(g, 3, survey, mode=mode, push_cap=64, pull_q_cap=4)
+    res_on, _ = run(gr, survey, cfg)
+    res_off, _ = run(gr, survey, replace(cfg, project_meta=False))
+    assert _tree_equal(res_on, res_off)

@@ -12,7 +12,7 @@ from repro.graphs import generators
 
 def test_push_only_volume_is_wedges():
     g = generators.rmat(7, 8, seed=1)
-    w_push = meta_widths(0, 0, 0, 0)[0]
+    w_push = meta_widths(0, 0, 0, 0, 0, 0)[0]
     _, rep = plan_engine(g, 4, mode="push")
     assert rep.push_only_entries == wedge_count_ref(g)
     assert rep.push_only_bytes == rep.push_only_entries * w_push * 4

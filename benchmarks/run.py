@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (bench_closure, bench_counting, bench_kernels,
                             bench_metadata, bench_multi_survey,
-                            bench_pushpull, bench_scaling)
+                            bench_pushpull, bench_scaling, bench_streaming)
 
     suites = dict(
         pushpull=bench_pushpull,     # Tab. 3 / Tab. 4
@@ -32,6 +32,7 @@ def main() -> None:
         metadata=bench_metadata,     # Fig. 9
         kernels=bench_kernels,       # kernel layer
         multi_survey=bench_multi_survey,  # SurveyBundle amortization + DOULION
+        streaming=bench_streaming,   # delta engine vs full recompute
     )
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only.split(",")}

@@ -1,0 +1,87 @@
+"""Streaming triangle surveys: append timestamped edge batches, poll only
+the NEW triangles each epoch, and accumulate — never re-poll the snapshot.
+
+The walkthrough: a Reddit-like comment stream arrives in batches. Epoch 1
+ingests the history; each later epoch appends a batch with
+``DeltaGraph.append_edges``, shards only the *delta frontier* (new edges +
+old edges touching a new endpoint), and runs ``survey_delta`` — the engine
+generates wedges only for the three new-triangle classes (new-old-old,
+new-new-old, new-new-new) and the survey's ``merge_epochs`` folds each
+epoch's answer into the running state. After K batches the accumulated
+state is bitwise-identical to one full survey of the final graph, at a
+fraction of the per-epoch cost.
+
+    PYTHONPATH=src python examples/streaming_survey.py
+"""
+import numpy as np
+
+from repro.core.dodgr import shard_delta, shard_dodgr
+from repro.core.engine import finalize_epochs, survey_delta, survey_push_pull
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.surveys import ClosureTime, SurveyBundle, TriangleCount
+from repro.graphs.csr import HostGraph
+from repro.graphs import generators
+
+
+def survey():
+    # re-instantiate per run: survey objects are cheap factories
+    return SurveyBundle([TriangleCount(), ClosureTime(ts_col=0)])
+
+
+def main():
+    S = 4
+    g = generators.temporal_social(1500, 30000, seed=11)
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    K, batch_sz = 4, 150
+    hist, tail = order[:-K * batch_sz], order[-K * batch_sz:]
+    batches = np.array_split(tail, K)
+    print(f"stream: {len(hist)} history edges, then {K} batches of "
+          f"~{batch_sz} timestamped edges\n")
+
+    # --- epoch 1: the history ---------------------------------------
+    base = HostGraph(g.n, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                     g.spec, g.vmeta_i, g.vmeta_f)
+    dg = base.append_edges(g.src[hist], g.dst[hist],
+                           emeta_i=g.emeta_i[hist], emeta_f=g.emeta_f[hist])
+    gr, _ = shard_delta(dg, S)
+    cfg, _ = plan_delta(dg, S, survey(), mode="pushpull", push_cap=1024)
+    state, st = survey_delta(gr, survey(), cfg)
+    print(f"epoch 1 (history): {st['tris_push'] + st['tris_pull']:.0f} "
+          f"triangles")
+
+    # --- stream the batches ------------------------------------------
+    for idx in batches:
+        dg = dg.append_edges(g.src[idx], g.dst[idx],
+                             emeta_i=g.emeta_i[idx], emeta_f=g.emeta_f[idx])
+        h, edge_new = dg.frontier()
+        gr, _ = shard_delta(dg, S)
+        cfg, rep = plan_delta(dg, S, survey(), mode="pushpull", push_cap=1024)
+        state, st = survey_delta(gr, survey(), cfg, state)
+        running = finalize_epochs(survey(), state)
+        print(f"epoch {dg.epoch}: +{dg.m_delta} edges → frontier {h.m} of "
+              f"{dg.m} edges, {rep.gen_wedges} of {rep.wedges_total} frontier"
+              f" wedges generated; +{st['tris_push'] + st['tris_pull']:.0f} "
+              f"new triangles (running total "
+              f"{running['TriangleCount']})")
+
+    # --- the receipts: recompute the final snapshot from scratch -----
+    res = finalize_epochs(survey(), state)
+    u = dg.union()
+    gr_u, _ = shard_dodgr(u, S, orient="stable")
+    cfg_u, rep_u = plan_engine(u, S, survey(), mode="pushpull",
+                               push_cap=1024, orient="stable")
+    res_full, _ = survey_push_pull(gr_u, survey(), cfg_u)
+    same_count = res["TriangleCount"] == res_full["TriangleCount"]
+    same_hist = (res["ClosureTime"]["joint"]
+                 == res_full["ClosureTime"]["joint"]).all()
+    print(f"\nfull recompute agrees bitwise: count={same_count} "
+          f"closure-histogram={bool(same_hist)}")
+    print(f"final-epoch exchanged bytes: {rep.pushpull_bytes} incremental "
+          f"vs {rep_u.pushpull_bytes} recompute "
+          f"({rep_u.pushpull_bytes / rep.pushpull_bytes:.1f}x less)")
+    close = res["ClosureTime"]["close_marginal"]
+    print(f"modal closure time so far: 2^{int(np.argmax(close))} s")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,10 +51,42 @@ class CountingSet:
     ``packed[:, :K]`` holds sign-flipped keys, ``packed[:, K]`` the
     check-hash max and ``packed[:, K+1]`` the *complemented* check-hash
     min — all three recorded by one scatter-max (the all-zeros init is
-    the identity for every column)."""
+    the identity for every column).
+
+    ``backend`` routes the count scatter-add: ``"scatter"`` is the XLA
+    ``.at[].add`` path, ``"pallas"`` the tiled one-hot-reduction kernel
+    (``kernels/hist``) — the TPU-native scatter idiom, bitwise-identical to
+    the scatter path (integer adds). ``"auto"`` (default) picks Pallas on a
+    real TPU backend and falls back to scatter elsewhere, so CPU test runs
+    are unchanged. The key/check-hash scatter-max stays on the XLA path in
+    every backend."""
 
     capacity: int
     n_key_cols: int
+    backend: str = "auto"           # "auto" | "pallas" | "scatter"
+    pallas_interpret: bool | None = None  # None: compiled on real TPU,
+    #                                       interpret elsewhere (CPU runs)
+
+    def __post_init__(self):
+        if self.backend not in ("auto", "pallas", "scatter"):
+            raise ValueError(f"unknown CountingSet backend {self.backend!r}")
+
+    def _use_pallas(self) -> bool:
+        if self.backend == "auto":
+            return jax.default_backend() == "tpu"
+        return self.backend == "pallas"
+
+    def _interpret(self) -> bool:
+        if self.pallas_interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.pallas_interpret
+
+    def _cap_tile(self) -> int:
+        # largest tile ≤ 512 dividing capacity (hist kernel grid constraint)
+        ct = min(512, self.capacity)
+        while self.capacity % ct:
+            ct -= 1
+        return max(1, ct)
 
     def init(self):
         cap, k = self.capacity, self.n_key_cols
@@ -70,7 +102,15 @@ class CountingSet:
         slot = (_fold_keys(keys, jnp.uint32(0)) % jnp.uint32(cap)).astype(jnp.int32)
         chk = _fold_keys(keys, _CHK_SEED)
         amt = jnp.where(valid, jnp.asarray(amount, jnp.int32), 0)
-        count = state["count"].at[slot].add(amt)
+        if self._use_pallas():
+            from repro.kernels.hist.ops import hist_add
+
+            # OOB slots are dropped by the kernel — mask invalid to -1
+            count = state["count"] + hist_add(
+                jnp.where(valid, slot, -1), amt, cap,
+                cap_tile=self._cap_tile(), interpret=self._interpret())
+        else:
+            count = state["count"].at[slot].add(amt)
         # keys recorded by max (a no-op when all writers agree; collisions
         # are flagged by the check hash, so an arbitrary winner is fine)
         keys_u = keys.astype(jnp.uint32) ^ jnp.uint32(_SIGN)
@@ -84,6 +124,16 @@ class CountingSet:
         return dict(
             count=stacked["count"].sum(0),
             packed=stacked["packed"].max(0),
+        )
+
+    def merge_epochs(self, prev, delta):
+        """Combine two merged tables over disjoint triangle sets (the delta
+        engine's epoch accumulation): counts add, key/check-hash records
+        max-merge exactly like the cross-shard reduce, so accumulation is
+        bitwise-identical to one table over the union."""
+        return dict(
+            count=prev["count"] + delta["count"],
+            packed=jnp.maximum(prev["packed"], delta["packed"]),
         )
 
     def finalize(self, merged) -> dict:

@@ -23,11 +23,13 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.graphs.csr import HostGraph
+from repro.graphs.csr import DeltaGraph, HostGraph
 from repro.utils import ceil_div, splitmix32_np
 
 PAD_ID = np.int32(2**31 - 1)  # sentinel target id for padded edge slots
 PAD_D = np.int32(2**30)       # sentinel degree (sorts after everything real)
+
+ORIENTS = ("degree", "stable")
 
 
 def meta_widths(n_vp: int, n_vq: int, n_vr: int,
@@ -79,11 +81,20 @@ class ShardedDODGr:
     vmeta_f: jax.Array   # [S, n_loc, dvf] f32
     vdeg: jax.Array      # [S, n_loc] i32 full degree of local vertex
     dplus: jax.Array     # [S, n_loc] i32 out-degree of local vertex
+    # --- delta overlay (epoch-aware ingestion) ---
+    nbr_new: jax.Array    # [S, e_cap] bool — edge arrived this epoch
+    delta_gen: jax.Array  # [S, e_cap] bool — edge may open a new-triangle wedge
     # --- DOULION sampling provenance (static) — the engine entry points
     # cross-check these against EngineConfig so a graph ingested with one
     # (p, seed) can never run under a plan built for another ---
     sample_p: float = 1.0
     sample_seed: int = 0
+    # --- epoch provenance (static): orientation key, current epoch, and
+    # whether this is a delta frontier (cross-checked like sample_p so a
+    # frontier can never run under a full-snapshot plan or vice versa) ---
+    orient: str = "degree"
+    epoch: int = 0
+    is_delta: bool = False
 
     def __post_init__(self):
         pass
@@ -99,10 +110,10 @@ jax.tree_util.register_dataclass(
     data_fields=[
         "row_ptr", "edge_src", "nbr", "nbr_d", "nbr_h", "nbr_dplus",
         "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
-        "vdeg", "dplus",
+        "vdeg", "dplus", "nbr_new", "delta_gen",
     ],
     meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max",
-                 "sample_p", "sample_seed"],
+                 "sample_p", "sample_seed", "orient", "epoch", "is_delta"],
 )
 
 
@@ -117,9 +128,26 @@ class RoutingStats:
     wedge_per_shard: np.ndarray  # [S]
 
 
-def orient_edges(g: HostGraph):
-    """Host orientation of every undirected edge by the ``<₊`` key."""
-    deg = g.degrees()
+def orient_edges(g: HostGraph, orient: str = "degree"):
+    """Host orientation of every undirected edge by the ``<₊`` key.
+
+    ``orient`` picks the first component of the total order:
+
+    * ``"degree"`` — the paper's degree-ordered key ``(deg, hash, id)``;
+      best work bound, but the key *changes* as edges are appended.
+    * ``"stable"`` — the epoch-stable key ``(0, hash, id)``: a vertex's rank
+      never moves when later batches arrive, so every epoch of a delta
+      sequence (and the full recompute it is checked against) assigns each
+      triangle the same ``(p, q, r)`` roles — the bitwise-identity
+      requirement of ``merge_epochs``.
+
+    Returns ``(p, q, okey, h)`` where ``okey`` is the per-vertex first key
+    component (the *orientation* key, not necessarily the degree).
+    """
+    if orient not in ORIENTS:
+        raise ValueError(f"orient must be one of {ORIENTS}, got {orient!r}")
+    deg = (g.degrees() if orient == "degree"
+           else np.zeros(g.n, np.int64))
     h = splitmix32_np(np.arange(g.n, dtype=np.uint32)).astype(np.int64)
     u, v = g.src, g.dst
     ku = np.stack([deg[u], h[u], u], 1)
@@ -165,8 +193,38 @@ def sparsify_edges(g: HostGraph, p: float, seed: int = 0) -> HostGraph:
                      sample_p=p, sample_seed=seed)
 
 
+def delta_gen_mask(q_s: np.ndarray, row_start: np.ndarray, row_len: np.ndarray,
+                   new_s: np.ndarray, touched: np.ndarray) -> np.ndarray:
+    """Per-edge wedge-generator mask for a delta frontier, in shard-sorted
+    edge order. Edge (p→q) at position i may open a wedge of a triangle with
+    ≥1 delta edge iff
+
+    * the edge itself is new (new-old-old / new-new-* classes via pq), or
+    * a *later* edge in p's row is new (the wedge partner pr is new), or
+    * ``q`` is a delta endpoint AND some later edge in the row targets a
+      delta endpoint (the closing edge qr may be new — the old-old-new
+      class needs *both* endpoints of qr in V(D); the owner-side newness
+      check settles it).
+
+    Shared by ``shard_dodgr`` (device mask) and ``pushpull.plan_engine``
+    (volume accounting + superstep counts) so the two agree exactly.
+    """
+    if len(q_s) == 0:
+        return np.zeros(0, bool)
+    idx = np.arange(len(q_s))
+    row_end = np.repeat(row_start + row_len, row_len)
+    cum = np.cumsum(new_s.astype(np.int64))
+    suffix_new = (cum[row_end - 1] - cum[idx]) > 0
+    t_q = touched[q_s]
+    cum_t = np.cumsum(t_q.astype(np.int64))
+    suffix_touched = (cum_t[row_end - 1] - cum_t[idx]) > 0
+    return new_s | suffix_new | (t_q & suffix_touched)
+
+
 def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
-                sample_p: float = 1.0, sample_seed: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
+                sample_p: float = 1.0, sample_seed: int = 0,
+                edge_new: np.ndarray | None = None, orient: str = "degree",
+                epoch: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
     """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
 
     ``sample_p < 1`` ingests a DOULION-sparsified view of ``g`` (see
@@ -174,10 +232,18 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     or sparsify once up front and pass the stamped graph to both, which
     skips the second O(m) sampling pass. The shard provenance always
     reflects the graph's effective stamp.
+
+    ``edge_new`` ([m] bool, aligned with ``g``'s edge list) ingests ``g`` as
+    a *delta frontier*: per-edge newness flags and wedge-generator masks are
+    sharded alongside the adjacency and the result is stamped
+    ``is_delta=True`` at ``epoch`` — consumed by ``engine.survey_delta``
+    under a matching ``pushpull.plan_delta`` plan. Prefer the
+    :func:`shard_delta` wrapper, which derives frontier + flags from a
+    :class:`~repro.graphs.csr.DeltaGraph`.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
-    p, q, deg, h = orient_edges(g)
+    p, q, deg, h = orient_edges(g, orient)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
 
     owner = (p % S).astype(np.int64)
@@ -218,9 +284,30 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     vmeta_f = alloc((S, n_loc, dvf), np.float32)
     vdeg = alloc((S, n_loc), np.int32)
     dplus_arr = alloc((S, n_loc), np.int32)
+    nbr_new = alloc((S, e_cap), bool, False)
+    # all-true for a static snapshot: the engine only consults the mask in
+    # delta mode, where it restricts wedge generation to the three
+    # new-triangle classes
+    delta_gen = alloc((S, e_cap), bool, edge_new is None)
 
     emeta_i_src = g.emeta_i[order]
     emeta_f_src = g.emeta_f[order]
+
+    # position within row: edges are sorted by (owner, local, key); compute
+    # per-edge suffix length = (row_end - pos - 1)
+    row_key = owner_s * n_loc + local_s
+    _, row_start_idx, row_len = np.unique(row_key, return_index=True, return_counts=True)
+    pos_in_row = np.arange(len(p_s)) - np.repeat(row_start_idx, row_len)
+    suffix = np.repeat(row_len, row_len) - pos_in_row - 1
+
+    if edge_new is not None:
+        new_s = np.asarray(edge_new, bool)[order]
+        touched = np.zeros(g.n, bool)
+        touched[g.src[edge_new]] = True
+        touched[g.dst[edge_new]] = True
+        gen_s = delta_gen_mask(q_s, row_start_idx, row_len, new_s, touched)
+    else:
+        new_s = gen_s = None
 
     for s in range(S):
         lo, hi = start[s], start[s + 1]
@@ -234,6 +321,10 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         emeta_f[s, :k] = emeta_f_src[lo:hi]
         tmeta_i[s, :k] = g.vmeta_i[q_s[lo:hi]]
         tmeta_f[s, :k] = g.vmeta_f[q_s[lo:hi]]
+        if new_s is not None:
+            nbr_new[s, :k] = new_s[lo:hi]
+            delta_gen[s, :k] = gen_s[lo:hi]
+            delta_gen[s, k:] = False
         rows = np.bincount(local_s[lo:hi], minlength=n_loc)
         row_ptr[s, 1:] = np.cumsum(rows)
         ids = np.arange(s, g.n, S, dtype=np.int64)
@@ -244,13 +335,6 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         dplus_arr[s, :nv] = d_plus[ids]
 
     # --- routing stats for static superstep planning ---
-    suffix = np.zeros(len(p_s), np.int64)
-    # position within row: edges are sorted by (owner, local, key); compute
-    # per-edge suffix length = (row_end - pos - 1)
-    row_key = owner_s * n_loc + local_s
-    _, row_start_idx, row_len = np.unique(row_key, return_index=True, return_counts=True)
-    pos_in_row = np.arange(len(p_s)) - np.repeat(row_start_idx, row_len)
-    suffix = np.repeat(row_len, row_len) - pos_in_row - 1
     dest = (q_s % S).astype(np.int64)
     sd = owner_s * S + dest
     stream = np.bincount(sd, weights=suffix, minlength=S * S).astype(np.int64)
@@ -268,6 +352,7 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         S=S, n_global=g.n, n_loc=n_loc, e_cap=e_cap,
         d_plus_max=max(1, d_plus_max),
         sample_p=sample_p, sample_seed=sample_seed,
+        orient=orient, epoch=epoch, is_delta=edge_new is not None,
         row_ptr=jnp.asarray(row_ptr), edge_src=jnp.asarray(edge_src),
         nbr=jnp.asarray(nbr), nbr_d=jnp.asarray(nbr_d),
         nbr_h=jnp.asarray(nbr_h), nbr_dplus=jnp.asarray(nbr_dp),
@@ -275,8 +360,24 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         tmeta_i=jnp.asarray(tmeta_i), tmeta_f=jnp.asarray(tmeta_f),
         vmeta_i=jnp.asarray(vmeta_i), vmeta_f=jnp.asarray(vmeta_f),
         vdeg=jnp.asarray(vdeg), dplus=jnp.asarray(dplus_arr),
+        nbr_new=jnp.asarray(nbr_new), delta_gen=jnp.asarray(delta_gen),
     )
     return gr, stats
+
+
+def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
+                orient: str = "stable") -> tuple[ShardedDODGr, RoutingStats]:
+    """Shard the epoch's delta frontier with the same cyclic owner map as the
+    full snapshot (owner ``v % S`` is id-based, so frontier shards align with
+    union shards) and stamp epoch provenance.
+
+    Default orientation is ``"stable"`` — the epoch-stable key every epoch
+    of a delta sequence must share for ``merge_epochs`` to be bitwise-exact
+    against a full recompute (see :func:`orient_edges`).
+    """
+    h, edge_new = dg.frontier()
+    return shard_dodgr(h, S, e_cap=e_cap, edge_new=edge_new, orient=orient,
+                       epoch=dg.epoch)
 
 
 def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,
@@ -299,4 +400,6 @@ def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,
         vmeta_f=sd((S, n_loc, dvf), jnp.float32),
         vdeg=sd((S, n_loc), jnp.int32),
         dplus=sd((S, n_loc), jnp.int32),
+        nbr_new=sd((S, e_cap), jnp.bool_),
+        delta_gen=sd((S, e_cap), jnp.bool_),
     )

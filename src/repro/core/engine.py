@@ -19,6 +19,16 @@ whose row is cheaper to move than the wedge candidates (the paper's
 per-pair decision), receives padded rows, intersects its local suffixes
 against them (``kernels/intersect``) and folds the survey locally.
 
+Delta mode (epoch-incremental surveys): when ``EngineConfig.delta`` is set
+the graph is a *delta frontier* (``dodgr.shard_delta``) and the same two
+phases run restricted — wedge generation is masked to the ``delta_gen``
+edges (only wedges that can belong to a triangle with ≥1 new edge), push
+entries and pulled rows carry per-edge newness bits, and the fold's
+``valid`` mask additionally requires ≥1 new edge, so exactly the
+new-old-old / new-new-old / new-new-new triangle classes are surveyed.
+``survey_delta`` accumulates epochs through ``Survey.merge_epochs``;
+``finalize_epochs`` renders the running state.
+
 Lane projection: both phases gather and exchange only the metadata lanes
 the survey's :class:`~repro.core.surveys.MetaSpec` declares. Push queries
 carry meta(p)/meta(pq)/meta(pr) at declared width; the padded pull reply —
@@ -81,6 +91,13 @@ class EngineConfig:
     #                               stamped by pushpull.plan_engine from the
     #                               survey's resolved spec; None derives them
     #                               from the running survey at compile time
+    delta: bool = False           # epoch-incremental mode: restrict wedge
+    #                               generation to the delta_gen mask and fold
+    #                               only triangles with ≥1 new edge
+    epoch: int = 0                # epoch the delta plan was built for (must
+    #                               match the frontier's stamp)
+    orient: str = "degree"        # orientation key the plan assumed ("degree"
+    #                               static default, "stable" for delta epochs)
 
 
 def _constrain(x, cfg: EngineConfig, *trailing):
@@ -156,11 +173,14 @@ def _stream_setup(gr: ShardedDODGr, weight_mask=None):
     return jax.vmap(per_shard)(gr.row_ptr, gr.edge_src, gr.nbr, wm)
 
 
-def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec):
+def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec,
+                      delta: bool = False):
     """Build the [S, S_dest, cap] push-query buffers for superstep ``t``.
 
     Metadata travels in wire form: only the lanes ``spec`` declares for
-    meta(p), meta(pq), meta(pr); unread items ship zero-width."""
+    meta(p), meta(pq), meta(pr); unread items ship zero-width. In delta mode
+    the entry additionally carries the wedge edges' newness bits so the
+    owner can settle the ≥1-new-edge test at closure."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
     vp_i = project_lanes(gr.vmeta_i, spec.vp_i)
     vp_f = project_lanes(gr.vmeta_f, spec.vp_f)
@@ -170,7 +190,7 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec):
     epr_f = project_lanes(gr.emeta_f, spec.e_pr_f)
 
     def per_shard(perm, cum, base, stream_len, row_ptr, edge_src, nbr, nbr_d,
-                  nbr_h, epq_i, epq_f, epr_i, epr_f, vp_i, vp_f):
+                  nbr_h, nbr_new, epq_i, epq_f, epr_i, epr_f, vp_i, vp_f):
         c = jnp.arange(cap, dtype=jnp.int32)
         offs = t * cap + c[None, :]                       # [S, cap]
         in_stream = offs < stream_len[:, None]
@@ -190,12 +210,15 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec):
             epr_i=epr_i[r_pos], epr_f=epr_f[r_pos],
             ok=in_stream.reshape(-1),
         )
+        if delta:
+            out["pq_new"] = nbr_new[e]
+            out["pr_new"] = nbr_new[r_pos]
         return jax.tree.map(lambda x: x.reshape((S, cap) + x.shape[1:]), out)
 
     return jax.vmap(per_shard)(
         st["perm"], st["cum"], st["base"], st["stream_len"], gr.row_ptr,
-        gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, epq_i, epq_f, epr_i, epr_f,
-        vp_i, vp_f)
+        gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, epq_i, epq_f,
+        epr_i, epr_f, vp_i, vp_f)
 
 
 def _exchange(tree, cfg: EngineConfig):
@@ -228,8 +251,8 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
     if cfg.use_pallas:
         from repro.kernels.wedge_check import ops as wc_ops
 
-    def per_shard(row_ptr, nbr, nbr_d, nbr_h, eqr_i, eqr_f, vr_i, vr_f,
-                  vq_i, vq_f, q):
+    def per_shard(row_ptr, nbr, nbr_d, nbr_h, nbr_new, eqr_i, eqr_f, vr_i,
+                  vr_f, vq_i, vq_f, q):
         lq = jnp.clip(q["q"] // S, 0, n_loc - 1)
         lo = row_ptr[lq]
         hi = row_ptr[lq + 1]
@@ -241,6 +264,9 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
                                q["r"], n_steps)
         pos_c = jnp.clip(pos, 0, e_cap - 1)
         found = q["ok"] & (pos < hi) & (nbr[pos_c] == q["r"])
+        if cfg.delta:
+            # fold only the three new-triangle classes: ≥1 of pq/pr/qr new
+            found &= q["pq_new"] | q["pr_new"] | nbr_new[pos_c]
         return TriangleBatch(
             p=q["p"], q=q["q"], r=q["r"],
             vp_i=expand_lanes(q["vp_i"], spec.vp_i),
@@ -257,8 +283,8 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
         )
 
     return jax.vmap(per_shard)(
-        gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, eqr_i, eqr_f, vr_i, vr_f,
-        vq_i, vq_f, qr)
+        gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, eqr_i, eqr_f,
+        vr_i, vr_f, vq_i, vq_f, qr)
 
 
 # ---------------------------------------------------------------------------
@@ -373,7 +399,7 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
     req_x = _exchange(req, cfg)   # [S_owner, S_src*pcap]
 
     # --- owner: reply with padded rows (declared lanes only on the wire) ---
-    def answer(row_ptr, nbr, nbr_d, nbr_h, eqr_i, eqr_f, vr_i, vr_f,
+    def answer(row_ptr, nbr, nbr_d, nbr_h, nbr_new, eqr_i, eqr_f, vr_i, vr_f,
                vq_i, vq_f, dplus, q, ok):
         lq = jnp.clip(q // S, 0, n_loc - 1)
         lo = row_ptr[lq]                                   # [B]
@@ -381,7 +407,7 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         j = jnp.arange(L, dtype=jnp.int32)
         slots = jnp.clip(lo[:, None] + j[None, :], 0, e_cap - 1)   # [B, L]
         mask = j[None, :] < ln[:, None]
-        return dict(
+        out = dict(
             r_nbr=jnp.where(mask, nbr[slots], BIG_I32),
             r_d=jnp.where(mask, nbr_d[slots], BIG_I32),
             r_h=jnp.where(mask, nbr_h[slots], jnp.uint32(0xFFFFFFFF)),
@@ -392,9 +418,12 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
             vq_i=vq_i[lq], vq_f=vq_f[lq],
             ln=ln,
         )
+        if cfg.delta:
+            out["r_new"] = mask & nbr_new[slots]
+        return out
 
-    rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, eqr_i_w,
-                           eqr_f_w, vr_i_w, vr_f_w, vq_i_w, vq_f_w,
+    rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new,
+                           eqr_i_w, eqr_f_w, vr_i_w, vr_f_w, vq_i_w, vq_f_w,
                            gr.dplus, req_x["q"], req_x["ok"])
     # reply routes back: reshape [S_owner, S_src, pcap, ...] → swap → [S_src, S_owner, pcap,...]
     def back(x):
@@ -419,8 +448,8 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         from repro.kernels.intersect import ops as is_ops
 
     def intersect(qrank2, qbase, qcount, pulled_end, dest_start2, ord2, pull,
-                  row_ptr, edge_src, nbr, nbr_d, nbr_h, epq_i, epq_f,
-                  epr_i, epr_f, vp_i, vp_f, rp):
+                  row_ptr, edge_src, nbr, nbr_d, nbr_h, nbr_new, gen,
+                  epq_i, epq_f, epr_i, epr_f, vp_i, vp_f, rp):
         d = jnp.arange(S, dtype=jnp.int32)
         lo_rank = qbase + t * pcap
         hi_rank = qbase + jnp.minimum((t + 1) * pcap, qcount)
@@ -435,6 +464,11 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         j_c = jnp.clip(j, 0, e_cap - 1)
         ok_e = ok_e & pull[ps_ord2 := ord2[j_c]]
         e = ps_ord2                                        # original edge slot
+        if cfg.delta:
+            # pulled edges outside the delta_gen mask cannot seed a new
+            # triangle — skip their suffixes (keeps the wedges_pulled stat
+            # equal to the planner's masked pulled_wedges accounting)
+            ok_e = ok_e & gen[e]
         slot = jnp.clip(qrank2[j_c] - qbase[:, None] - t * pcap, 0, pcap - 1)
 
         # suffix candidates of edge e: [S, ecap, L]
@@ -470,6 +504,9 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
 
         pos_c = jnp.clip(pos, 0, L - 1)
         hit = cand_ok & (pos < ln[..., None]) & (jnp.take_along_axis(rn, pos_c, -1) == ci)
+        if cfg.delta:
+            qr_new = jnp.take_along_axis(pick(rp["r_new"]), pos_c, -1)
+            hit &= (nbr_new[e][..., None] | nbr_new[r_pos] | qr_new)
 
         def row_at(x):
             return jnp.take_along_axis(pick(x), pos_c[..., None], 2)
@@ -500,8 +537,8 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
     tri, checked, overflow = jax.vmap(intersect)(
         ps["qrank2"], ps["qbase"], ps["qcount"], ps["pulled_end"],
         ps["dest_start2"], ps["ord2"], ps["pull"], gr.row_ptr, gr.edge_src,
-        gr.nbr, gr.nbr_d, gr.nbr_h, epq_i_l, epq_f_l, epr_i_l, epr_f_l,
-        vp_i_l, vp_f_l, rep)
+        gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, gr.delta_gen,
+        epq_i_l, epq_f_l, epr_i_l, epr_f_l, vp_i_l, vp_f_l, rep)
     n_req = req["ok"].sum(dtype=jnp.float32)
     return tri, checked, overflow, n_req
 
@@ -526,14 +563,25 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
         if cfg.mode == "pushpull":
             # planner-stamped widths win so host plan and device decisions
             # agree even if the plan was built for a different spec
-            mw = (cfg.meta_widths if cfg.meta_widths is not None
-                  else meta_widths(*spec.lane_counts()))
+            mw = cfg.meta_widths
+            if mw is None:
+                mw = meta_widths(*spec.lane_counts())
+                if cfg.delta:   # newness bits on the wire (see plan_engine)
+                    mw = (mw[0] + 1, mw[1] + 1, mw[2], mw[3])
             st0 = pin(_stream_setup(gr))
+            if cfg.delta:
+                # pull decisions weigh only wedges the delta mask generates,
+                # mirroring the planner's masked vol(s, q)
+                st0 = dict(st0, suffix=st0["suffix"] * gr.delta_gen)
             ps = pin(_pull_setup(gr, st0, cfg, mw))
-            st = pin(_stream_setup(gr, weight_mask=~ps["pull"]))
+            push_mask = ~ps["pull"]
+            if cfg.delta:
+                push_mask = push_mask & gr.delta_gen
+            st = pin(_stream_setup(gr, weight_mask=push_mask))
         else:
             ps = None
-            st = pin(_stream_setup(gr))
+            st = pin(_stream_setup(gr, weight_mask=gr.delta_gen if cfg.delta
+                                   else None))
 
         stats = dict(
             wedges_pushed=jnp.zeros((), jnp.float32),
@@ -546,7 +594,8 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
 
         def push_step(carry, t):
             state, stats = carry
-            qr = _gen_push_queries(gr, st, t, cfg.push_cap, spec)
+            qr = _gen_push_queries(gr, st, t, cfg.push_cap, spec,
+                                   delta=cfg.delta)
             qx = _exchange(qr, cfg)
             tri = _answer_push_queries(gr, qx, cfg, spec)
             state = jax.vmap(survey.update)(state, tri)
@@ -629,8 +678,27 @@ def _check_sampling(gr: ShardedDODGr, cfg: EngineConfig):
             "shard_dodgr and plan_engine")
 
 
-def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+def _check_provenance(gr: ShardedDODGr, cfg: EngineConfig):
+    """Graph stamps and plan stamps must agree — sampling, orientation key,
+    and epoch/delta state — or results are silently wrong."""
     _check_sampling(gr, cfg)
+    if gr.is_delta != cfg.delta:
+        what = "a delta frontier" if gr.is_delta else "a full snapshot"
+        want = "survey_delta with a plan_delta plan" if gr.is_delta \
+            else "survey_push_only/survey_push_pull with a plan_engine plan"
+        raise ValueError(f"graph is {what}; run it through {want}")
+    if gr.orient != cfg.orient:
+        raise ValueError(
+            f"orientation mismatch: graph sharded with orient={gr.orient!r} "
+            f"but plan built with orient={cfg.orient!r}")
+    if cfg.delta and gr.epoch != cfg.epoch:
+        raise ValueError(
+            f"epoch mismatch: frontier is epoch {gr.epoch} but the plan was "
+            f"built for epoch {cfg.epoch}; re-plan each appended batch")
+
+
+def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+    _check_provenance(gr, cfg)
     cfg = replace(cfg, mode="push")
     fn = jax.jit(make_survey_fn(survey, cfg))
     merged, stats = fn(gr)
@@ -638,8 +706,51 @@ def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
 
 
 def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
-    _check_sampling(gr, cfg)
+    _check_provenance(gr, cfg)
     cfg = replace(cfg, mode="pushpull")
     fn = jax.jit(make_survey_fn(survey, cfg))
     merged, stats = fn(gr)
     return _finalize_run(survey, cfg, merged, stats)
+
+
+# ---------------------------------------------------------------------------
+# epoch-incremental entry point (delta engine)
+
+
+def survey_delta(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
+                 prev_state=None):
+    """One incremental epoch: traverse the delta frontier ``gr``, folding
+    ONLY triangles that contain ≥1 edge of the current batch (the
+    new-old-old / new-new-old / new-new-new classes), then accumulate into
+    ``prev_state`` through the survey's ``merge_epochs`` contract.
+
+    ``cfg`` must come from ``pushpull.plan_delta`` for the same
+    :class:`~repro.graphs.csr.DeltaGraph` epoch (provenance is
+    cross-checked). Returns ``(state, stats)`` where ``state`` is the
+    cross-shard-merged but *not finalized* accumulator — feed it back as
+    ``prev_state`` for the next batch and render results at any point with
+    :func:`finalize_epochs`. The invariant (asserted in tests): after K
+    batches, ``finalize_epochs`` equals one full survey of the unioned
+    graph, bitwise, for every built-in survey.
+    """
+    if not cfg.delta:
+        raise ValueError("survey_delta needs a delta plan — build cfg with "
+                         "pushpull.plan_delta(dg, S, survey, ...)")
+    if cfg.sample_p < 1.0:
+        raise ValueError("DOULION sampling is not supported on delta epochs; "
+                         "sample the full snapshot instead")
+    _check_provenance(gr, cfg)
+    fn = jax.jit(make_survey_fn(survey, cfg))
+    merged, stats = fn(gr)
+    stats = jax.tree.map(float, jax.device_get(stats))
+    stats["epoch"] = float(cfg.epoch)
+    stats["n_surveys"] = float(len(getattr(survey, "surveys", (survey,))))
+    if prev_state is not None:
+        merged = survey.merge_epochs(prev_state, merged)
+    return merged, stats
+
+
+def finalize_epochs(survey: Survey, state):
+    """Render an epoch accumulator (from :func:`survey_delta`) host-side —
+    the delta-engine analogue of the one-shot finalize."""
+    return survey.finalize(jax.device_get(state))

@@ -25,10 +25,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.dodgr import orient_edges, meta_widths, sparsify_edges
+from repro.core.dodgr import (delta_gen_mask, meta_widths, orient_edges,
+                              sparsify_edges)
 from repro.core.engine import EngineConfig
 from repro.core.surveys import MetaSpec, Survey
-from repro.graphs.csr import HostGraph
+from repro.graphs.csr import DeltaGraph, HostGraph
 from repro.utils import ceil_div
 
 
@@ -59,6 +60,14 @@ class VolumeReport:
     request_width: int = 2
     full_push_entry_width: int = 0
     full_pull_row_width: int = 0
+    # --- delta (epoch-incremental) accounting ---
+    gen_wedges: int = 0              # wedges surviving the delta_gen mask
+    #                                  (== wedges_total for a full snapshot);
+    #                                  every entry/byte quantity above counts
+    #                                  only these in delta mode
+    epoch: int = 0
+    pull_q_cap: int = 0              # resolved cap (autotuned when the call
+    #                                  passed pull_q_cap=None)
 
     @property
     def reduction(self) -> float:
@@ -85,18 +94,42 @@ def _resolve_plan_spec(survey, g: HostGraph) -> MetaSpec:
     return spec.resolve(g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)
 
 
+def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
+                         L: int) -> int:
+    """Per-survey cap from the measured pulled-group histogram: the smallest
+    power of two covering the 95th percentile of per-(shard, dest) pulled
+    group counts, so the typical (s, d) pair resolves in one superstep and
+    only the heavy tail pays extra steps — instead of every pair paying a
+    reply buffer sized for the maximum. The cap is also bounded so one
+    padded reply window (``pcap`` rows of ``w_hdr + L·w_row`` words — the
+    survey-projected widths, hence *per-survey*) stays within ~4 MiB."""
+    nz = per_sd[per_sd > 0]
+    if len(nz) == 0:
+        return 32
+    p95 = max(1, int(np.percentile(nz, 95)))
+    cap = 1
+    while cap < p95:
+        cap *= 2
+    row_words = max(1, w_hdr + L * w_row)
+    byte_bound = max(1, (1 << 20) // row_words)  # 2²⁰ words · 4 B = 4 MiB
+    return int(np.clip(cap, 1, max(1, min(int(nz.max()), byte_bound))))
+
+
 def plan_engine(
     g: HostGraph,
     S: int,
     survey: Survey | MetaSpec | None = None,
     mode: str = "pushpull",
     push_cap: int = 256,
-    pull_q_cap: int = 32,
+    pull_q_cap: int | None = None,
     cost_model: str = "entries",
     use_pallas: bool = False,
     shard_axis: str | None = None,
     sample_p: float = 1.0,
     sample_seed: int = 0,
+    orient: str = "degree",
+    edge_new: np.ndarray | None = None,
+    epoch: int = 0,
 ) -> tuple[EngineConfig, VolumeReport]:
     """Plan static superstep counts/capacities and account communication.
 
@@ -104,15 +137,26 @@ def plan_engine(
     byte quantity to the metadata lanes that survey reads; ``None`` plans
     at full metadata width (the conservative pre-projection behavior).
 
+    ``pull_q_cap=None`` autotunes the pulled-group cap from the measured
+    per-(shard, dest) pulled-group histogram at the survey's projected
+    widths (:func:`_autotune_pull_q_cap`); pass an int to override.
+
     ``sample_p < 1`` plans against the same DOULION-sparsified view that
     ``shard_dodgr(..., sample_p, sample_seed)`` ingests, and stamps the
     probability into the config so the engine debiases at finalize. A
     graph already stamped by :func:`~repro.core.dodgr.sparsify_edges` is
     used as-is (no second sampling pass) and contributes its own stamp.
+
+    ``edge_new`` plans a *delta epoch*: wedge volumes, the push-vs-pull
+    decision, superstep counts, and every byte quantity count only wedges
+    the delta mask generates, and entry widths grow by the on-wire newness
+    bits. Prefer :func:`plan_delta`, which derives the frontier from a
+    :class:`~repro.graphs.csr.DeltaGraph`.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
-    p, q, deg, h = orient_edges(g)
+    delta = edge_new is not None
+    p, q, deg, h = orient_edges(g, orient)
     d_plus = np.bincount(p, minlength=g.n).astype(np.int64)
     s = (p % S).astype(np.int64)
     d = (q % S).astype(np.int64)
@@ -128,16 +172,32 @@ def plan_engine(
     pos = np.arange(len(p_o)) - np.repeat(row_start, row_len)
     suffix = (np.repeat(row_len, row_len) - pos - 1).astype(np.int64)
 
+    if delta:
+        new_o = np.asarray(edge_new, bool)[order]
+        touched = np.zeros(g.n, bool)
+        touched[g.src[edge_new]] = True
+        touched[g.dst[edge_new]] = True
+        gen = delta_gen_mask(q_o, row_start, row_len, new_o, touched)
+        suffix_w = suffix * gen
+    else:
+        suffix_w = suffix
+
     rspec = _resolve_plan_spec(survey, g)
     w_push, w_row, w_hdr, w_req = meta_widths(*rspec.lane_counts())
+    if delta:
+        # on-wire newness: (pq_new, pr_new) bits on each push entry, r_new
+        # on each pulled row — one packed word apiece
+        w_push += 1
+        w_row += 1
     full_spec = MetaSpec.full().resolve(g.spec.dvi, g.spec.dvf,
                                         g.spec.dei, g.spec.def_)
     w_push_full, w_row_full, _, _ = meta_widths(*full_spec.lane_counts())
 
-    # vol(s, q) and the pull decision (paper's inequality)
+    # vol(s, q) and the pull decision (paper's inequality), over the wedges
+    # this plan will actually generate
     sq = s_o * np.int64(g.n) + q_o
     uq, inv = np.unique(sq, return_inverse=True)
-    vol = np.bincount(inv, weights=suffix).astype(np.int64)
+    vol = np.bincount(inv, weights=suffix_w).astype(np.int64)
     dq_of_group = d_plus[(uq % np.int64(g.n)).astype(np.int64)]
     if mode == "push":
         pull_group = np.zeros(len(uq), bool)
@@ -148,7 +208,8 @@ def plan_engine(
     pull_e = pull_group[inv]
 
     wedges_total = int(suffix.sum())
-    pushed = suffix[~pull_e]
+    gen_wedges = int(suffix_w.sum())
+    pushed = suffix_w[~pull_e]
     sd = s_o * S + d_o
     push_stream = np.bincount(sd[~pull_e], weights=pushed, minlength=S * S)
     max_push_stream = int(push_stream.max()) if len(push_stream) else 0
@@ -158,11 +219,14 @@ def plan_engine(
     n_pull_steps = 0
     pull_edge_cap = 1
     n_pulled_groups = int(pull_group.sum())
+    L = int(d_plus.max()) if g.n and len(d_plus) else 1
     if mode == "pushpull" and n_pulled_groups:
         g_s = (uq // np.int64(g.n))[pull_group]
         g_q = (uq % np.int64(g.n))[pull_group]
         g_d = g_q % S
         per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
+        if pull_q_cap is None:
+            pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr, max(1, L))
         n_pull_steps = max(1, ceil_div(int(per_sd.max()), pull_q_cap))
         # edges per (s,d,window): group rank within (s,d) in (q) order, window
         # = rank // pull_q_cap; edge count per window
@@ -181,10 +245,12 @@ def plan_engine(
         key = e_sd * (int(win.max()) + 1 if len(win) else 1) + e_win
         per_window = np.bincount(key)
         pull_edge_cap = max(1, int(per_window.max()))
+    if pull_q_cap is None:
+        pull_q_cap = 32  # nothing pulled — any cap is a no-op
 
     # --- volumes ---
-    push_only_entries = wedges_total
-    push_only_bytes = wedges_total * w_push * 4
+    push_only_entries = gen_wedges
+    push_only_bytes = gen_wedges * w_push * 4
     pp_push_entries = int(pushed.sum())
     pp_rows = int(d_plus[(uq % np.int64(g.n))[pull_group]].sum())
     pp_bytes = (pp_push_entries * w_push + n_pulled_groups * (w_req + w_hdr)
@@ -199,13 +265,16 @@ def plan_engine(
         pushpull_requests=n_pulled_groups,
         pushpull_bytes=pp_bytes if mode == "pushpull" else push_only_bytes,
         pulls_per_rank=n_pulled_groups / S,
-        pulled_wedges=int(suffix[pull_e].sum()),
+        pulled_wedges=int(suffix_w[pull_e].sum()),
         push_entry_width=w_push,
         pull_row_width=w_row,
         pull_header_width=w_hdr,
         request_width=w_req,
         full_push_entry_width=w_push_full,
         full_pull_row_width=w_row_full,
+        gen_wedges=gen_wedges,
+        epoch=epoch,
+        pull_q_cap=pull_q_cap,
     )
     cfg = EngineConfig(
         mode=mode,
@@ -220,5 +289,29 @@ def plan_engine(
         sample_p=sample_p,
         sample_seed=sample_seed,
         meta_widths=(w_push, w_row, w_hdr, w_req),
+        delta=delta,
+        epoch=epoch,
+        orient=orient,
     )
     return cfg, report
+
+
+def plan_delta(
+    dg: DeltaGraph,
+    S: int,
+    survey: Survey | MetaSpec | None = None,
+    orient: str = "stable",
+    **kwargs,
+) -> tuple[EngineConfig, VolumeReport]:
+    """Plan one incremental epoch: the plan covers only the delta frontier's
+    generated wedges (the three new-triangle classes) and is stamped with
+    the epoch so ``engine.survey_delta`` can cross-check provenance against
+    the matching :func:`~repro.core.dodgr.shard_delta` ingest.
+
+    Accepts every :func:`plan_engine` keyword (mode, caps, cost model, …).
+    Default orientation is the epoch-stable key — see
+    :func:`~repro.core.dodgr.orient_edges`.
+    """
+    h, edge_new = dg.frontier()
+    return plan_engine(h, S, survey, orient=orient, edge_new=edge_new,
+                       epoch=dg.epoch, **kwargs)

@@ -14,9 +14,13 @@ from repro.graphs.csr import HostGraph
 from repro.utils import splitmix32_np
 
 
-def dodgr_adjacency(g: HostGraph):
-    """Oriented adjacency: adj[p] = list of q with p <₊ q, sorted by key(q)."""
-    deg = g.degrees()
+def dodgr_adjacency(g: HostGraph, orient: str = "degree"):
+    """Oriented adjacency: adj[p] = list of q with p <₊ q, sorted by key(q).
+
+    ``orient="stable"`` uses the epoch-stable ``(hash, id)`` key of the
+    delta engine (see :func:`repro.core.dodgr.orient_edges`)."""
+    deg = (g.degrees() if orient == "degree"
+           else np.zeros(g.n, np.int64))
     h = splitmix32_np(np.arange(g.n, dtype=np.uint32)).astype(np.int64)
     key = np.stack([deg, h, np.arange(g.n, dtype=np.int64)], 1)
 
@@ -34,12 +38,13 @@ def dodgr_adjacency(g: HostGraph):
     return adj, eidx, key
 
 
-def survey_triangles_ref(g: HostGraph, callback) -> int:
+def survey_triangles_ref(g: HostGraph, callback, orient: str = "degree") -> int:
     """Run ``callback(p, q, r, meta)`` on every triangle; returns count.
 
-    ``meta`` is a dict with vmeta_i/f for p,q,r and emeta_i/f for pq,pr,qr.
+    ``meta`` is a dict with vmeta_i/f for p,q,r and emeta_i/f for pq,pr,qr,
+    plus the canonical edge indices ``e_idx=(pq, pr, qr)`` into ``g``.
     """
-    adj, eidx, _ = dodgr_adjacency(g)
+    adj, eidx, _ = dodgr_adjacency(g, orient)
     count = 0
     for p, nbrs in adj.items():
         nbr_set = {q: i for i, q in enumerate(nbrs)}
@@ -55,13 +60,30 @@ def survey_triangles_ref(g: HostGraph, callback) -> int:
                             v_f=(g.vmeta_f[p], g.vmeta_f[q], g.vmeta_f[r]),
                             e_i=(g.emeta_i[e_pq], g.emeta_i[e_pr], g.emeta_i[e_qr]),
                             e_f=(g.emeta_f[e_pq], g.emeta_f[e_pr], g.emeta_f[e_qr]),
+                            e_idx=(e_pq, e_pr, e_qr),
                         )
                         callback(p, q, r, meta)
     return count
 
 
-def count_triangles_ref(g: HostGraph) -> int:
-    return survey_triangles_ref(g, None)
+def count_triangles_ref(g: HostGraph, orient: str = "degree") -> int:
+    return survey_triangles_ref(g, None, orient)
+
+
+def new_triangle_classes_ref(g: HostGraph, edge_new: np.ndarray,
+                             orient: str = "stable") -> dict:
+    """Oracle decomposition of triangles with ≥1 new edge into the three
+    incremental classes, keyed by how many edges arrived this epoch:
+    ``{"noo": new-old-old, "nno": new-new-old, "nnn": new-new-new,
+    "old": no new edge}``."""
+    out = {"noo": 0, "nno": 0, "nnn": 0, "old": 0}
+
+    def cb(p, q, r, meta):
+        k = sum(bool(edge_new[i]) for i in meta["e_idx"])
+        out[("old", "noo", "nno", "nnn")[k]] += 1
+
+    survey_triangles_ref(g, cb, orient)
+    return out
 
 
 def count_triangles_networkx(g: HostGraph) -> int:
@@ -90,7 +112,7 @@ def top_weighted_triangles_ref(g: HostGraph, k: int, weight_col: int = 0):
             np.array([t for _, t in top], np.int64).reshape(-1, 3))
 
 
-def wedge_count_ref(g: HostGraph) -> int:
+def wedge_count_ref(g: HostGraph, orient: str = "degree") -> int:
     """|W₊| — DODGr wedge checks, the engine's work unit (paper Sec. 3)."""
-    adj, _, _ = dodgr_adjacency(g)
+    adj, _, _ = dodgr_adjacency(g, orient)
     return sum(len(v) * (len(v) - 1) // 2 for v in adj.values())

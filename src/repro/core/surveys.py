@@ -252,6 +252,16 @@ class Survey:
     def finalize(self, merged):
         return jax.tree.map(np.asarray, merged)
 
+    def merge_epochs(self, prev, delta):
+        """Combine two *merged* states whose triangle sets are disjoint —
+        the epoch-accumulation contract of the delta engine
+        (:func:`repro.core.engine.survey_delta`). Because each triangle is
+        folded in exactly one epoch (the one its last edge arrives in), the
+        accumulated state must equal a single full-graph run bitwise; the
+        default elementwise sum matches the cross-shard merge of every
+        counter-style state."""
+        return jax.tree.map(lambda a, b: a + b, prev, delta)
+
     def scale_sampled(self, result, p: float):
         """Debias a finalized result computed on a DOULION-sparsified graph
         (edges kept i.i.d. with probability ``p``). Count-like surveys scale
@@ -312,6 +322,13 @@ class TriangleCount(Survey):
 
     def finalize(self, merged):
         return counter64_value(merged)
+
+    def merge_epochs(self, prev, delta):
+        # 64-bit add over uint32 limbs: lo-sum wrap carries into hi, so the
+        # accumulated representation stays canonical (lo = value mod 2³²)
+        lo = prev["lo"] + delta["lo"]
+        carry = (lo < prev["lo"]).astype(jnp.uint32)
+        return dict(lo=lo, hi=prev["hi"] + delta["hi"] + carry)
 
     def scale_sampled(self, result, p: float):
         return result / p**3
@@ -412,9 +429,10 @@ class DegreeTriples(Survey):
     Uses the distributed counting set.
     """
 
-    def __init__(self, deg_col: int = 0, capacity: int = 4096):
+    def __init__(self, deg_col: int = 0, capacity: int = 4096,
+                 counting_backend: str = "auto"):
         self.deg_col = deg_col
-        self.cs = CountingSet(capacity, 3)
+        self.cs = CountingSet(capacity, 3, backend=counting_backend)
         self.meta_spec = MetaSpec.vertices(i=(deg_col,))
 
     def _lg(self, d):
@@ -435,6 +453,9 @@ class DegreeTriples(Survey):
     def merge(self, stacked):
         return self.cs.merge(stacked)
 
+    def merge_epochs(self, prev, delta):
+        return self.cs.merge_epochs(prev, delta)
+
     def finalize(self, merged):
         return self.cs.finalize(merged)
 
@@ -447,10 +468,11 @@ class LabelTripleSet(Survey):
     """
 
     def __init__(self, v_label_col: int = 0, capacity: int = 1 << 16,
-                 require_distinct: bool = True):
+                 require_distinct: bool = True,
+                 counting_backend: str = "auto"):
         self.vc = v_label_col
         self.require_distinct = require_distinct
-        self.cs = CountingSet(capacity, 3)
+        self.cs = CountingSet(capacity, 3, backend=counting_backend)
         self.meta_spec = MetaSpec.vertices(i=(v_label_col,))
 
     def init(self):
@@ -469,6 +491,9 @@ class LabelTripleSet(Survey):
 
     def merge(self, stacked):
         return self.cs.merge(stacked)
+
+    def merge_epochs(self, prev, delta):
+        return self.cs.merge_epochs(prev, delta)
 
     def finalize(self, merged):
         return self.cs.finalize(merged)
@@ -509,6 +534,13 @@ class Enumerate(Survey):
     def merge(self, stacked):
         # concatenation semantics: report per-shard buffers stacked
         return stacked
+
+    def merge_epochs(self, prev, delta):
+        # concatenate per-epoch buffers along the (shard-)stack axis: totals
+        # and overflow stay exact; the *sample* an overflowing buffer keeps
+        # is placement-dependent, as in any single run
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                            prev, delta)
 
     def finalize(self, merged):
         tris = np.asarray(merged["tris"]).reshape(-1, 3)
@@ -580,6 +612,12 @@ class SurveyBundle(Survey):
             return self._solo.merge(stacked)
         return tuple(s.merge(st) for s, st in zip(self.surveys, stacked))
 
+    def merge_epochs(self, prev, delta):
+        if self._solo is not None:
+            return self._solo.merge_epochs(prev, delta)
+        return tuple(s.merge_epochs(p, d)
+                     for s, p, d in zip(self.surveys, prev, delta))
+
     def finalize(self, merged):
         if self._solo is not None:
             return {self.names[0]: self._solo.finalize(merged)}
@@ -628,6 +666,16 @@ class TopKWeightedTriangles(Survey):
         S = stacked["w"].shape[0]
         return self._select(stacked["w"].reshape(S * self.k),
                             stacked["tri"].reshape(S * self.k, 3))
+
+    def merge_epochs(self, prev, delta):
+        # merge-by-sort of the two k-heaps — top-k is decomposable over a
+        # disjoint partition of the triangle set. The weight multiset is
+        # exact either way; when >k triangles TIE at the k-th weight, WHICH
+        # tied triangle survives depends on candidate order (top_k breaks
+        # ties by position), so the `triangles` rows of an epoch-accumulated
+        # run can differ from a one-shot run at the boundary weight.
+        return self._select(jnp.concatenate([prev["w"], delta["w"]]),
+                            jnp.concatenate([prev["tri"], delta["tri"]]))
 
     def finalize(self, merged):
         w = np.asarray(merged["w"])

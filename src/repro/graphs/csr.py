@@ -8,6 +8,7 @@ metadata (strings) must be hashed to int columns *before* ingestion
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 
 import numpy as np
 
@@ -148,3 +149,156 @@ class HostGraph:
         g.add_nodes_from(range(self.n))
         g.add_edges_from(zip(self.src.tolist(), self.dst.tolist()))
         return g
+
+    def append_edges(self, src, dst, emeta_i=None, emeta_f=None, n=None,
+                     vmeta_i=None, vmeta_f=None) -> "DeltaGraph":
+        """Start an epoch sequence: this graph becomes the immutable base and
+        the batch becomes the epoch-1 delta overlay.
+
+        The batch is canonicalized like :meth:`from_edges` (loops dropped,
+        ``src < dst``, batch-internal duplicates keep the first occurrence)
+        and edges already present in the base are dropped — re-arrivals are
+        not new, matching the paper's keep-the-earliest Reddit semantics, so
+        the union stays a simple graph and no triangle is ever re-counted.
+
+        ``n`` (or a batch endpoint beyond ``self.n``) grows the vertex set;
+        ``vmeta_i``/``vmeta_f`` replace the vertex metadata at the grown size
+        (default: zero-filled rows for new vertices).
+        """
+        base = self
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        n_new = int(max(self.n, n or 0,
+                        (src.max() + 1) if len(src) else 0,
+                        (dst.max() + 1) if len(dst) else 0))
+        if n_new > self.n or vmeta_i is not None or vmeta_f is not None:
+            if vmeta_i is None:
+                vmeta_i = np.concatenate(
+                    [self.vmeta_i,
+                     np.zeros((n_new - self.n, self.spec.dvi), np.int32)])
+            if vmeta_f is None:
+                vmeta_f = np.concatenate(
+                    [self.vmeta_f,
+                     np.zeros((n_new - self.n, self.spec.dvf), np.float32)])
+            base = HostGraph(n_new, self.src, self.dst, self.spec,
+                             np.asarray(vmeta_i, np.int32),
+                             np.asarray(vmeta_f, np.float32),
+                             self.emeta_i, self.emeta_f,
+                             sample_p=self.sample_p,
+                             sample_seed=self.sample_seed)
+        batch = HostGraph.from_edges(n_new, src, dst, spec=self.spec,
+                                     emeta_i=emeta_i, emeta_f=emeta_f)
+        # drop batch edges the base already holds (n-independent 64-bit key)
+        bkey = (batch.src << np.int64(32)) | batch.dst
+        gkey = (base.src << np.int64(32)) | base.dst
+        fresh = ~np.isin(bkey, gkey)
+        return DeltaGraph(
+            base=base,
+            d_src=batch.src[fresh], d_dst=batch.dst[fresh],
+            d_emeta_i=batch.emeta_i[fresh], d_emeta_f=batch.emeta_f[fresh],
+            epoch=1,
+        )
+
+
+@dataclass(frozen=True)
+class DeltaGraph:
+    """Epoch-aware graph: an immutable base (every edge of epochs < ``epoch``)
+    plus a compact delta overlay (the edges that arrived *this* epoch).
+
+    The overlay stays in edge-list form — it is the compact delta-CSR source
+    the shard layer turns into per-shard padded rows. ``union()`` is the full
+    snapshot (what a one-shot recompute would poll); ``frontier()`` is the
+    delta-relevant subgraph the incremental engine traverses instead: every
+    triangle containing ≥1 delta edge has all three edges incident to a
+    delta endpoint, so the frontier — delta edges plus base edges touching a
+    delta endpoint — contains exactly the new triangles (plus masked-out old
+    ones), at a fraction of the union's wedge volume.
+    """
+
+    base: HostGraph
+    d_src: np.ndarray    # [b] int64 canonical (src < dst), disjoint from base
+    d_dst: np.ndarray
+    d_emeta_i: np.ndarray  # [b, dei] int32
+    d_emeta_f: np.ndarray  # [b, def] float32
+    epoch: int = 1
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def spec(self) -> MetaSpec:
+        return self.base.spec
+
+    @property
+    def m(self) -> int:
+        """Union (cumulative) undirected edge count."""
+        return self.base.m + len(self.d_src)
+
+    @property
+    def m_delta(self) -> int:
+        """Edges that arrived this epoch."""
+        return len(self.d_src)
+
+    @cached_property
+    def _union(self) -> HostGraph:
+        return HostGraph(
+            self.n,
+            np.concatenate([self.base.src, self.d_src]),
+            np.concatenate([self.base.dst, self.d_dst]),
+            self.spec, self.base.vmeta_i, self.base.vmeta_f,
+            np.concatenate([self.base.emeta_i, self.d_emeta_i]),
+            np.concatenate([self.base.emeta_f, self.d_emeta_f]),
+            # the base's DOULION stamp survives the epoch append, so the
+            # provenance cross-check (and 1/p³ debias) still fires on a
+            # snapshot whose history was ingested sparsified
+            sample_p=self.base.sample_p, sample_seed=self.base.sample_seed,
+        )
+
+    def union(self) -> HostGraph:
+        """The full snapshot as of this epoch (base ∪ overlay). Cached —
+        shard/plan/compare calls within an epoch share one build."""
+        return self._union
+
+    def touched(self) -> np.ndarray:
+        """[n] bool — vertices incident to a delta edge (V(D))."""
+        t = np.zeros(self.n, bool)
+        t[self.d_src] = True
+        t[self.d_dst] = True
+        return t
+
+    @cached_property
+    def _frontier(self) -> tuple[HostGraph, np.ndarray]:
+        t = self.touched()
+        keep = t[self.base.src] | t[self.base.dst]
+        h = HostGraph(
+            self.n,
+            np.concatenate([self.base.src[keep], self.d_src]),
+            np.concatenate([self.base.dst[keep], self.d_dst]),
+            self.spec, self.base.vmeta_i, self.base.vmeta_f,
+            np.concatenate([self.base.emeta_i[keep], self.d_emeta_i]),
+            np.concatenate([self.base.emeta_f[keep], self.d_emeta_f]),
+            sample_p=self.base.sample_p, sample_seed=self.base.sample_seed,
+        )
+        edge_new = np.zeros(h.m, bool)
+        edge_new[int(keep.sum()):] = True
+        return h, edge_new
+
+    def frontier(self) -> tuple[HostGraph, np.ndarray]:
+        """(H, edge_new): the delta-relevant subgraph and its per-edge
+        newness flags. H = overlay ∪ {base edges incident to V(overlay)};
+        every triangle of the union with ≥1 new edge lies entirely in H and
+        appears there under the same orientation, exactly once. Cached, so
+        ``shard_delta`` and ``plan_delta`` share one O(m) build per epoch."""
+        return self._frontier
+
+    def append_edges(self, src, dst, emeta_i=None, emeta_f=None, n=None,
+                     vmeta_i=None, vmeta_f=None) -> "DeltaGraph":
+        """Advance one epoch: the current overlay folds into the base and the
+        new batch becomes the next overlay."""
+        nxt = self.union().append_edges(src, dst, emeta_i=emeta_i,
+                                        emeta_f=emeta_f, n=n,
+                                        vmeta_i=vmeta_i, vmeta_f=vmeta_f)
+        return DeltaGraph(base=nxt.base, d_src=nxt.d_src, d_dst=nxt.d_dst,
+                          d_emeta_i=nxt.d_emeta_i, d_emeta_f=nxt.d_emeta_f,
+                          epoch=self.epoch + 1)

@@ -1,25 +1,61 @@
-"""Edge-list persistence: npz with metadata columns + JSON-ish schema."""
+"""Edge-list persistence: npz with metadata columns + JSON-ish schema.
+
+``save_delta``/``load_delta`` persist an epoch-aware :class:`DeltaGraph`
+(immutable base + compact overlay + epoch counter) so a streaming survey
+can checkpoint between batches and resume with provenance intact.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.graphs.csr import HostGraph, MetaSpec
+from repro.graphs.csr import DeltaGraph, HostGraph, MetaSpec
+
+
+def _spec_fields(spec: MetaSpec) -> dict:
+    """MetaSpec → npz wire fields (NUL-joined column-name lists)."""
+    return dict(
+        v_int="\x00".join(spec.v_int), v_float="\x00".join(spec.v_float),
+        e_int="\x00".join(spec.e_int), e_float="\x00".join(spec.e_float))
+
+
+def _spec_from_npz(z) -> MetaSpec:
+    names = lambda k: tuple(x for x in str(z[k]).split("\x00") if x)
+    return MetaSpec(v_int=names("v_int"), v_float=names("v_float"),
+                    e_int=names("e_int"), e_float=names("e_float"))
+
+
+def _graph_fields(g: HostGraph) -> dict:
+    return dict(n=g.n, src=g.src, dst=g.dst,
+                vmeta_i=g.vmeta_i, vmeta_f=g.vmeta_f,
+                emeta_i=g.emeta_i, emeta_f=g.emeta_f,
+                **_spec_fields(g.spec))
+
+
+def _graph_from_npz(z) -> HostGraph:
+    return HostGraph(n=int(z["n"]), src=z["src"], dst=z["dst"],
+                     spec=_spec_from_npz(z),
+                     vmeta_i=z["vmeta_i"], vmeta_f=z["vmeta_f"],
+                     emeta_i=z["emeta_i"], emeta_f=z["emeta_f"])
 
 
 def save_graph(path: str, g: HostGraph):
-    np.savez_compressed(
-        path, n=g.n, src=g.src, dst=g.dst,
-        vmeta_i=g.vmeta_i, vmeta_f=g.vmeta_f,
-        emeta_i=g.emeta_i, emeta_f=g.emeta_f,
-        v_int="\x00".join(g.spec.v_int), v_float="\x00".join(g.spec.v_float),
-        e_int="\x00".join(g.spec.e_int), e_float="\x00".join(g.spec.e_float))
+    np.savez_compressed(path, **_graph_fields(g))
 
 
 def load_graph(path: str) -> HostGraph:
+    return _graph_from_npz(np.load(path, allow_pickle=False))
+
+
+def save_delta(path: str, dg: DeltaGraph):
+    np.savez_compressed(
+        path, **_graph_fields(dg.base),
+        d_src=dg.d_src, d_dst=dg.d_dst,
+        d_emeta_i=dg.d_emeta_i, d_emeta_f=dg.d_emeta_f,
+        epoch=dg.epoch)
+
+
+def load_delta(path: str) -> DeltaGraph:
     z = np.load(path, allow_pickle=False)
-    names = lambda k: tuple(x for x in str(z[k]) .split("\x00") if x)
-    spec = MetaSpec(v_int=names("v_int"), v_float=names("v_float"),
-                    e_int=names("e_int"), e_float=names("e_float"))
-    return HostGraph(n=int(z["n"]), src=z["src"], dst=z["dst"], spec=spec,
-                     vmeta_i=z["vmeta_i"], vmeta_f=z["vmeta_f"],
-                     emeta_i=z["emeta_i"], emeta_f=z["emeta_f"])
+    return DeltaGraph(base=_graph_from_npz(z), d_src=z["d_src"],
+                      d_dst=z["d_dst"], d_emeta_i=z["d_emeta_i"],
+                      d_emeta_f=z["d_emeta_f"], epoch=int(z["epoch"]))

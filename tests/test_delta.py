@@ -1,0 +1,396 @@
+"""Temporal delta engine: K appended batches + merge_epochs must equal one
+full survey of the unioned graph, bitwise, for every built-in survey (ISSUE 3
+acceptance), with per-epoch work/bytes strictly below full recompute on
+streaming-shaped batches. Deterministic coverage lives here; the hypothesis
+fuzzing twin is test_delta_property.py."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dodgr import shard_delta, shard_dodgr
+from repro.core.engine import (EngineConfig, finalize_epochs, survey_delta,
+                               survey_push_only, survey_push_pull)
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.ref import (count_triangles_ref, new_triangle_classes_ref,
+                            survey_triangles_ref)
+from repro.core.surveys import (ClosureTime, DegreeTriples, Enumerate,
+                                LabelTripleSet, LocalVertexCount,
+                                MaxEdgeLabelDist, SurveyBundle,
+                                TopKWeightedTriangles, TriangleCount)
+from repro.graphs import generators
+from repro.graphs.csr import DeltaGraph, HostGraph
+from repro.graphs.csr import MetaSpec as GraphSpec
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.shape == b.shape and (a == b).all()
+    return a == b
+
+
+def _labeled_graph(n=120, m=1200, seed=4):
+    """temporal_social + *final-graph* degree vertex column + int edge label
+    column. Degrees are metadata (an input), so every epoch sees the same
+    final values — the setting in which DegreeTriples can be bitwise."""
+    g = generators.temporal_social(n, m, seed=seed)
+    spec = GraphSpec(v_int=g.spec.v_int + ("degree",), v_float=(),
+                     e_int=("elabel",), e_float=g.spec.e_float)
+    deg = g.degrees().astype(np.int32)
+    vmeta_i = np.concatenate([g.vmeta_i, deg[:, None]], 1)
+    elab = (np.arange(g.m, dtype=np.int32) % 7)[:, None]
+    return HostGraph(g.n, g.src, g.dst, spec, vmeta_i, None, elab, g.emeta_f)
+
+
+def _ts_batches(g, K):
+    """Edge-index batches in timestamp order (the streaming arrival order)."""
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    return np.array_split(order, K)
+
+
+def _empty_base(g):
+    return HostGraph(g.n, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                     g.spec, g.vmeta_i, g.vmeta_f)
+
+
+def _append(dg_or_base, g, idx):
+    return dg_or_base.append_edges(g.src[idx], g.dst[idx],
+                                   emeta_i=g.emeta_i[idx],
+                                   emeta_f=g.emeta_f[idx])
+
+
+def _run_epochs(g, splits, survey, mode, S=2, push_cap=64, pull_q_cap=4):
+    dg, state, log = None, None, []
+    for idx in splits:
+        dg = _append(dg if dg is not None else _empty_base(g), g, idx)
+        gr, _ = shard_delta(dg, S)
+        cfg, rep = plan_delta(dg, S, survey, mode=mode, push_cap=push_cap,
+                              pull_q_cap=pull_q_cap)
+        state, st = survey_delta(gr, survey, cfg, state)
+        log.append((st, rep))
+    return dg, state, log
+
+
+def _run_full(g_union, survey, mode, S=2, push_cap=64, pull_q_cap=4):
+    gr, _ = shard_dodgr(g_union, S, orient="stable")
+    cfg, rep = plan_engine(g_union, S, survey, mode=mode, orient="stable",
+                           push_cap=push_cap, pull_q_cap=pull_q_cap)
+    run = survey_push_only if mode == "push" else survey_push_pull
+    res, st = run(gr, survey, cfg)
+    return res, st, rep
+
+
+# ---------------------------------------------------------------------------
+# host layers: append_edges / frontier / oracle decomposition
+
+
+def test_append_edges_dedup_growth_and_epochs():
+    base = HostGraph.from_edges(4, [0, 1], [1, 2])
+    dg = base.append_edges([2, 1, 0, 3, 5], [3, 0, 0, 2, 5])
+    # (1,0) re-arrives base (0,1) — dropped; (0,0)/(5,5) loops dropped;
+    # (3,2) is a batch-internal duplicate of (2,3); n grows to 6
+    assert dg.epoch == 1
+    assert dg.n == 6
+    assert dg.m_delta == 1
+    assert set(zip(dg.d_src.tolist(), dg.d_dst.tolist())) == {(2, 3)}
+    u = dg.union()
+    assert u.m == base.m + 1
+    # next epoch folds the overlay into the base
+    dg2 = dg.append_edges([0], [3])
+    assert dg2.epoch == 2
+    assert dg2.base.m == u.m and dg2.m_delta == 1
+    # duplicate-only batch → empty overlay, still a valid epoch
+    dg3 = dg2.append_edges([0, 3], [1, 0])
+    assert dg3.epoch == 3 and dg3.m_delta == 0
+    assert dg3.union().m == u.m + 1
+
+
+def test_append_edges_vertex_growth_pads_metadata():
+    spec = GraphSpec(v_int=("label",))
+    g = HostGraph.from_edges(3, [0, 1], [1, 2], spec=spec,
+                             vmeta_i=np.array([[7], [8], [9]], np.int32))
+    dg = g.append_edges([2], [4])
+    assert dg.n == 5
+    assert dg.base.vmeta_i.shape == (5, 1)
+    assert dg.base.vmeta_i[:3, 0].tolist() == [7, 8, 9]
+    assert dg.base.vmeta_i[3:, 0].tolist() == [0, 0]
+
+
+def test_frontier_contains_exactly_the_new_triangles():
+    g = _labeled_graph(80, 500, seed=9)
+    splits = _ts_batches(g, 3)
+    dg = _append(_empty_base(g), g, splits[0])
+    for idx in splits[1:]:
+        dg = _append(dg, g, idx)
+        h, edge_new = dg.frontier()
+        cls = new_triangle_classes_ref(h, edge_new, orient="stable")
+        # new triangles of the union == new-classed triangles of the frontier
+        u = dg.union()
+        t_union = count_triangles_ref(u, orient="stable")
+        t_base = count_triangles_ref(dg.base, orient="stable")
+        assert cls["noo"] + cls["nno"] + cls["nnn"] == t_union - t_base
+        # frontier never invents triangles outside the union
+        assert count_triangles_ref(h) <= t_union
+
+
+def test_delta_io_roundtrip(tmp_path):
+    from repro.graphs.io import load_delta, save_delta
+
+    g = _labeled_graph(60, 300, seed=2)
+    splits = _ts_batches(g, 2)
+    dg = _append(_append(_empty_base(g), g, splits[0]), g, splits[1])
+    path = str(tmp_path / "delta.npz")
+    save_delta(path, dg)
+    dg2 = load_delta(path)
+    assert dg2.epoch == dg.epoch and dg2.n == dg.n
+    assert (dg2.d_src == dg.d_src).all() and (dg2.base.src == dg.base.src).all()
+    assert (dg2.d_emeta_f == dg.d_emeta_f).all()
+    assert dg2.spec == dg.spec
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: K batches + merge_epochs ≡ one full survey
+
+
+def _bundle(g):
+    """Every bitwise-accumulating built-in survey, polled in one pass."""
+    return SurveyBundle([
+        TriangleCount(),
+        ClosureTime(ts_col=0),
+        LabelTripleSet(v_label_col=0, capacity=1 << 12),
+        MaxEdgeLabelDist(n_labels=8, e_label_col=0, v_label_col=0),
+        DegreeTriples(deg_col=1, capacity=1 << 12),
+        LocalVertexCount(g.n),
+        TopKWeightedTriangles(k=16, weight_col=0),
+    ])
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_k4_batches_bitwise_equal_full_survey(mode):
+    """ISSUE 3 acceptance: K=4 appended temporal_social batches via
+    survey_delta + merge_epochs, bitwise-identical to one full survey of the
+    final graph — for every built-in survey, both engine modes."""
+    g = _labeled_graph(120, 1200, seed=4)
+    splits = _ts_batches(g, 4)
+    survey = _bundle(g)
+    dg, state, log = _run_epochs(g, splits, survey, mode)
+    res_delta = finalize_epochs(survey, state)
+    res_full, st_full, _ = _run_full(dg.union(), _bundle(g), mode)
+    assert _tree_equal(res_delta, res_full)
+    # triangle conservation: per-epoch folds partition the triangle set
+    tris = sum(st["tris_push"] + st["tris_pull"] for st, _ in log)
+    assert int(tris) == int(st_full["tris_push"] + st_full["tris_pull"])
+    # every epoch reports its provenance
+    assert [int(st["epoch"]) for st, _ in log] == [1, 2, 3, 4]
+
+
+def test_k4_batches_enumerate_matches_full_set():
+    """Enumerate accumulates by buffer concatenation: totals are exact and
+    the union of per-epoch samples is the full triangle set (no overflow).
+    Ring placement is execution-dependent, so the assertion is set-level."""
+    g = _labeled_graph(100, 700, seed=5)
+    splits = _ts_batches(g, 4)
+    survey = Enumerate(capacity=4096)
+    dg, state, _ = _run_epochs(g, splits, survey, "pushpull")
+    res = finalize_epochs(survey, state)
+    oracle = set()
+    survey_triangles_ref(dg.union(),
+                         lambda p, q, r, m: oracle.add((p, q, r)),
+                         orient="stable")
+    assert res["total_found"] == len(oracle)
+    assert res["overflowed"] == 0
+    assert {tuple(t) for t in res["triangles"].tolist()} == oracle
+
+
+def test_single_epoch_equals_static_survey():
+    """Epoch 1 on an empty base is a degenerate delta: everything is new, so
+    the delta engine must reproduce the static engine exactly."""
+    g = _labeled_graph(100, 700, seed=7)
+    dg = _append(_empty_base(g), g, np.arange(g.m))
+    gr, _ = shard_delta(dg, S=3)
+    cfg, _ = plan_delta(dg, 3, TriangleCount(), mode="pushpull",
+                        push_cap=64, pull_q_cap=4)
+    state, st = survey_delta(gr, TriangleCount(), cfg)
+    assert finalize_epochs(TriangleCount(), state) == count_triangles_ref(g)
+
+
+# ---------------------------------------------------------------------------
+# planner/engine agreement + communication restriction
+
+
+def test_delta_plan_engine_agreement():
+    g = _labeled_graph(120, 1200, seed=4)
+    splits = _ts_batches(g, 4)
+    dg, state, log = _run_epochs(g, splits, TriangleCount(), "pushpull", S=4)
+    for st, rep in log:
+        assert st["pull_overflow"] == 0
+        assert int(st["pull_requests"]) == rep.pushpull_requests
+        assert int(st["wedges_pushed"]) == rep.pushpull_push_entries
+        assert int(st["wedges_pulled"]) == rep.pulled_wedges
+
+
+def test_streaming_epoch_work_below_full_recompute():
+    """ISSUE 3 acceptance (analytic half): on streaming-shaped batches the
+    final epoch's generated wedges AND exchanged bytes are strictly below a
+    full recompute of the final graph, in both cost dimensions."""
+    g = generators.temporal_social(800, 8000, seed=3)
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    hist, tail = order[:-200], order[-200:]
+    dg = _append(_empty_base(g), g, hist)
+    dg = _append(dg, g, tail)
+    cfg_d, rep_d = plan_delta(dg, 4, TriangleCount(), mode="pushpull",
+                              push_cap=256)
+    cfg_f, rep_f = plan_engine(dg.union(), 4, TriangleCount(),
+                               mode="pushpull", orient="stable",
+                               push_cap=256)
+    assert rep_d.gen_wedges < rep_f.gen_wedges
+    assert rep_d.pushpull_bytes < rep_f.pushpull_bytes
+    assert rep_d.push_only_bytes < rep_f.push_only_bytes
+    # and the restricted traversal still lands the exact new-triangle count
+    gr_d, _ = shard_delta(dg, 4)
+    state, st = survey_delta(gr_d, TriangleCount(), cfg_d)
+    h, edge_new = dg.frontier()
+    cls = new_triangle_classes_ref(h, edge_new, orient="stable")
+    assert int(st["tris_push"] + st["tris_pull"]) == (
+        cls["noo"] + cls["nno"] + cls["nnn"])
+
+
+# ---------------------------------------------------------------------------
+# provenance guards
+
+
+def test_delta_provenance_guards():
+    g = _labeled_graph(80, 500, seed=9)
+    splits = _ts_batches(g, 2)
+    dg = _append(_empty_base(g), g, splits[0])
+    gr_d, _ = shard_delta(dg, S=2)
+    cfg_d, _ = plan_delta(dg, 2, TriangleCount(), mode="push", push_cap=64)
+    gr_f, _ = shard_dodgr(dg.union(), 2)
+    cfg_f, _ = plan_engine(dg.union(), 2, TriangleCount(), mode="push")
+
+    # a frontier can't run under a static plan (and vice versa)
+    with pytest.raises(ValueError, match="delta"):
+        survey_push_only(gr_d, TriangleCount(), cfg_f)
+    with pytest.raises(ValueError, match="delta plan"):
+        survey_delta(gr_f, TriangleCount(), cfg_f)
+    # orientation stamps must agree
+    with pytest.raises(ValueError, match="orientation mismatch"):
+        survey_push_only(gr_f, TriangleCount(),
+                         plan_engine(dg.union(), 2, TriangleCount(),
+                                     mode="push", orient="stable")[0])
+    # epoch stamps must agree
+    dg2 = _append(dg, g, splits[1])
+    gr_d2, _ = shard_delta(dg2, S=2)
+    with pytest.raises(ValueError, match="epoch mismatch"):
+        survey_delta(gr_d2, TriangleCount(), cfg_d)
+    # sampling is a full-snapshot feature
+    import dataclasses
+    with pytest.raises(ValueError, match="sampling"):
+        survey_delta(gr_d, TriangleCount(),
+                     dataclasses.replace(cfg_d, sample_p=0.5))
+
+
+def test_sampled_base_stamp_survives_epoch_append():
+    """A DOULION-stamped history must keep its provenance through
+    append_edges → union/frontier, so a sampled snapshot still debiases and
+    a sampled delta epoch is rejected loudly (never silently un-debiased)."""
+    from repro.core.dodgr import sparsify_edges
+
+    g = _labeled_graph(80, 500, seed=9)
+    g_s = sparsify_edges(g, 0.5, seed=3)
+    dg = g_s.append_edges([0, 1], [2, 3])
+    assert dg.union().sample_p == 0.5 and dg.union().sample_seed == 3
+    h, _ = dg.frontier()
+    assert h.sample_p == 0.5
+    # sampled full snapshot: stamp flows into shards + plan → debias stats
+    gr, _ = shard_dodgr(dg.union(), 2)
+    cfg, _ = plan_engine(dg.union(), 2, TriangleCount(), mode="push")
+    assert cfg.sample_p == 0.5
+    _, st = survey_push_only(gr, TriangleCount(), cfg)
+    assert st["sample_p"] == 0.5
+    # sampled delta epoch: refused, not silently wrong
+    gr_d, _ = shard_delta(dg, 2)
+    cfg_d, _ = plan_delta(dg, 2, TriangleCount(), mode="push")
+    with pytest.raises(ValueError, match="sampling"):
+        survey_delta(gr_d, TriangleCount(), cfg_d)
+
+
+# ---------------------------------------------------------------------------
+# pull_q_cap autotuning (satellite)
+
+
+def test_pull_q_cap_autotune_default_and_override():
+    g = generators.temporal_social(150, 1500, seed=7)
+    # default (None) autotunes from the pulled-group histogram
+    cfg_auto, rep_auto = plan_engine(g, 4, TriangleCount(), mode="pushpull")
+    assert cfg_auto.pull_q_cap >= 1
+    assert rep_auto.pull_q_cap == cfg_auto.pull_q_cap
+    # power-of-two cap unless clipped to the histogram max
+    c = cfg_auto.pull_q_cap
+    assert (c & (c - 1)) == 0 or rep_auto.pushpull_requests > 0
+    # explicit override wins
+    cfg_ovr, _ = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                             pull_q_cap=3)
+    assert cfg_ovr.pull_q_cap == 3
+    # the autotuned plan still runs exactly
+    gr, _ = shard_dodgr(g, S=4)
+    res, st = survey_push_pull(gr, TriangleCount(), cfg_auto)
+    assert res == count_triangles_ref(g)
+    assert st["pull_overflow"] == 0
+
+
+def test_pull_q_cap_autotune_is_survey_aware():
+    """Wider survey rows must never yield a *larger* autotuned cap (the
+    byte-aware ceiling shrinks as the projected row widens)."""
+    from repro.core.pushpull import _autotune_pull_q_cap
+
+    per_sd = np.array([0, 3, 900, 10, 12, 700, 2, 0])
+    narrow = _autotune_pull_q_cap(per_sd, w_row=3, w_hdr=2, L=64)
+    wide = _autotune_pull_q_cap(per_sd, w_row=64, w_hdr=8, L=512)
+    assert wide <= narrow
+    assert _autotune_pull_q_cap(np.zeros(8, np.int64), 3, 2, 64) == 32
+
+
+# ---------------------------------------------------------------------------
+# merge_epochs unit semantics
+
+
+def test_merge_epochs_counter64_carry():
+    s = TriangleCount()
+    prev = dict(lo=jnp.uint32(0xFFFFFFF0), hi=jnp.uint32(1))
+    delta = dict(lo=jnp.uint32(0x20), hi=jnp.uint32(2))
+    from repro.core.surveys import counter64_value
+
+    assert counter64_value(s.merge_epochs(prev, delta)) == \
+        (0xFFFFFFF0 + 0x20) + (1 + 2) * 2**32
+
+
+def test_merge_epochs_topk_is_merge_by_sort():
+    s = TopKWeightedTriangles(k=3)
+    a = dict(w=jnp.asarray([9.0, 5.0, -jnp.inf]),
+             tri=jnp.asarray([[1, 2, 3], [4, 5, 6], [-1, -1, -1]], jnp.int32))
+    b = dict(w=jnp.asarray([7.0, 6.0, 1.0]),
+             tri=jnp.asarray([[7, 8, 9], [3, 2, 1], [0, 1, 2]], jnp.int32))
+    out = s.merge_epochs(a, b)
+    assert np.asarray(out["w"]).tolist() == [9.0, 7.0, 6.0]
+    assert np.asarray(out["tri"]).tolist() == [[1, 2, 3], [7, 8, 9], [3, 2, 1]]
+
+
+def test_merge_epochs_counting_set_detects_cross_epoch_collisions():
+    from repro.core.counting_set import CountingSet
+
+    cs = CountingSet(8, 1)  # tiny capacity → forced collisions
+    a = cs.increment(cs.init(), jnp.asarray([[1]], jnp.int32),
+                     jnp.asarray([True]))
+    # find a colliding key for slot of key 1
+    slot_of = lambda k: int(np.asarray(
+        cs.increment(cs.init(), jnp.asarray([[k]], jnp.int32),
+                     jnp.asarray([True]))["count"]).argmax())
+    k2 = next(k for k in range(2, 200) if slot_of(k) == slot_of(1))
+    b = cs.increment(cs.init(), jnp.asarray([[k2]], jnp.int32),
+                     jnp.asarray([True]))
+    fin = cs.finalize(cs.merge_epochs(a, b))
+    assert fin["n_collided_slots"] == 1
+    assert fin["count_in_collided"] == 2

@@ -1,0 +1,48 @@
+"""Hypothesis twin of test_delta.py: random graphs, random batch splits
+(arbitrary arrival order, not timestamp-sorted), a random built-in survey,
+both engine modes — K appended batches + merge_epochs ≡ one full survey of
+the union, bitwise (satellite: delta correctness property test)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import finalize_epochs
+from repro.core.surveys import (ClosureTime, DegreeTriples, LabelTripleSet,
+                                LocalVertexCount, MaxEdgeLabelDist,
+                                SurveyBundle, TopKWeightedTriangles,
+                                TriangleCount)
+
+from test_delta import (_empty_base, _labeled_graph, _run_epochs, _run_full,
+                        _tree_equal)
+
+
+def _surveys(g):
+    return [
+        TriangleCount(),
+        ClosureTime(ts_col=0),
+        LabelTripleSet(v_label_col=0, capacity=1 << 12),
+        MaxEdgeLabelDist(n_labels=8),
+        DegreeTriples(deg_col=1, capacity=1 << 12),
+        LocalVertexCount(g.n),
+        TopKWeightedTriangles(k=8, weight_col=0),
+        SurveyBundle([TriangleCount(), ClosureTime(ts_col=0)]),
+    ]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.integers(150, 400),
+       K=st.integers(2, 4), mode=st.sampled_from(["push", "pushpull"]),
+       idx=st.integers(0, 7), shuffle_seed=st.integers(0, 2**16))
+def test_delta_epochs_bitwise_property(seed, m, K, mode, idx, shuffle_seed):
+    g = _labeled_graph(n=60, m=m, seed=seed)
+    survey = _surveys(g)[idx]
+    # arbitrary batch partition — correctness must not depend on arrival
+    # order being chronological
+    order = np.random.default_rng(shuffle_seed).permutation(g.m)
+    splits = [s for s in np.array_split(order, K)]
+    dg, state, _ = _run_epochs(g, splits, survey, mode)
+    res_delta = finalize_epochs(survey, state)
+    res_full, _, _ = _run_full(dg.union(), _surveys(g)[idx], mode)
+    assert _tree_equal(res_delta, res_full)

@@ -1,15 +1,34 @@
-"""Paper Tab. 3 / Tab. 4 analog: Push-Only vs Push-Pull communication
-volume and pulls-per-rank across shard counts (analytic, byte-exact from
-the planner — the same accounting the paper instruments at runtime)."""
+"""Paper Tab. 3 / Tab. 4 analog + the two-tier exchange acceptance cells.
+
+Three row families:
+
+* ``pushpull_plan/*`` — Push-Only vs Push-Pull communication volume and
+  pulls-per-rank across shard counts (analytic, byte-exact from the
+  planner — the same accounting the paper instruments at runtime).
+* ``transport/*`` — dense vs ragged vs ragged+hub wire volumes on a
+  skewed R-MAT (scale 12, edge factor 8; the ISSUE 4 acceptance cell):
+  per-lane buffer bytes that actually cross the shard axis, the ≥2×
+  ragged+hub-vs-dense reduction, and an engine run per transport
+  asserting identical triangle counts.
+* ``delta_hub/*`` — the PR 3 hub-touching-batch blow-up: exchanged wedge
+  volume of a delta epoch whose batch slams the heaviest vertex, with and
+  without hub delegation.
+"""
 from __future__ import annotations
 
 import time
 
-from repro.core.pushpull import plan_engine
+import numpy as np
+
+from repro.core.dodgr import shard_delta, shard_dodgr
+from repro.core.engine import survey_delta, survey_push_pull
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.surveys import TriangleCount
 from repro.graphs import generators
+from repro.graphs.csr import HostGraph
 
 
-def run(quick=True):
+def _plan_rows(quick):
     rows = []
     graphs = {
         "rmat10": lambda: generators.rmat(10, 16, seed=5),
@@ -30,3 +49,92 @@ def run(quick=True):
                 pulls_per_rank=round(rep.pulls_per_rank, 1),
             )))
     return rows
+
+
+def _transport_rows(quick):
+    """ISSUE 4 acceptance: skewed rmat (scale ≥ 12, skew ≥ 8), measured
+    exchanged bytes per transport at identical results."""
+    rows = []
+    scales = [(12, 8)] if quick else [(12, 8), (13, 8)]
+    for scale, ef in scales:
+        g = generators.rmat(scale, ef, seed=5)
+        S = 8
+        results, wire = {}, {}
+        for tr, hub in (("dense", 0), ("ragged", 0), ("ragged", "auto")):
+            name = tr if not hub else "ragged+hub"
+            cfg, rep = plan_engine(g, S, TriangleCount(), mode="pushpull",
+                                   transport=tr, hub_theta=hub,
+                                   cost_model="bytes", push_cap=1024)
+            gr, _ = shard_dodgr(g, S, hub_theta=cfg.hub_theta)
+            t0 = time.time()
+            res, st = survey_push_pull(gr, TriangleCount(), cfg)
+            dt = (time.time() - t0) * 1e6
+            assert st["exact"] is True
+            results[name] = res
+            # measured per-lane wire bytes (stats are 4-byte words)
+            lanes = dict(
+                push_MB=round(st["wire_push_words"] * 4 / 1e6, 3),
+                req_MB=round(st["wire_req_words"] * 4 / 1e6, 3),
+                reply_MB=round(st["wire_reply_words"] * 4 / 1e6, 3),
+                hub_table_MB=round(rep.hub_table_bytes / 1e6, 3),
+            )
+            wire[name] = (st["wire_push_words"] + st["wire_req_words"]
+                          + st["wire_reply_words"]) * 4 + rep.hub_table_bytes
+            rows.append((f"transport/rmat{scale}x{ef}/S{S}/{name}", dt, dict(
+                wire_total_MB=round(wire[name] / 1e6, 3),
+                triangles=int(res), hub_theta=cfg.hub_theta,
+                n_hubs=rep.n_hubs,
+                hub_wedges=int(st["wedges_hub"]), **lanes)))
+        assert len(set(results.values())) == 1, "transports disagree!"
+        rows.append((f"transport/rmat{scale}x{ef}/S{S}/reduction", 0.0, dict(
+            ragged_vs_dense=round(wire["dense"] / wire["ragged"], 2),
+            ragged_hub_vs_dense=round(wire["dense"] / wire["ragged+hub"], 2),
+            acceptance_2x=bool(wire["dense"] / wire["ragged+hub"] >= 2.0),
+        )))
+    return rows
+
+
+def _delta_hub_rows(quick):
+    """Hub-touching delta batch: the PR 3 frontier blow-up, with vs without
+    delegation (exchanged wedges = what still crosses the shard axis)."""
+    n, m = (600, 6000) if quick else (1500, 30000)
+    g = generators.temporal_social(n, m, seed=3)
+    hub = int(np.argmax(g.degrees()))
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    touches = (g.src == hub) | (g.dst == hub)
+    batch = order[np.nonzero(touches[order])[0][-150:]]
+    hist = np.setdiff1d(order, batch)
+    empty = HostGraph(g.n, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                      g.spec, g.vmeta_i, g.vmeta_f)
+    dg = empty.append_edges(g.src[hist], g.dst[hist],
+                            emeta_i=g.emeta_i[hist], emeta_f=g.emeta_f[hist])
+    dg = dg.append_edges(g.src[batch], g.dst[batch],
+                         emeta_i=g.emeta_i[batch], emeta_f=g.emeta_f[batch])
+    rows = []
+    out = {}
+    for name, tr, hubv in (("plain", "dense", 0), ("hub", "ragged", "auto")):
+        cfg, rep = plan_delta(dg, 4, TriangleCount(), mode="pushpull",
+                              push_cap=256, transport=tr, hub_theta=hubv,
+                              cost_model="bytes")
+        gr, _ = shard_delta(dg, 4, hub_theta=cfg.hub_theta)
+        t0 = time.time()
+        state, st = survey_delta(gr, TriangleCount(), cfg)
+        dt = (time.time() - t0) * 1e6
+        exchanged = rep.pushpull_push_entries + rep.pulled_wedges
+        out[name] = (exchanged, int(st["tris_push"] + st["tris_pull"]
+                                    + st["tris_hub"]))
+        rows.append((f"delta_hub/{name}", dt, dict(
+            gen_wedges=rep.gen_wedges,
+            exchanged_wedges=exchanged,
+            hub_wedges=rep.hub_resolved_wedges,
+            wire_total_MB=round(rep.wire_total_bytes / 1e6, 3),
+            new_triangles=out[name][1], hub_theta=cfg.hub_theta)))
+    assert out["plain"][1] == out["hub"][1], "delta transports disagree!"
+    rows.append(("delta_hub/frontier_shrink", 0.0, dict(
+        exchanged_reduction=round(out["plain"][0] / max(1, out["hub"][0]), 2),
+    )))
+    return rows
+
+
+def run(quick=True):
+    return _plan_rows(quick) + _transport_rows(quick) + _delta_hub_rows(quick)

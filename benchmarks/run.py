@@ -1,22 +1,30 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only a,b]
+                                            [--json BENCH_<suite>.json]
 
-Prints ``name,us_per_call,derived`` CSV. Roofline terms for the
-production mesh come from the dry-run artifacts (launch/dryrun.py +
-roofline/report.py), not from CPU wall-times.
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the same rows as machine-readable JSON (one object per row plus a
+run header) — the perf-trajectory artifact CI uploads on every PR, so
+regressions in exchanged bytes / wall-clock are diffable across commits.
+Roofline terms for the production mesh come from the dry-run artifacts
+(launch/dryrun.py + roofline/report.py), not from CPU wall-times.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import platform
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="also write rows as JSON to this path")
     args = ap.parse_args()
     quick = not args.full
 
@@ -25,7 +33,7 @@ def main() -> None:
                             bench_pushpull, bench_scaling, bench_streaming)
 
     suites = dict(
-        pushpull=bench_pushpull,     # Tab. 3 / Tab. 4
+        pushpull=bench_pushpull,     # Tab. 3 / Tab. 4 + transport/hub cells
         counting=bench_counting,     # Tab. 2 / Tab. 4
         closure=bench_closure,       # Fig. 6 / Fig. 7 + Fig. 9 baseline
         scaling=bench_scaling,       # Fig. 4 / Fig. 5
@@ -39,13 +47,33 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = 0
+    records = []
     for name, mod in suites.items():
         try:
             for row_name, us, derived in mod.run(quick=quick):
                 print(f"{row_name},{us:.1f},{json.dumps(derived)}")
+                records.append(dict(suite=name, name=row_name,
+                                    us_per_call=round(us, 1),
+                                    derived=derived))
         except Exception as e:  # pragma: no cover
             failed += 1
             print(f"{name}/ERROR,0,{json.dumps(dict(error=str(e)))}")
+            records.append(dict(suite=name, name=f"{name}/ERROR",
+                                us_per_call=0.0,
+                                derived=dict(error=str(e))))
+    if args.json:
+        doc = dict(
+            schema="tripoll-bench/v1",
+            timestamp=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            platform=platform.platform(),
+            python=platform.python_version(),
+            quick=quick,
+            suites=sorted(suites),
+            rows=records,
+        )
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -1,3 +1,6 @@
 from repro.comm.collectives import make_int8_compressor
+from repro.comm.exchange import (TRANSPORTS, DenseExchange, Exchange,
+                                 RaggedExchange, make_exchange)
 
-__all__ = ["make_int8_compressor"]
+__all__ = ["make_int8_compressor", "Exchange", "DenseExchange",
+           "RaggedExchange", "make_exchange", "TRANSPORTS"]

@@ -1,0 +1,210 @@
+"""Pluggable transport layer for the survey engine's superstep exchanges.
+
+The engine's communication pattern is one *dest-major buffer exchange* per
+superstep: each source shard emits, per destination shard, a block of
+fixed-width entries; the transport routes block (s, d) to shard ``d`` (and,
+for the pull phase, routes per-slot replies back along the inverse path).
+
+Two implementations of the same :class:`Exchange` interface:
+
+``dense``
+    The historic path, preserved bit-for-bit: every (src, dest) pair gets
+    the same static capacity ``cap`` (sized by the *worst* pair), and the
+    exchange is ``swapaxes(x, 0, 1)`` on the stacked ``[S_src, S_dst, cap]``
+    buffer — which the GSPMD partitioner lowers to a real all-to-all when
+    axis 0 is sharded over the device mesh (DESIGN.md §2). Skewed graphs pay
+    heavy padding: one hub-bound stream sizes every pair's block.
+
+``ragged``
+    Sorted-compaction streams: each (src, dest) pair gets its *own* static
+    per-round capacity — taken from the host planner's exact per-(shard,
+    dest) stream histograms — so a shard ships ``Σ_d cap[s, d]`` slots per
+    round instead of ``S·max_sd cap``. Buffers are flat per-shard arrays
+    with static block offsets; routing is a cross-shard gather with
+    precomputed (host-side) index maps — the stacked-layout stand-in for a
+    ragged all-to-all, exactly as ``swapaxes`` stands in for the dense one.
+
+Both transports expose the static send-side maps (``dest_of`` / ``lane_of``
+/ ``cap_of`` / ``block_off``) the engine uses to enumerate wedge-stream
+ranks directly into wire slots, plus per-round slot counts so exchanged
+bytes are *measured* from the actual buffers that cross the shard axis
+(``VolumeReport``'s analytic wire fields must match them exactly — asserted
+in tests/test_exchange.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+TRANSPORTS = ("dense", "ragged")
+
+
+class Exchange:
+    """Static routing for one dest-major exchange lane.
+
+    Attributes (all host-side static; ``j`` indexes send-buffer slots,
+    ``i`` recv-buffer slots):
+
+    ``S``          shard count
+    ``out_cap``    send-buffer slots per shard per round (padded max)
+    ``in_cap``     recv-buffer slots per shard per round (padded max)
+    ``caps``       [S, S] per-(src, dest) slots per round
+    ``dest_of``    [S, out_cap] destination shard of slot j (S = padding)
+    ``lane_of``    [S, out_cap] rank of slot j within its (s, d) block
+    ``cap_of``     [S, out_cap] block capacity of slot j (0 on padding)
+    ``block_off``  [S, S] offset of dest-d's block in s's send buffer
+    ``recv_ok``    [S, in_cap] bool or None — valid recv slots (None = all)
+    """
+
+    name: str
+
+    def scatter(self, tree):
+        """Route send buffers to owners: ``[S, out_cap, ...] → [S, in_cap, ...]``."""
+        raise NotImplementedError
+
+    def gather(self, tree):
+        """Route per-recv-slot replies back along the inverse path:
+        ``[S, in_cap, ...] → [S, out_cap, ...]``."""
+        raise NotImplementedError
+
+    def round_slots(self) -> int:
+        """Wire slots (including block padding) shipped per round, summed
+        over every (src, dest) pair — the measured exchange volume."""
+        return int(np.asarray(self.caps, np.int64).sum())
+
+    def apply_recv_ok(self, ok):
+        """Mask a delivered ``ok`` field with recv-slot validity."""
+        if self.recv_ok is None:
+            return ok
+        return ok & jnp.asarray(self.recv_ok)
+
+
+class DenseExchange(Exchange):
+    """The historic swapaxes all-to-all: one global per-pair capacity."""
+
+    name = "dense"
+
+    def __init__(self, S: int, cap: int):
+        cap = max(1, int(cap))
+        self.S, self.cap = S, cap
+        self.out_cap = self.in_cap = S * cap
+        self.caps = np.full((S, S), cap, np.int64)
+        j = np.arange(S * cap, dtype=np.int32)
+        self.dest_of = np.broadcast_to(j // cap, (S, S * cap))
+        self.lane_of = np.broadcast_to(j % cap, (S, S * cap))
+        self.cap_of = np.full((S, S * cap), cap, np.int32)
+        self.block_off = np.broadcast_to(
+            np.arange(S, dtype=np.int32) * cap, (S, S))
+        self.recv_ok = None
+
+    def scatter(self, tree):
+        S, cap = self.S, self.cap
+
+        def one(x):
+            y = x.reshape((S, S, cap) + x.shape[2:])
+            y = jnp.swapaxes(y, 0, 1)
+            return y.reshape((S, S * cap) + y.shape[3:])
+
+        return jax.tree.map(one, tree)
+
+    def gather(self, tree):
+        # inverse of scatter: owner-major [S_owner, S_src·cap] back to
+        # requester-major [S_src, S_owner·cap]; swapaxes is an involution on
+        # the (src, owner) block grid, so the same reshape pattern inverts it
+        return self.scatter(tree)
+
+
+class RaggedExchange(Exchange):
+    """Per-(src, dest) static capacities; compaction via indexed routing."""
+
+    name = "ragged"
+
+    def __init__(self, caps: np.ndarray):
+        caps = np.asarray(caps, np.int64)
+        if caps.ndim != 2 or caps.shape[0] != caps.shape[1]:
+            raise ValueError(f"caps must be [S, S], got {caps.shape}")
+        if (caps < 0).any():
+            raise ValueError("negative per-pair capacity")
+        S = caps.shape[0]
+        self.S, self.caps = S, caps
+        out_len = caps.sum(1)                      # [S] send slots per shard
+        in_len = caps.sum(0)                       # [S] recv slots per shard
+        self.out_cap = max(1, int(out_len.max()))
+        self.in_cap = max(1, int(in_len.max()))
+        # send-side block offsets within each shard's flat buffer
+        self.block_off = np.zeros((S, S), np.int32)
+        self.block_off[:, 1:] = np.cumsum(caps[:, :-1], 1)
+        # recv-side offsets: dest d's buffer concatenates blocks over src s
+        in_off = np.zeros((S, S), np.int64)        # [dest, src]
+        in_off[:, 1:] = np.cumsum(caps.T[:, :-1], 1)
+
+        self.dest_of = np.full((S, self.out_cap), S, np.int32)
+        self.lane_of = np.zeros((S, self.out_cap), np.int32)
+        self.cap_of = np.zeros((S, self.out_cap), np.int32)
+        # gather maps (reply routing): slot j of s's send buffer was
+        # delivered to shard dest_of[s, j] at recv position
+        # in_off[dest, s] + lane — the inverse route reads it back from there
+        self._back_slot = np.zeros((S, self.out_cap), np.int32)
+        for s in range(S):
+            for d in range(S):
+                c = int(caps[s, d])
+                if c == 0:
+                    continue
+                lo = self.block_off[s, d]
+                self.dest_of[s, lo:lo + c] = d
+                self.lane_of[s, lo:lo + c] = np.arange(c)
+                self.cap_of[s, lo:lo + c] = c
+                self._back_slot[s, lo:lo + c] = in_off[d, s] + np.arange(c)
+        # scatter maps: recv slot i of dest d reads send slot of src s
+        self._src_idx = np.zeros((S, self.in_cap), np.int32)
+        self._slot_idx = np.zeros((S, self.in_cap), np.int32)
+        self.recv_ok = np.zeros((S, self.in_cap), bool)
+        for d in range(S):
+            for s in range(S):
+                c = int(caps[s, d])
+                if c == 0:
+                    continue
+                lo = int(in_off[d, s])
+                self._src_idx[d, lo:lo + c] = s
+                self._slot_idx[d, lo:lo + c] = self.block_off[s, d] + np.arange(c)
+                self.recv_ok[d, lo:lo + c] = True
+        self._back_src = np.where(self.dest_of < S, self.dest_of, 0)
+
+    def scatter(self, tree):
+        si = jnp.asarray(self._src_idx)
+        sj = jnp.asarray(self._slot_idx)
+
+        def one(x):
+            return x[si, sj]
+
+        return jax.tree.map(one, tree)
+
+    def gather(self, tree):
+        bi = jnp.asarray(self._back_src)
+        bj = jnp.asarray(self._back_slot)
+
+        def one(x):
+            return x[bi, bj]
+
+        return jax.tree.map(one, tree)
+
+
+def make_exchange(transport: str, S: int, cap: int,
+                  caps=None) -> Exchange:
+    """Build the transport for one exchange lane.
+
+    ``dense`` ignores ``caps`` and uses the uniform ``cap``. ``ragged``
+    requires ``caps`` — the planner's per-(src, dest) per-round capacities
+    (an [S, S] array or the nested-tuple form stamped into
+    ``EngineConfig``)."""
+    if transport == "dense":
+        return DenseExchange(S, cap)
+    if transport == "ragged":
+        if caps is None:
+            raise ValueError(
+                "ragged transport needs per-(shard, dest) capacities — build "
+                "the plan with pushpull.plan_engine(..., transport='ragged')")
+        return RaggedExchange(np.asarray(caps, np.int64).reshape(S, S))
+    raise ValueError(f"transport must be one of {TRANSPORTS}, got {transport!r}")

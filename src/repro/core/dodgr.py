@@ -56,6 +56,21 @@ def meta_widths(n_vp: int, n_vq: int, n_vr: int,
     return w_push, w_row, w_hdr, w_req
 
 
+def hub_widths(dvi: int, dvf: int, dei: int, def_: int,
+               delta: bool = False) -> tuple[int, int]:
+    """Replicated hub-table widths in 4-byte words: ``(w_elem, w_hdr)``.
+
+    Unlike the wire entries above, the hub table is built at ingestion time
+    — before any survey is known — so it stores the *full* metadata widths:
+
+      element = nbr, key_d, key_h + meta(qr) + meta(r)   (+ newness in delta)
+      header  = row_len + meta(q)
+    """
+    w_elem = 3 + dei + def_ + dvi + dvf + (1 if delta else 0)
+    w_hdr = 1 + dvi + dvf
+    return w_elem, w_hdr
+
+
 @dataclass(frozen=True)
 class ShardedDODGr:
     """Stacked sharded DODGr + metadata. Leading axis of every array = shard."""
@@ -84,6 +99,23 @@ class ShardedDODGr:
     # --- delta overlay (epoch-aware ingestion) ---
     nbr_new: jax.Array    # [S, e_cap] bool — edge arrived this epoch
     delta_gen: jax.Array  # [S, e_cap] bool — edge may open a new-triangle wedge
+    # --- hub delegation (two-tier exchange, Arifuzzaman-style heavy-vertex
+    # split): the Adj₊ rows of every vertex with full degree ≥ hub_theta are
+    # replicated to all shards as a read-only table, so wedges whose center q
+    # is a hub close on the *source* shard with zero exchange. Hub arrays
+    # carry no leading shard axis — under GSPMD they are replicated. ---
+    nbr_hub: jax.Array     # [S, e_cap] i32 hub-table row of target q, -1 if not hub
+    hub_row_len: jax.Array  # [Hc] i32 (Hc = max(1, n_hubs))
+    hub_nbr: jax.Array      # [Hc, hub_len] i32 Adj₊ targets (row-sorted by key)
+    hub_nbr_d: jax.Array    # [Hc, hub_len] i32
+    hub_nbr_h: jax.Array    # [Hc, hub_len] u32
+    hub_nbr_new: jax.Array  # [Hc, hub_len] bool
+    hub_eqr_i: jax.Array    # [Hc, hub_len, dei] i32  meta(q, r)
+    hub_eqr_f: jax.Array    # [Hc, hub_len, def] f32
+    hub_tmeta_i: jax.Array  # [Hc, hub_len, dvi] i32  meta(r)
+    hub_tmeta_f: jax.Array  # [Hc, hub_len, dvf] f32
+    hub_vmeta_i: jax.Array  # [Hc, dvi] i32            meta(q) of the hub itself
+    hub_vmeta_f: jax.Array  # [Hc, dvf] f32
     # --- DOULION sampling provenance (static) — the engine entry points
     # cross-check these against EngineConfig so a graph ingested with one
     # (p, seed) can never run under a plan built for another ---
@@ -95,6 +127,13 @@ class ShardedDODGr:
     orient: str = "degree"
     epoch: int = 0
     is_delta: bool = False
+    # --- hub provenance (static): θ the table was built with (0 = no hub
+    # delegation), hub count, and padded row length — cross-checked against
+    # the plan like sample_p so a graph sharded with one θ can never run
+    # under a plan that delegated a different hub set ---
+    hub_theta: int = 0
+    n_hubs: int = 0
+    hub_len: int = 1
 
     def __post_init__(self):
         pass
@@ -111,9 +150,13 @@ jax.tree_util.register_dataclass(
         "row_ptr", "edge_src", "nbr", "nbr_d", "nbr_h", "nbr_dplus",
         "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
         "vdeg", "dplus", "nbr_new", "delta_gen",
+        "nbr_hub", "hub_row_len", "hub_nbr", "hub_nbr_d", "hub_nbr_h",
+        "hub_nbr_new", "hub_eqr_i", "hub_eqr_f", "hub_tmeta_i", "hub_tmeta_f",
+        "hub_vmeta_i", "hub_vmeta_f",
     ],
     meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max",
-                 "sample_p", "sample_seed", "orient", "epoch", "is_delta"],
+                 "sample_p", "sample_seed", "orient", "epoch", "is_delta",
+                 "hub_theta", "n_hubs", "hub_len"],
 )
 
 
@@ -224,7 +267,8 @@ def delta_gen_mask(q_s: np.ndarray, row_start: np.ndarray, row_len: np.ndarray,
 def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
                 sample_p: float = 1.0, sample_seed: int = 0,
                 edge_new: np.ndarray | None = None, orient: str = "degree",
-                epoch: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
+                epoch: int = 0,
+                hub_theta: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
     """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
 
     ``sample_p < 1`` ingests a DOULION-sparsified view of ``g`` (see
@@ -240,6 +284,14 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     under a matching ``pushpull.plan_delta`` plan. Prefer the
     :func:`shard_delta` wrapper, which derives frontier + flags from a
     :class:`~repro.graphs.csr.DeltaGraph`.
+
+    ``hub_theta ≥ 1`` enables hub delegation: the ``Adj₊`` row (plus its
+    edge/target metadata) of every vertex whose *full degree in this view*
+    is ≥ θ is replicated to all shards, and each edge slot records its
+    target's hub-table row in ``nbr_hub`` so the engine can close hub-bound
+    wedges locally. θ normally comes from the planner
+    (``pushpull.plan_engine(..., hub_theta='auto')``) — pass the same value
+    here; provenance is cross-checked at run time.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
@@ -309,6 +361,53 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     else:
         new_s = gen_s = None
 
+    # --- hub table: replicate Adj₊ rows of heavy vertices (deg ≥ θ) ---
+    if hub_theta < 0:
+        raise ValueError(f"hub_theta must be ≥ 0, got {hub_theta}")
+    n_hubs = 0
+    if hub_theta >= 1:
+        tdeg = deg if orient == "degree" else g.degrees()
+        hub_ids = np.nonzero(tdeg >= hub_theta)[0]
+        n_hubs = len(hub_ids)
+    hc = max(1, n_hubs)
+    hub_len = 1
+    hub_row_len = np.zeros(hc, np.int32)
+    hub_of_q = None
+    if n_hubs:
+        hub_id_of = np.full(g.n, -1, np.int32)
+        hub_id_of[hub_ids] = np.arange(n_hubs, dtype=np.int32)
+        hub_row_len[:n_hubs] = d_plus[hub_ids]
+        hub_len = max(1, int(d_plus[hub_ids].max()))
+        hub_of_q = hub_id_of[q_s]
+    hub_nbr = alloc((hc, hub_len), np.int32, PAD_ID)
+    hub_nbr_d = alloc((hc, hub_len), np.int32, PAD_D)
+    hub_nbr_h = alloc((hc, hub_len), np.uint32)
+    hub_nbr_new = alloc((hc, hub_len), bool, False)
+    hub_eqr_i = alloc((hc, hub_len, dei), np.int32)
+    hub_eqr_f = alloc((hc, hub_len, def_), np.float32)
+    hub_tmeta_i = alloc((hc, hub_len, dvi), np.int32)
+    hub_tmeta_f = alloc((hc, hub_len, dvf), np.float32)
+    hub_vmeta_i = alloc((hc, dvi), np.int32)
+    hub_vmeta_f = alloc((hc, dvf), np.float32)
+    nbr_hub = alloc((S, e_cap), np.int32, -1)
+    if n_hubs:
+        # rows of hub pivots are contiguous runs of the sorted edge list, so
+        # the replicated table is a verbatim copy of the owner shards' rows
+        he = np.nonzero(hub_id_of[p_s] >= 0)[0]
+        hid = hub_id_of[p_s[he]]
+        hpos = pos_in_row[he]
+        hub_nbr[hid, hpos] = q_s[he]
+        hub_nbr_d[hid, hpos] = deg[q_s[he]]
+        hub_nbr_h[hid, hpos] = h[q_s[he]].astype(np.uint32)
+        hub_eqr_i[hid, hpos] = emeta_i_src[he]
+        hub_eqr_f[hid, hpos] = emeta_f_src[he]
+        hub_tmeta_i[hid, hpos] = g.vmeta_i[q_s[he]]
+        hub_tmeta_f[hid, hpos] = g.vmeta_f[q_s[he]]
+        hub_vmeta_i[:n_hubs] = g.vmeta_i[hub_ids]
+        hub_vmeta_f[:n_hubs] = g.vmeta_f[hub_ids]
+        if new_s is not None:
+            hub_nbr_new[hid, hpos] = new_s[he]
+
     for s in range(S):
         lo, hi = start[s], start[s + 1]
         k = hi - lo
@@ -325,6 +424,8 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
             nbr_new[s, :k] = new_s[lo:hi]
             delta_gen[s, :k] = gen_s[lo:hi]
             delta_gen[s, k:] = False
+        if hub_of_q is not None:
+            nbr_hub[s, :k] = hub_of_q[lo:hi]
         rows = np.bincount(local_s[lo:hi], minlength=n_loc)
         row_ptr[s, 1:] = np.cumsum(rows)
         ids = np.arange(s, g.n, S, dtype=np.int64)
@@ -353,6 +454,7 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         d_plus_max=max(1, d_plus_max),
         sample_p=sample_p, sample_seed=sample_seed,
         orient=orient, epoch=epoch, is_delta=edge_new is not None,
+        hub_theta=hub_theta, n_hubs=n_hubs, hub_len=hub_len,
         row_ptr=jnp.asarray(row_ptr), edge_src=jnp.asarray(edge_src),
         nbr=jnp.asarray(nbr), nbr_d=jnp.asarray(nbr_d),
         nbr_h=jnp.asarray(nbr_h), nbr_dplus=jnp.asarray(nbr_dp),
@@ -361,12 +463,23 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         vmeta_i=jnp.asarray(vmeta_i), vmeta_f=jnp.asarray(vmeta_f),
         vdeg=jnp.asarray(vdeg), dplus=jnp.asarray(dplus_arr),
         nbr_new=jnp.asarray(nbr_new), delta_gen=jnp.asarray(delta_gen),
+        nbr_hub=jnp.asarray(nbr_hub),
+        hub_row_len=jnp.asarray(hub_row_len),
+        hub_nbr=jnp.asarray(hub_nbr), hub_nbr_d=jnp.asarray(hub_nbr_d),
+        hub_nbr_h=jnp.asarray(hub_nbr_h),
+        hub_nbr_new=jnp.asarray(hub_nbr_new),
+        hub_eqr_i=jnp.asarray(hub_eqr_i), hub_eqr_f=jnp.asarray(hub_eqr_f),
+        hub_tmeta_i=jnp.asarray(hub_tmeta_i),
+        hub_tmeta_f=jnp.asarray(hub_tmeta_f),
+        hub_vmeta_i=jnp.asarray(hub_vmeta_i),
+        hub_vmeta_f=jnp.asarray(hub_vmeta_f),
     )
     return gr, stats
 
 
 def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
-                orient: str = "stable") -> tuple[ShardedDODGr, RoutingStats]:
+                orient: str = "stable",
+                hub_theta: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
     """Shard the epoch's delta frontier with the same cyclic owner map as the
     full snapshot (owner ``v % S`` is id-based, so frontier shards align with
     union shards) and stamp epoch provenance.
@@ -374,18 +487,27 @@ def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
     Default orientation is ``"stable"`` — the epoch-stable key every epoch
     of a delta sequence must share for ``merge_epochs`` to be bitwise-exact
     against a full recompute (see :func:`orient_edges`).
+
+    ``hub_theta`` replicates heavy *frontier* rows (degree measured in the
+    frontier subgraph — a hub the batch touches keeps its full row there),
+    the lever against the hub-touching frontier blow-up; pass the θ from
+    ``pushpull.plan_delta(..., hub_theta='auto')`` for this epoch.
     """
     h, edge_new = dg.frontier()
     return shard_dodgr(h, S, e_cap=e_cap, edge_new=edge_new, orient=orient,
-                       epoch=dg.epoch)
+                       epoch=dg.epoch, hub_theta=hub_theta)
 
 
 def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,
-               dvi: int, dvf: int, dei: int, def_: int) -> ShardedDODGr:
+               dvi: int, dvf: int, dei: int, def_: int,
+               hub_theta: int = 0, n_hubs: int = 0,
+               hub_len: int = 1) -> ShardedDODGr:
     """ShapeDtypeStruct stand-in for dry-run lowering (no allocation)."""
     sd = jax.ShapeDtypeStruct
+    hc = max(1, n_hubs)
     return ShardedDODGr(
         S=S, n_global=n_global, n_loc=n_loc, e_cap=e_cap, d_plus_max=d_plus_max,
+        hub_theta=hub_theta, n_hubs=n_hubs, hub_len=hub_len,
         row_ptr=sd((S, n_loc + 1), jnp.int32),
         edge_src=sd((S, e_cap), jnp.int32),
         nbr=sd((S, e_cap), jnp.int32),
@@ -402,4 +524,16 @@ def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,
         dplus=sd((S, n_loc), jnp.int32),
         nbr_new=sd((S, e_cap), jnp.bool_),
         delta_gen=sd((S, e_cap), jnp.bool_),
+        nbr_hub=sd((S, e_cap), jnp.int32),
+        hub_row_len=sd((hc,), jnp.int32),
+        hub_nbr=sd((hc, hub_len), jnp.int32),
+        hub_nbr_d=sd((hc, hub_len), jnp.int32),
+        hub_nbr_h=sd((hc, hub_len), jnp.uint32),
+        hub_nbr_new=sd((hc, hub_len), jnp.bool_),
+        hub_eqr_i=sd((hc, hub_len, dei), jnp.int32),
+        hub_eqr_f=sd((hc, hub_len, def_), jnp.float32),
+        hub_tmeta_i=sd((hc, hub_len, dvi), jnp.int32),
+        hub_tmeta_f=sd((hc, hub_len, dvf), jnp.float32),
+        hub_vmeta_i=sd((hc, dvi), jnp.int32),
+        hub_vmeta_f=sd((hc, dvf), jnp.float32),
     )

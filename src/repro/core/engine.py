@@ -1,12 +1,19 @@
 """TriPoll survey engine: Push-Only (Alg. 1) and Push-Pull (Sec. 4.4).
 
 Execution model (DESIGN.md §2): stacked layout — every array carries a
-leading shard axis ``S``; an all-to-all is ``swapaxes(x, 0, 1)`` which the
-GSPMD partitioner lowers to a real all-to-all when axis 0 is sharded over
-the device mesh. Work proceeds in *supersteps* over dest-major wedge
-streams with static per-(shard,dest) capacities; the static superstep
+leading shard axis ``S``. Work proceeds in *supersteps* over dest-major
+wedge streams with static per-(shard,dest) capacities; the static superstep
 counts come from the host planner (:mod:`repro.core.pushpull`) — the BSP
 analogue of the paper's "Push vs Pull Dry-Run".
+
+Transport: every cross-shard buffer movement goes through the pluggable
+:mod:`repro.comm.exchange` layer. The ``dense`` transport is the historic
+``swapaxes(x, 0, 1)`` all-to-all (lowered to a real all-to-all by the GSPMD
+partitioner when axis 0 is sharded) with one worst-case per-pair capacity;
+the ``ragged`` transport ships sorted-compaction streams with static
+*per-(shard, dest)* capacities taken from the planner's exact stream
+histograms, so skewed graphs stop paying hub-sized padding on every pair.
+Both deliver the same entries — survey results are bitwise-identical.
 
 Push superstep: shard s enumerates wedges (p; q, r) rank-by-rank within
 each destination stream, ships (q, r, key(r), meta(p), meta(pq), meta(pr))
@@ -19,31 +26,47 @@ whose row is cheaper to move than the wedge candidates (the paper's
 per-pair decision), receives padded rows, intersects its local suffixes
 against them (``kernels/intersect``) and folds the survey locally.
 
-Delta mode (epoch-incremental surveys): when ``EngineConfig.delta`` is set
-the graph is a *delta frontier* (``dodgr.shard_delta``) and the same two
-phases run restricted — wedge generation is masked to the ``delta_gen``
-edges (only wedges that can belong to a triangle with ≥1 new edge), push
-entries and pulled rows carry per-edge newness bits, and the fold's
-``valid`` mask additionally requires ≥1 new edge, so exactly the
-new-old-old / new-new-old / new-new-new triangle classes are surveyed.
-``survey_delta`` accumulates epochs through ``Survey.merge_epochs``;
-``finalize_epochs`` renders the running state.
+Hub superstep (two-tier exchange, after Arifuzzaman et al.'s heavy-vertex
+split): wedges whose center q has degree ≥ the plan's ``hub_theta`` never
+reach either wire lane — q's ``Adj₊`` row is replicated on every shard
+(``dodgr.shard_dodgr(hub_theta=θ)``), so the *source* shard closes the
+wedge against the hub table and folds locally, at zero exchanged bytes.
+The planner chooses θ from the degree histogram + bytes cost model and
+removes hub wedges from both the push streams and the pull decision.
 
-Lane projection: both phases gather and exchange only the metadata lanes
-the survey's :class:`~repro.core.surveys.MetaSpec` declares. Push queries
-carry meta(p)/meta(pq)/meta(pr) at declared width; the padded pull reply —
-the dominant ``S·pcap·L`` volume — carries meta(qr)/meta(r) rows and the
-meta(q) header at declared width; fully-unread items skip their gathers
-entirely and reach the fold as zero-width ``[B, 0]`` fields. Wire lanes
-are re-expanded to storage indices (zero-filling undeclared lanes) before
-the fold, so survey ``update`` code is projection-agnostic and
+Delta mode (epoch-incremental surveys): when ``EngineConfig.delta`` is set
+the graph is a *delta frontier* (``dodgr.shard_delta``) and the same lanes
+run restricted — wedge generation is masked to the ``delta_gen`` edges
+(only wedges that can belong to a triangle with ≥1 new edge), push entries
+and pulled rows carry per-edge newness bits, and the fold's ``valid`` mask
+additionally requires ≥1 new edge, so exactly the new-old-old /
+new-new-old / new-new-new triangle classes are surveyed. ``survey_delta``
+accumulates epochs through ``Survey.merge_epochs``; ``finalize_epochs``
+renders the running state. Hub delegation composes: a batch that touches a
+hub resolves the hub-centered frontier wedges locally instead of blowing
+up the exchange.
+
+Lane projection: both wire lanes gather and exchange only the metadata
+lanes the survey's :class:`~repro.core.surveys.MetaSpec` declares. Push
+queries carry meta(p)/meta(pq)/meta(pr) at declared width; the padded pull
+reply — the dominant ``pcap·L`` volume — carries meta(qr)/meta(r) rows and
+the meta(q) header at declared width; fully-unread items skip their
+gathers entirely and reach the fold as zero-width ``[B, 0]`` fields. Wire
+lanes are re-expanded to storage indices (zero-filling undeclared lanes)
+before the fold, so survey ``update`` code is projection-agnostic and
 bitwise-identical to a full-metadata run. The bytes cost model uses the
 same projected widths as the host planner (stamped into
 ``EngineConfig.meta_widths`` by ``pushpull.plan_engine``), keeping
 push-vs-pull decisions in lockstep.
+
+Exactness: the planner sizes every static capacity so nothing is dropped;
+if a hand-edited config still overflows a window, the run is flagged
+``exact=False`` in its stats with a ``RuntimeWarning`` (or a raise under
+``on_overflow='raise'``) instead of silently undercounting.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from functools import partial
 
@@ -52,6 +75,7 @@ import numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm.exchange import Exchange, make_exchange
 from repro.core.dodgr import ShardedDODGr, meta_widths
 from repro.core.surveys import (MetaSpec, Survey, TriangleBatch, expand_lanes,
                                 narrow_lanes, project_lanes)
@@ -98,6 +122,31 @@ class EngineConfig:
     #                               match the frontier's stamp)
     orient: str = "degree"        # orientation key the plan assumed ("degree"
     #                               static default, "stable" for delta epochs)
+    transport: str = "dense"      # exchange implementation: "dense" (historic
+    #                               swapaxes all-to-all, worst-case per-pair
+    #                               caps) | "ragged" (per-(shard,dest) caps
+    #                               from the planner's stream histograms)
+    push_caps: tuple | None = None  # ragged: S×S nested tuple, wedge slots
+    #                               per (src, dest) per push superstep
+    pull_caps: tuple | None = None  # ragged: S×S nested tuple, pulled-group
+    #                               slots per (src, dest) per pull superstep
+    pull_row_cap: int = 0         # reply-row padding length: the planner's
+    #                               max d₊ over *pulled* groups (0 = pad to
+    #                               the graph-wide d_plus_max, the historic
+    #                               worst case). Hub delegation removes the
+    #                               heavy rows from the pull set, so this —
+    #                               and with it the dominant reply volume —
+    #                               shrinks to the next-heaviest survivor
+    hub_theta: int = 0            # hub delegation threshold θ (0 = off); must
+    #                               match the shard-time stamp — wedges whose
+    #                               center has degree ≥ θ resolve on-shard
+    #                               against the replicated hub table
+    n_hub_steps: int = 0          # hub-lane supersteps (0 = lane off)
+    hub_wedge_cap: int = 256      # wedge slots per shard per hub superstep
+    on_overflow: str = "warn"     # "warn" | "raise" — what to do when a
+    #                               static window overflowed and triangles
+    #                               were dropped (stats carry exact=False
+    #                               either way)
 
 
 def _constrain(x, cfg: EngineConfig, *trailing):
@@ -105,6 +154,14 @@ def _constrain(x, cfg: EngineConfig, *trailing):
         return x
     spec = P(cfg.shard_axis, *trailing)
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _push_exchange(cfg: EngineConfig, S: int) -> Exchange:
+    return make_exchange(cfg.transport, S, cfg.push_cap, cfg.push_caps)
+
+
+def _pull_exchange(cfg: EngineConfig, S: int) -> Exchange:
+    return make_exchange(cfg.transport, S, cfg.pull_q_cap, cfg.pull_caps)
 
 
 # ---------------------------------------------------------------------------
@@ -173,9 +230,13 @@ def _stream_setup(gr: ShardedDODGr, weight_mask=None):
     return jax.vmap(per_shard)(gr.row_ptr, gr.edge_src, gr.nbr, wm)
 
 
-def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec,
+def _gen_push_queries(gr: ShardedDODGr, st, t, exch: Exchange, spec: MetaSpec,
                       delta: bool = False):
-    """Build the [S, S_dest, cap] push-query buffers for superstep ``t``.
+    """Build the per-shard flat wire buffers of push queries for superstep
+    ``t``: slot ``j`` of shard ``s`` is rank ``t·cap(s,d) + lane(j)`` of the
+    dest-``d`` wedge stream, where the slot→(dest, lane, cap) maps are the
+    transport's static routing tables (dense: one global cap; ragged:
+    per-(shard, dest) caps).
 
     Metadata travels in wire form: only the lanes ``spec`` declares for
     meta(p), meta(pq), meta(pr); unread items ship zero-width. In delta mode
@@ -188,18 +249,22 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec,
     epq_f = project_lanes(gr.emeta_f, spec.e_pq_f)
     epr_i = project_lanes(gr.emeta_i, spec.e_pr_i)
     epr_f = project_lanes(gr.emeta_f, spec.e_pr_f)
+    dest_of = jnp.asarray(exch.dest_of)
+    lane_of = jnp.asarray(exch.lane_of)
+    cap_of = jnp.asarray(exch.cap_of)
 
     def per_shard(perm, cum, base, stream_len, row_ptr, edge_src, nbr, nbr_d,
-                  nbr_h, nbr_new, epq_i, epq_f, epr_i, epr_f, vp_i, vp_f):
-        c = jnp.arange(cap, dtype=jnp.int32)
-        offs = t * cap + c[None, :]                       # [S, cap]
-        in_stream = offs < stream_len[:, None]
-        ranks = base[:, None] + offs                      # [S, cap]
-        idx = jnp.searchsorted(cum, ranks.reshape(-1), side="right").astype(jnp.int32)
+                  nbr_h, nbr_new, epq_i, epq_f, epr_i, epr_f, vp_i, vp_f,
+                  dest_of, lane_of, cap_of):
+        d = jnp.minimum(dest_of, S - 1)
+        offs = t * cap_of + lane_of                       # [out_cap]
+        in_stream = (dest_of < S) & (offs < stream_len[d])
+        ranks = base[d] + offs                            # [out_cap]
+        idx = jnp.searchsorted(cum, ranks, side="right").astype(jnp.int32)
         idx = jnp.clip(idx, 0, e_cap - 1)
         e = perm[idx]
         prev = jnp.where(idx > 0, cum[jnp.maximum(idx - 1, 0)], 0)
-        o = jnp.clip(ranks.reshape(-1) - prev, 0, e_cap - 1)
+        o = jnp.clip(ranks - prev, 0, e_cap - 1)
         r_pos = jnp.clip(e + 1 + o, 0, e_cap - 1)
         p = edge_src[e]
         lp = jnp.clip(p // S, 0, n_loc - 1)
@@ -208,28 +273,17 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, cap, spec: MetaSpec,
             vp_i=vp_i[lp], vp_f=vp_f[lp],
             epq_i=epq_i[e], epq_f=epq_f[e],
             epr_i=epr_i[r_pos], epr_f=epr_f[r_pos],
-            ok=in_stream.reshape(-1),
+            ok=in_stream,
         )
         if delta:
             out["pq_new"] = nbr_new[e]
             out["pr_new"] = nbr_new[r_pos]
-        return jax.tree.map(lambda x: x.reshape((S, cap) + x.shape[1:]), out)
+        return out
 
     return jax.vmap(per_shard)(
         st["perm"], st["cum"], st["base"], st["stream_len"], gr.row_ptr,
         gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, epq_i, epq_f,
-        epr_i, epr_f, vp_i, vp_f)
-
-
-def _exchange(tree, cfg: EngineConfig):
-    """All-to-all: [S_src, S_dst, cap, ...] → [S_dst, S_src·cap, ...]."""
-
-    def one(x):
-        y = jnp.swapaxes(x, 0, 1)
-        y = y.reshape((y.shape[0], y.shape[1] * y.shape[2]) + y.shape[3:])
-        return _constrain(y, cfg)
-
-    return jax.tree.map(one, tree)
+        epr_i, epr_f, vp_i, vp_f, dest_of, lane_of, cap_of)
 
 
 def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
@@ -288,11 +342,97 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
 
 
 # ---------------------------------------------------------------------------
+# hub lane (zero-exchange wedge closure against the replicated hub table)
+
+
+def _hub_setup(gr: ShardedDODGr, st, hub_mask):
+    """Per-shard hub-wedge stream: inclusive cumsum of per-edge hub wedge
+    counts in edge order (no dest-major permutation — nothing is routed)."""
+    w = st["suffix"] * hub_mask.astype(jnp.int32)
+    cum = jnp.cumsum(w, axis=1)
+    return dict(cum=cum, total=cum[:, -1])
+
+
+def _hub_superstep(gr: ShardedDODGr, hst, t, cfg: EngineConfig,
+                   spec: MetaSpec):
+    """Close one window of hub-centered wedges entirely on-shard.
+
+    For wedge (p; q, r) with hub center q the replicated table holds
+    Adj₊ᵐ(q) — key search, meta(q)/meta(r)/meta(qr) gathers and the fold
+    all run on owner(p)'s shard; nothing crosses the shard axis."""
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+    Hc, Lh = gr.hub_nbr.shape
+    cap = cfg.hub_wedge_cap
+    n_steps = max(1, int(np.ceil(np.log2(max(2, Lh)))) + 1)
+
+    # replicated hub sources, flattened so per-row slices index like a CSR
+    h_nbr = gr.hub_nbr.reshape(-1)
+    h_d = gr.hub_nbr_d.reshape(-1)
+    h_h = gr.hub_nbr_h.reshape(-1)
+    h_new = gr.hub_nbr_new.reshape(-1)
+    h_eqr_i = narrow_lanes(gr.hub_eqr_i, spec.e_qr_i).reshape(Hc * Lh, -1)
+    h_eqr_f = narrow_lanes(gr.hub_eqr_f, spec.e_qr_f).reshape(Hc * Lh, -1)
+    h_vr_i = narrow_lanes(gr.hub_tmeta_i, spec.vr_i).reshape(Hc * Lh, -1)
+    h_vr_f = narrow_lanes(gr.hub_tmeta_f, spec.vr_f).reshape(Hc * Lh, -1)
+    h_vq_i = narrow_lanes(gr.hub_vmeta_i, spec.vq_i)
+    h_vq_f = narrow_lanes(gr.hub_vmeta_f, spec.vq_f)
+    h_len = gr.hub_row_len
+    # requester-local (fold-form) sources
+    vp_i_l = narrow_lanes(gr.vmeta_i, spec.vp_i)
+    vp_f_l = narrow_lanes(gr.vmeta_f, spec.vp_f)
+    epq_i_l = narrow_lanes(gr.emeta_i, spec.e_pq_i)
+    epq_f_l = narrow_lanes(gr.emeta_f, spec.e_pq_f)
+    epr_i_l = narrow_lanes(gr.emeta_i, spec.e_pr_i)
+    epr_f_l = narrow_lanes(gr.emeta_f, spec.e_pr_f)
+
+    def per_shard(cum, total, edge_src, nbr, nbr_d, nbr_h, nbr_new, nbr_hub,
+                  epq_i, epq_f, epr_i, epr_f, vp_i, vp_f):
+        c = jnp.arange(cap, dtype=jnp.int32)
+        rank = t * cap + c
+        ok = rank < total
+        idx = jnp.searchsorted(cum, rank, side="right").astype(jnp.int32)
+        e = jnp.clip(idx, 0, e_cap - 1)
+        prev = jnp.where(e > 0, cum[jnp.maximum(e - 1, 0)], 0)
+        o = jnp.clip(rank - prev, 0, e_cap - 1)
+        r_pos = jnp.clip(e + 1 + o, 0, e_cap - 1)
+        p = edge_src[e]
+        lp = jnp.clip(p // S, 0, n_loc - 1)
+        hid = jnp.clip(nbr_hub[e], 0, Hc - 1)
+        lo = hid * Lh
+        hi = lo + h_len[hid]
+        pos = _lower_bound(h_d, h_h, h_nbr, lo, hi, nbr_d[r_pos],
+                           nbr_h[r_pos], nbr[r_pos], n_steps)
+        pos_c = jnp.clip(pos, 0, Hc * Lh - 1)
+        found = ok & (pos < hi) & (h_nbr[pos_c] == nbr[r_pos])
+        if cfg.delta:
+            found &= nbr_new[e] | nbr_new[r_pos] | h_new[pos_c]
+        tri = TriangleBatch(
+            p=p, q=nbr[e], r=nbr[r_pos],
+            vp_i=vp_i[lp], vq_i=h_vq_i[hid], vr_i=h_vr_i[pos_c],
+            vp_f=vp_f[lp], vq_f=h_vq_f[hid], vr_f=h_vr_f[pos_c],
+            e_pq_i=epq_i[e], e_pr_i=epr_i[r_pos], e_qr_i=h_eqr_i[pos_c],
+            e_pq_f=epq_f[e], e_pr_f=epr_f[r_pos], e_qr_f=h_eqr_f[pos_c],
+            valid=found,
+        )
+        return tri, ok.sum(dtype=jnp.float32)
+
+    return jax.vmap(per_shard)(
+        hst["cum"], hst["total"], gr.edge_src, gr.nbr, gr.nbr_d, gr.nbr_h,
+        gr.nbr_new, gr.nbr_hub, epq_i_l, epq_f_l, epr_i_l, epr_f_l,
+        vp_i_l, vp_f_l)
+
+
+# ---------------------------------------------------------------------------
 # pull-phase device planning (Sec. 4.4)
 
 
-def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths):
+def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths,
+                hub_mask=None):
     """Per-shard pull decisions + dest-major (dest, pulled, q) edge order.
+
+    ``st['suffix']`` must already be masked to the wedges this plan
+    generates (delta mask, hub exclusion) — a masked-out group has zero
+    volume and is never pulled, mirroring the host planner exactly.
 
     Returns per-shard arrays (vmapped):
       pull        [e_cap] bool, per edge slot (original order)
@@ -306,11 +446,16 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths):
     S, e_cap = gr.S, gr.e_cap
     w_push, w_row, w_hdr, w_req = widths
 
-    def per_shard(nbr, nbr_dplus, suffix, dest, valid):
+    def per_shard(nbr, nbr_dplus, suffix, dest, valid, hub):
         ordq = jnp.argsort(jnp.where(valid, nbr, BIG_I32), stable=True)
         qs = nbr[ordq]
         sfx = suffix[ordq]
         vq = valid[ordq]
+        if hub is not None:
+            # hub-centered groups resolve on the hub lane — never pulled
+            vq_pull = vq & ~hub[ordq]
+        else:
+            vq_pull = vq
         first = jnp.concatenate([jnp.ones((1,), bool), qs[1:] != qs[:-1]]) & vq
         gid = jnp.cumsum(first.astype(jnp.int32)) - 1
         gid = jnp.where(vq, gid, e_cap - 1)
@@ -318,9 +463,9 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths):
         vol_e = vol[gid]
         dq = nbr_dplus[ordq]
         if cfg.cost_model == "entries":
-            pull_s = vq & (dq < vol_e)
+            pull_s = vq_pull & (dq < vol_e)
         else:
-            pull_s = vq & (dq * w_row + w_hdr + w_req < vol_e * w_push)
+            pull_s = vq_pull & (dq * w_row + w_hdr + w_req < vol_e * w_push)
         pull = jnp.zeros((e_cap,), bool).at[ordq].set(pull_s)
 
         # (dest, ~pull, q, pos) order: stable sort of the q-sorted order by
@@ -352,22 +497,31 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths):
                     qcount=qcount, pulled_end=pulled_end,
                     dest_start2=dest_start2[:-1], vol=vol_e, ordq=ordq)
 
+    if hub_mask is None:
+        return jax.vmap(lambda nb, dp, sf, de, va: per_shard(nb, dp, sf, de,
+                                                             va, None))(
+            gr.nbr, gr.nbr_dplus, st["suffix"], st["dest"], st["valid"])
     return jax.vmap(per_shard)(gr.nbr, gr.nbr_dplus, st["suffix"], st["dest"],
-                               st["valid"])
+                               st["valid"], hub_mask)
 
 
-def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
-                    spec: MetaSpec):
+def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
+                    spec: MetaSpec, exch: Exchange):
     """One pull superstep: request rows, answer, intersect, emit TriangleBatch.
 
-    The padded reply — ``S·pcap·L`` row slots, the dominant pull-phase
-    volume — carries only the declared meta(qr)/meta(r) lanes plus the
-    declared meta(q) header lanes; local meta(p)/(pq)/(pr) are gathered at
-    declared width."""
+    Both wire movements (the request buffer out, the padded reply back)
+    route through the transport; the padded reply — ``pcap·L`` row slots,
+    the dominant pull-phase volume — carries only the declared
+    meta(qr)/meta(r) lanes plus the declared meta(q) header lanes; local
+    meta(p)/(pq)/(pr) are gathered at declared width."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
-    pcap, ecap = cfg.pull_q_cap, cfg.pull_edge_cap
+    ecap = cfg.pull_edge_cap
     L = gr.d_plus_max
-    n_steps = max(1, int(np.ceil(np.log2(max(2, L)))) + 1)
+    # reply rows pad to the max *pulled* row length (planner-stamped) — the
+    # graph-wide d_plus_max only bounds the local suffix windows
+    Lr = cfg.pull_row_cap if cfg.pull_row_cap else L
+    n_steps = max(1, int(np.ceil(np.log2(max(2, Lr)))) + 1)
+    out_cap = exch.out_cap
 
     # wire-form metadata sources (owner side of the reply)
     eqr_i_w = project_lanes(gr.emeta_i, spec.e_qr_i)
@@ -384,19 +538,28 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
     epr_i_l = narrow_lanes(gr.emeta_i, spec.e_pr_i)
     epr_f_l = narrow_lanes(gr.emeta_f, spec.e_pr_f)
 
-    # --- requester: build q-requests [S_dest, pcap] ---
-    def gen_req(qrank2, qbase, qcount, ord2, nbr):
-        c = jnp.arange(pcap, dtype=jnp.int32)
-        offs = t * pcap + c[None, :]
-        okq = offs < qcount[:, None]                      # [S, pcap]
-        k = qbase[:, None] + offs                         # global group rank
-        posq = jnp.searchsorted(qrank2, k.reshape(-1), side="left").astype(jnp.int32)
+    dest_of = jnp.asarray(exch.dest_of)
+    lane_of = jnp.asarray(exch.lane_of)
+    cap_of = jnp.asarray(exch.cap_of)
+    pcap_d = jnp.asarray(np.asarray(exch.caps, np.int32))   # [S, S]
+    boff = jnp.asarray(exch.block_off)                      # [S, S]
+
+    # --- requester: build q-requests, flat [S, out_cap] ---
+    def gen_req(qrank2, qbase, qcount, ord2, nbr, dest_of, lane_of, cap_of):
+        d = jnp.minimum(dest_of, S - 1)
+        offs = t * cap_of + lane_of
+        okq = (dest_of < S) & (offs < qcount[d])
+        k = qbase[d] + offs                               # global group rank
+        posq = jnp.searchsorted(qrank2, k, side="left").astype(jnp.int32)
         posq = jnp.clip(posq, 0, e_cap - 1)
-        qid = nbr[ord2[posq]].reshape(S, pcap)
+        qid = nbr[ord2[posq]]
         return dict(q=jnp.where(okq, qid, BIG_I32), ok=okq)
 
-    req = jax.vmap(gen_req)(ps["qrank2"], ps["qbase"], ps["qcount"], ps["ord2"], gr.nbr)
-    req_x = _exchange(req, cfg)   # [S_owner, S_src*pcap]
+    req = jax.vmap(gen_req)(ps["qrank2"], ps["qbase"], ps["qcount"],
+                            ps["ord2"], gr.nbr, dest_of, lane_of, cap_of)
+    req_x = exch.scatter(req)   # [S_owner, in_cap]
+    req_x = dict(req_x, ok=exch.apply_recv_ok(req_x["ok"]))
+    req_x = jax.tree.map(lambda x: _constrain(x, cfg), req_x)
 
     # --- owner: reply with padded rows (declared lanes only on the wire) ---
     def answer(row_ptr, nbr, nbr_d, nbr_h, nbr_new, eqr_i, eqr_f, vr_i, vr_f,
@@ -404,8 +567,8 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         lq = jnp.clip(q // S, 0, n_loc - 1)
         lo = row_ptr[lq]                                   # [B]
         ln = jnp.where(ok, dplus[lq], 0)
-        j = jnp.arange(L, dtype=jnp.int32)
-        slots = jnp.clip(lo[:, None] + j[None, :], 0, e_cap - 1)   # [B, L]
+        j = jnp.arange(Lr, dtype=jnp.int32)
+        slots = jnp.clip(lo[:, None] + j[None, :], 0, e_cap - 1)   # [B, Lr]
         mask = j[None, :] < ln[:, None]
         out = dict(
             r_nbr=jnp.where(mask, nbr[slots], BIG_I32),
@@ -425,13 +588,10 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
     rep = jax.vmap(answer)(gr.row_ptr, gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new,
                            eqr_i_w, eqr_f_w, vr_i_w, vr_f_w, vq_i_w, vq_f_w,
                            gr.dplus, req_x["q"], req_x["ok"])
-    # reply routes back: reshape [S_owner, S_src, pcap, ...] → swap → [S_src, S_owner, pcap,...]
-    def back(x):
-        y = x.reshape((S, S, pcap) + x.shape[2:])
-        y = jnp.swapaxes(y, 0, 1)
-        return _constrain(y, cfg)
-
-    rep = jax.tree.map(back, rep)   # [S_req, S_dest, pcap, ...]
+    # reply routes back along the inverse path: [S_owner, in_cap, ...] →
+    # [S_req, out_cap, ...]
+    rep = exch.gather(rep)
+    rep = jax.tree.map(lambda x: _constrain(x, cfg), rep)
     # off the wire: re-expand shipped lanes to fold form (storage indices)
     rep = dict(
         rep,
@@ -449,10 +609,10 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
 
     def intersect(qrank2, qbase, qcount, pulled_end, dest_start2, ord2, pull,
                   row_ptr, edge_src, nbr, nbr_d, nbr_h, nbr_new, gen,
-                  epq_i, epq_f, epr_i, epr_f, vp_i, vp_f, rp):
+                  epq_i, epq_f, epr_i, epr_f, vp_i, vp_f, pcap_d, boff, rp):
         d = jnp.arange(S, dtype=jnp.int32)
-        lo_rank = qbase + t * pcap
-        hi_rank = qbase + jnp.minimum((t + 1) * pcap, qcount)
+        lo_rank = qbase + t * pcap_d
+        hi_rank = qbase + jnp.minimum((t + 1) * pcap_d, qcount)
         estart = jnp.searchsorted(qrank2, lo_rank, side="left").astype(jnp.int32)
         eend = jnp.searchsorted(qrank2, hi_rank, side="left").astype(jnp.int32)
         estart = jnp.clip(estart, dest_start2, pulled_end)
@@ -469,7 +629,9 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
             # triangle — skip their suffixes (keeps the wedges_pulled stat
             # equal to the planner's masked pulled_wedges accounting)
             ok_e = ok_e & gen[e]
-        slot = jnp.clip(qrank2[j_c] - qbase[:, None] - t * pcap, 0, pcap - 1)
+        slot = jnp.clip(qrank2[j_c] - qbase[:, None] - t * pcap_d[:, None],
+                        0, jnp.maximum(pcap_d - 1, 0)[:, None])
+        ridx = jnp.clip(boff[:, None] + slot, 0, out_cap - 1)  # flat reply idx
 
         # suffix candidates of edge e: [S, ecap, L]
         lp = jnp.clip(edge_src[e] // S, 0, n_loc - 1)
@@ -481,16 +643,27 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         ch = nbr_h[r_pos]
         ci = nbr[r_pos]
 
-        # pulled row for each edge slot: [S, ecap, L]
+        # pulled row for each edge slot: [S, ecap, Lr]
         def pick(x):
-            return x[d[:, None], slot]                     # [S, ecap, ...]
+            return x[ridx]                                 # [S, ecap, ...]
 
         rn, rd_, rh_ = pick(rp["r_nbr"]), pick(rp["r_d"]), pick(rp["r_h"])
         ln = pick(rp["ln"])
 
         if cfg.use_pallas:
+            # the kernel co-blocks rows and candidates at one width: pad the
+            # Lr-wide reply rows back to L with the same sentinels the owner
+            # writes, reproducing the historic inputs bit for bit (padding
+            # is local — it never crossed the wire)
+            if Lr < L:
+                padw = ((0, 0), (0, 0), (0, L - Lr))
+                rd_p = jnp.pad(rd_, padw, constant_values=BIG_I32)
+                rh_p = jnp.pad(rh_, padw, constant_values=jnp.uint32(0xFFFFFFFF))
+                rn_p = jnp.pad(rn, padw, constant_values=BIG_I32)
+            else:
+                rd_p, rh_p, rn_p = rd_, rh_, rn
             pos = is_ops.intersect(
-                rd_.reshape(-1, L), rh_.reshape(-1, L), rn.reshape(-1, L),
+                rd_p.reshape(-1, L), rh_p.reshape(-1, L), rn_p.reshape(-1, L),
                 ln.reshape(-1), cd.reshape(-1, L), ch.reshape(-1, L),
                 ci.reshape(-1, L), interpret=cfg.pallas_interpret,
             ).reshape(S, ecap, L)
@@ -502,7 +675,7 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
 
             pos = jax.vmap(jax.vmap(lb))(rd_, rh_, rn, ln, cd, ch, ci)
 
-        pos_c = jnp.clip(pos, 0, L - 1)
+        pos_c = jnp.clip(pos, 0, Lr - 1)
         hit = cand_ok & (pos < ln[..., None]) & (jnp.take_along_axis(rn, pos_c, -1) == ci)
         if cfg.delta:
             qr_new = jnp.take_along_axis(pick(rp["r_new"]), pos_c, -1)
@@ -538,7 +711,7 @@ def _pull_superstep(gr: ShardedDODGr, st, ps, t, cfg: EngineConfig,
         ps["qrank2"], ps["qbase"], ps["qcount"], ps["pulled_end"],
         ps["dest_start2"], ps["ord2"], ps["pull"], gr.row_ptr, gr.edge_src,
         gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, gr.delta_gen,
-        epq_i_l, epq_f_l, epr_i_l, epr_f_l, vp_i_l, vp_f_l, rep)
+        epq_i_l, epq_f_l, epr_i_l, epr_f_l, vp_i_l, vp_f_l, pcap_d, boff, rep)
     n_req = req["ok"].sum(dtype=jnp.float32)
     return tri, checked, overflow, n_req
 
@@ -560,65 +733,136 @@ def make_survey_fn(survey: Survey, cfg: EngineConfig):
         # (measured: 2×36 GB/device on the rmat32 cell; EXPERIMENTS §Perf)
         pin = lambda tree: jax.tree.map(lambda a: _constrain(a, cfg), tree)
 
+        # planner-stamped widths win so host plan and device decisions
+        # agree even if the plan was built for a different spec
+        mw = cfg.meta_widths
+        if mw is None:
+            mw = meta_widths(*spec.lane_counts())
+            if cfg.delta:   # newness bits on the wire (see plan_engine)
+                mw = (mw[0] + 1, mw[1] + 1, mw[2], mw[3])
+        w_push, w_row, w_hdr, w_req = mw
+
+        hub_on = cfg.n_hub_steps > 0 and gr.n_hubs > 0
+        is_hub = (gr.nbr_hub >= 0) if hub_on else None
+        gen = gr.delta_gen if cfg.delta else None
+        push_exch = _push_exchange(cfg, S)
+
+        dropped = jnp.zeros((), jnp.float32)
+        push_caps_j = jnp.asarray(np.asarray(push_exch.caps, np.int32))
         if cfg.mode == "pushpull":
-            # planner-stamped widths win so host plan and device decisions
-            # agree even if the plan was built for a different spec
-            mw = cfg.meta_widths
-            if mw is None:
-                mw = meta_widths(*spec.lane_counts())
-                if cfg.delta:   # newness bits on the wire (see plan_engine)
-                    mw = (mw[0] + 1, mw[1] + 1, mw[2], mw[3])
             st0 = pin(_stream_setup(gr))
+            sfx = st0["suffix"]
             if cfg.delta:
                 # pull decisions weigh only wedges the delta mask generates,
                 # mirroring the planner's masked vol(s, q)
-                st0 = dict(st0, suffix=st0["suffix"] * gr.delta_gen)
-            ps = pin(_pull_setup(gr, st0, cfg, mw))
+                sfx = sfx * gen
+            if hub_on:
+                # hub-centered groups carry zero pullable volume
+                sfx = sfx * (~is_hub)
+            st0 = dict(st0, suffix=sfx)
+            ps = pin(_pull_setup(gr, st0, cfg, mw, hub_mask=is_hub))
             push_mask = ~ps["pull"]
             if cfg.delta:
-                push_mask = push_mask & gr.delta_gen
+                push_mask = push_mask & gen
+            if hub_on:
+                push_mask = push_mask & ~is_hub
             st = pin(_stream_setup(gr, weight_mask=push_mask))
+            pull_exch = _pull_exchange(cfg, S)
+            pull_caps_j = jnp.asarray(np.asarray(pull_exch.caps, np.int32))
+            dropped += jnp.maximum(
+                ps["qcount"] - cfg.n_pull_steps * pull_caps_j, 0
+            ).sum(dtype=jnp.float32)
         else:
             ps = None
-            st = pin(_stream_setup(gr, weight_mask=gr.delta_gen if cfg.delta
-                                   else None))
+            wm = None
+            if cfg.delta and hub_on:
+                wm = gen & ~is_hub
+            elif cfg.delta:
+                wm = gen
+            elif hub_on:
+                wm = ~is_hub
+            st = pin(_stream_setup(gr, weight_mask=wm))
+        dropped += jnp.maximum(
+            st["stream_len"] - cfg.n_push_steps * push_caps_j, 0
+        ).sum(dtype=jnp.float32)
+
+        if hub_on:
+            hmask = is_hub if gen is None else (is_hub & gen)
+            hst = pin(_hub_setup(gr, st, hmask))
+            dropped += jnp.maximum(
+                hst["total"] - cfg.n_hub_steps * cfg.hub_wedge_cap, 0
+            ).sum(dtype=jnp.float32)
 
         stats = dict(
             wedges_pushed=jnp.zeros((), jnp.float32),
             tris_push=jnp.zeros((), jnp.float32),
             wedges_pulled=jnp.zeros((), jnp.float32),
             tris_pull=jnp.zeros((), jnp.float32),
+            wedges_hub=jnp.zeros((), jnp.float32),
+            tris_hub=jnp.zeros((), jnp.float32),
             pull_requests=jnp.zeros((), jnp.float32),
             pull_overflow=jnp.zeros((), jnp.float32),
+            stream_dropped=dropped,
+            wire_push_words=jnp.zeros((), jnp.float32),
+            wire_req_words=jnp.zeros((), jnp.float32),
+            wire_reply_words=jnp.zeros((), jnp.float32),
         )
+
+        # measured wire volume of one superstep: every slot (including block
+        # padding) that crosses the shard axis through the transport
+        push_step_words = float(push_exch.round_slots() * w_push)
 
         def push_step(carry, t):
             state, stats = carry
-            qr = _gen_push_queries(gr, st, t, cfg.push_cap, spec,
+            qr = _gen_push_queries(gr, st, t, push_exch, spec,
                                    delta=cfg.delta)
-            qx = _exchange(qr, cfg)
+            qx = push_exch.scatter(qr)
+            qx = dict(qx, ok=push_exch.apply_recv_ok(qx["ok"]))
+            qx = jax.tree.map(lambda x: _constrain(x, cfg), qx)
             tri = _answer_push_queries(gr, qx, cfg, spec)
             state = jax.vmap(survey.update)(state, tri)
             stats = dict(stats)
             stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
             stats["tris_push"] += tri.valid.sum(dtype=jnp.float32)
+            stats["wire_push_words"] += push_step_words
             return (state, stats), None
 
         (state, stats), _ = jax.lax.scan(
             push_step, (state, stats), jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
             unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
 
+        if hub_on:
+            def hub_step(carry, t):
+                state, stats = carry
+                tri, n_w = _hub_superstep(gr, hst, t, cfg, spec)
+                state = jax.vmap(survey.update)(state, tri)
+                stats = dict(stats)
+                stats["wedges_hub"] += n_w.sum()
+                stats["tris_hub"] += tri.valid.sum(dtype=jnp.float32)
+                return (state, stats), None
+
+            (state, stats), _ = jax.lax.scan(
+                hub_step, (state, stats),
+                jnp.arange(cfg.n_hub_steps, dtype=jnp.int32),
+                unroll=cfg.n_hub_steps if cfg.unroll_steps else 1)
+
         if cfg.mode == "pushpull" and cfg.n_pull_steps > 0:
+            Lr = cfg.pull_row_cap if cfg.pull_row_cap else gr.d_plus_max
+            req_step_words = float(pull_exch.round_slots() * w_req)
+            reply_step_words = float(pull_exch.round_slots() * (w_hdr + Lr * w_row))
+
             def pull_step(carry, t):
                 state, stats = carry
                 tri, checked, overflow, n_req = _pull_superstep(
-                    gr, st0, ps, t, cfg, spec)
+                    gr, ps, t, cfg, spec, pull_exch)
                 state = jax.vmap(survey.update)(state, tri)
                 stats = dict(stats)
                 stats["wedges_pulled"] += checked.sum()
                 stats["tris_pull"] += tri.valid.sum(dtype=jnp.float32)
                 stats["pull_requests"] += n_req
                 stats["pull_overflow"] += overflow.sum()
+                stats["wire_req_words"] += req_step_words
+                stats["wire_reply_words"] += reply_step_words
                 return (state, stats), None
 
             (state, stats), _ = jax.lax.scan(
@@ -644,17 +888,39 @@ def resolve_survey_spec(survey: Survey, gr: ShardedDODGr,
     return spec.resolve(dvi, dvf, dei, def_)
 
 
+def _exactness_guard(cfg: EngineConfig, stats: dict) -> dict:
+    """Satellite: a static window that overflowed means triangles were
+    silently dropped — flag the run inexact, and say so loudly."""
+    lost = stats.get("pull_overflow", 0.0) + stats.get("stream_dropped", 0.0)
+    stats["exact"] = lost == 0.0
+    if lost > 0:
+        msg = (
+            f"survey result is INEXACT: {int(stats.get('pull_overflow', 0))} "
+            f"pull-window candidate(s) and "
+            f"{int(stats.get('stream_dropped', 0))} stream slot(s) overflowed "
+            "their static capacities and were dropped, so triangles are "
+            "undercounted. Use the capacities planned by "
+            "pushpull.plan_engine/plan_delta (they size every window "
+            "exactly), or pass on_overflow='raise' to fail fast.")
+        if cfg.on_overflow == "raise":
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    return stats
+
+
 def _finalize_run(survey: Survey, cfg: EngineConfig, merged, stats):
     """Host-side epilogue shared by the entry points: per-survey stats,
-    DOULION debiasing + its variance estimate (Tsourakakis et al.)."""
+    exactness guard, DOULION debiasing + its variance estimate
+    (Tsourakakis et al.)."""
     stats = jax.tree.map(float, jax.device_get(stats))
     members = getattr(survey, "surveys", (survey,))
     stats["n_surveys"] = float(len(members))
+    stats = _exactness_guard(cfg, stats)
     result = survey.finalize(merged)
     if cfg.sample_p < 1.0:
         p = cfg.sample_p
         result = survey.scale_sampled(result, p)
-        raw = stats["tris_push"] + stats["tris_pull"]
+        raw = stats["tris_push"] + stats["tris_pull"] + stats["tris_hub"]
         est = raw / p**3
         # Var[T̂] ≈ T(1/p³ − 1) (independent-triangle term; the shared-edge
         # covariance term needs the per-edge triangle multiset — see ref.py)
@@ -680,7 +946,7 @@ def _check_sampling(gr: ShardedDODGr, cfg: EngineConfig):
 
 def _check_provenance(gr: ShardedDODGr, cfg: EngineConfig):
     """Graph stamps and plan stamps must agree — sampling, orientation key,
-    and epoch/delta state — or results are silently wrong."""
+    hub threshold, and epoch/delta state — or results are silently wrong."""
     _check_sampling(gr, cfg)
     if gr.is_delta != cfg.delta:
         what = "a delta frontier" if gr.is_delta else "a full snapshot"
@@ -691,6 +957,11 @@ def _check_provenance(gr: ShardedDODGr, cfg: EngineConfig):
         raise ValueError(
             f"orientation mismatch: graph sharded with orient={gr.orient!r} "
             f"but plan built with orient={cfg.orient!r}")
+    if gr.hub_theta != cfg.hub_theta:
+        raise ValueError(
+            f"hub mismatch: graph sharded with hub_theta={gr.hub_theta} but "
+            f"plan built with hub_theta={cfg.hub_theta}; pass the planner's "
+            "θ (cfg.hub_theta) to shard_dodgr/shard_delta")
     if cfg.delta and gr.epoch != cfg.epoch:
         raise ValueError(
             f"epoch mismatch: frontier is epoch {gr.epoch} but the plan was "
@@ -745,6 +1016,7 @@ def survey_delta(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
     stats = jax.tree.map(float, jax.device_get(stats))
     stats["epoch"] = float(cfg.epoch)
     stats["n_surveys"] = float(len(getattr(survey, "surveys", (survey,))))
+    stats = _exactness_guard(cfg, stats)
     if prev_state is not None:
         merged = survey.merge_epochs(prev_state, merged)
     return merged, stats

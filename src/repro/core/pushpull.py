@@ -18,6 +18,23 @@ model, the superstep counts, and the :class:`VolumeReport` — is computed
 at the survey's projected metadata widths. The resolved widths are
 stamped into ``EngineConfig.meta_widths`` so the device replica of the
 decision rule uses the exact same numbers.
+
+Two further levers on top of the push-vs-pull split (ISSUE 4):
+
+* **Transport** — ``transport="ragged"`` sizes every exchange buffer with
+  *per-(shard, dest)* per-round capacities taken from this planner's exact
+  stream histograms (stamped into ``EngineConfig.push_caps`` /
+  ``pull_caps``) instead of the dense worst-pair cap, so skewed graphs
+  stop shipping hub-sized padding on every pair. The ``wire_*`` fields of
+  :class:`VolumeReport` are the resulting per-lane wire volumes — they
+  equal the engine's measured buffer bytes exactly (asserted in tests).
+* **Hub delegation** — ``hub_theta="auto"`` picks a degree threshold θ from
+  the degree histogram + bytes cost model; vertices with degree ≥ θ get
+  their ``Adj₊`` rows replicated to every shard
+  (``dodgr.shard_dodgr(hub_theta=θ)``) and their incoming wedges leave the
+  wire entirely (closed on the source shard). The planner removes hub
+  wedges from both the push streams and the pull decision, and accounts
+  the one-time replication volume in ``hub_table_bytes``.
 """
 from __future__ import annotations
 
@@ -25,8 +42,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.dodgr import (delta_gen_mask, meta_widths, orient_edges,
-                              sparsify_edges)
+from repro.comm.exchange import TRANSPORTS
+from repro.core.dodgr import (delta_gen_mask, hub_widths, meta_widths,
+                              orient_edges, sparsify_edges)
 from repro.core.engine import EngineConfig
 from repro.core.surveys import MetaSpec, Survey
 from repro.graphs.csr import DeltaGraph, HostGraph
@@ -41,7 +59,14 @@ class VolumeReport:
     the survey the plan was built for; the ``*_width`` fields expose them,
     with ``full_push_entry_width``/``full_pull_row_width`` keeping the
     all-metadata widths for reference so the projection win is visible
-    analytically (``projected_fraction``)."""
+    analytically (``projected_fraction``).
+
+    The ``wire_*`` fields are the *transport-level* volumes: the actual
+    buffer slots that cross the shard axis per superstep (including block
+    padding — dense pays the worst pair on every pair, ragged pays each
+    pair's own histogram), summed over supersteps for the byte totals.
+    They match the engine's measured wire stats exactly, per lane, per
+    superstep."""
 
     S: int
     wedges_total: int
@@ -68,6 +93,22 @@ class VolumeReport:
     epoch: int = 0
     pull_q_cap: int = 0              # resolved cap (autotuned when the call
     #                                  passed pull_q_cap=None)
+    pull_row_cap: int = 0            # reply-row padding = max d₊ over pulled
+    #                                  groups (hub delegation shrinks it)
+    # --- transport + hub delegation (two-tier exchange) ---
+    transport: str = "dense"
+    hub_theta: int = 0               # chosen degree threshold (0 = no hubs)
+    n_hubs: int = 0
+    hub_resolved_wedges: int = 0     # wedges closed on-shard via the hub
+    #                                  table — zero exchanged bytes
+    hub_table_bytes: int = 0         # one-time replication volume of the
+    #                                  hub table (S copies, full metadata)
+    # --- per-lane wire volumes (transport buffer slots / bytes) ---
+    wire_push_slots_step: int = 0    # push-lane slots per superstep, Σ pairs
+    wire_req_slots_step: int = 0     # pull-request slots per superstep
+    wire_push_bytes: int = 0         # over all push supersteps
+    wire_req_bytes: int = 0          # over all pull supersteps
+    wire_reply_bytes: int = 0        # padded reply rows, all pull supersteps
 
     @property
     def reduction(self) -> float:
@@ -78,6 +119,13 @@ class VolumeReport:
         """Projected push-entry bytes as a fraction of the full-metadata
         entry — the analytic volume saving of lane projection."""
         return self.push_entry_width / max(1, self.full_push_entry_width)
+
+    @property
+    def wire_total_bytes(self) -> int:
+        """Everything that crosses the shard axis: all three wire lanes
+        plus the one-time hub-table replication."""
+        return (self.wire_push_bytes + self.wire_req_bytes
+                + self.wire_reply_bytes + self.hub_table_bytes)
 
 
 def _resolve_plan_spec(survey, g: HostGraph) -> MetaSpec:
@@ -115,6 +163,68 @@ def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
     return int(np.clip(cap, 1, max(1, min(int(nz.max()), byte_bound))))
 
 
+def _choose_hub_theta(tdeg: np.ndarray, d_plus: np.ndarray,
+                      vol_push_v: np.ndarray, req_v: np.ndarray,
+                      widths, S: int, w_hub_elem: int, w_hub_hdr: int,
+                      max_hubs: int) -> int:
+    """Pick the delegation threshold θ from the degree histogram + bytes
+    cost model, by minimizing total wire words over the degree-threshold
+    family:
+
+        cost(θ) = P(θ)·w_push                             (pushed wedges)
+                + R(θ)·(w_req + w_hdr + Lr(θ)·w_row)      (pulls, rows
+                                                           padded to the
+                                                           heaviest pulled
+                                                           survivor Lr)
+                + S·Σ_{deg ≥ θ} (d₊·w_elem + w_hdr_hub)   (hub table)
+
+    The Lr term is what makes delegation decisive on skewed graphs: every
+    padded reply row is sized by the worst still-pulled ``Adj₊`` row, so
+    delegating the few heaviest rows shrinks *every* reply in the epoch.
+    Returns 0 (delegate nothing) when the undelegated plan is cheapest."""
+    w_push, w_row, w_hdr, w_req = widths
+    n = len(tdeg)
+    if n == 0 or max_hubs < 1:
+        return 0
+    order = np.argsort(-tdeg, kind="stable")
+    d_sorted = tdeg[order]
+    if d_sorted[0] < 1:
+        return 0
+    vp = vol_push_v[order].astype(np.int64)
+    rq = req_v[order].astype(np.int64)
+    dp = d_plus[order].astype(np.int64)
+    cum_vp = np.concatenate([[0], np.cumsum(vp)])
+    cum_rq = np.concatenate([[0], np.cumsum(rq)])
+    cum_tab = np.concatenate(
+        [[0], np.cumsum(S * (dp * np.int64(w_hub_elem) + w_hub_hdr))])
+    # Lr after delegating prefix [0, k): max d₊ over still-pulled vertices
+    dmax_pull = np.where(rq > 0, dp, 0)
+    sufmax = np.concatenate(
+        [np.maximum.accumulate(dmax_pull[::-1])[::-1], [0]])
+    P0, R0 = int(vp.sum()), int(rq.sum())
+
+    def cost(k):
+        P = P0 - cum_vp[k]
+        R = R0 - cum_rq[k]
+        lr = max(1, int(sufmax[k]))
+        return (P * w_push + R * (w_req + w_hdr + lr * w_row) + cum_tab[k])
+
+    # threshold candidates: prefixes ending where the degree strictly
+    # drops, so θ = d_sorted[k-1] always includes every vertex of that
+    # degree; prefix length bounded by max_hubs
+    last_of_deg = np.ones(n, bool)
+    last_of_deg[:-1] = d_sorted[1:] != d_sorted[:-1]
+    ks = np.nonzero(last_of_deg & (np.arange(n) < max_hubs)
+                    & (d_sorted >= 1))[0] + 1
+    if len(ks) == 0:
+        return 0
+    costs = np.array([cost(int(k)) for k in ks])
+    best = int(np.argmin(costs))
+    if costs[best] >= cost(0):
+        return 0
+    return int(d_sorted[ks[best] - 1])
+
+
 def plan_engine(
     g: HostGraph,
     S: int,
@@ -130,6 +240,11 @@ def plan_engine(
     orient: str = "degree",
     edge_new: np.ndarray | None = None,
     epoch: int = 0,
+    transport: str = "dense",
+    hub_theta: int | str = 0,
+    hub_wedge_cap: int = 256,
+    max_hubs: int = 1024,
+    on_overflow: str = "warn",
 ) -> tuple[EngineConfig, VolumeReport]:
     """Plan static superstep counts/capacities and account communication.
 
@@ -152,7 +267,21 @@ def plan_engine(
     the delta mask generates, and entry widths grow by the on-wire newness
     bits. Prefer :func:`plan_delta`, which derives the frontier from a
     :class:`~repro.graphs.csr.DeltaGraph`.
+
+    ``transport="ragged"`` stamps per-(shard, dest) per-round capacities
+    (from this plan's exact stream histograms) into the config so the
+    engine's ragged exchange ships each pair's own stream instead of the
+    worst pair's; results are bitwise-identical to dense.
+
+    ``hub_theta`` enables hub delegation: ``"auto"`` chooses the threshold
+    from the degree histogram + bytes cost model (bounded by ``max_hubs``
+    replicated rows), an int forces it, 0 disables. Shard the graph with
+    the *same* θ — ``shard_dodgr(g, S, hub_theta=cfg.hub_theta)`` — or the
+    provenance cross-check refuses to run.
     """
+    if transport not in TRANSPORTS:
+        raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                         f"got {transport!r}")
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
     delta = edge_new is not None
@@ -198,42 +327,102 @@ def plan_engine(
     sq = s_o * np.int64(g.n) + q_o
     uq, inv = np.unique(sq, return_inverse=True)
     vol = np.bincount(inv, weights=suffix_w).astype(np.int64)
-    dq_of_group = d_plus[(uq % np.int64(g.n)).astype(np.int64)]
+    gv = (uq % np.int64(g.n)).astype(np.int64)
+    dq_of_group = d_plus[gv]
     if mode == "push":
-        pull_group = np.zeros(len(uq), bool)
+        base_pull = np.zeros(len(uq), bool)
     elif cost_model == "entries":
-        pull_group = dq_of_group < vol
+        base_pull = dq_of_group < vol
     else:
-        pull_group = dq_of_group * w_row + w_hdr + w_req < vol * w_push
+        base_pull = dq_of_group * w_row + w_hdr + w_req < vol * w_push
+
+    # --- hub delegation: θ from the degree histogram + bytes cost model ---
+    w_hub_elem, w_hub_hdr = hub_widths(g.spec.dvi, g.spec.dvf, g.spec.dei,
+                                       g.spec.def_, delta=delta)
+    tdeg = (deg if orient == "degree" else g.degrees()).astype(np.int64)
+    theta = 0
+    if hub_theta == "auto":
+        # per-vertex wire load under the baseline plan: pushed wedge volume
+        # and pulled-group count — delegation erases exactly these, and
+        # removing the heaviest pulled rows also shrinks the reply padding
+        vol_push_v = np.bincount(gv[~base_pull], weights=vol[~base_pull],
+                                 minlength=g.n).astype(np.int64)
+        req_v = np.bincount(gv[base_pull], minlength=g.n).astype(np.int64)
+        theta = _choose_hub_theta(tdeg, d_plus, vol_push_v, req_v,
+                                  (w_push, w_row, w_hdr, w_req), S,
+                                  w_hub_elem, w_hub_hdr, max_hubs)
+    elif hub_theta:
+        theta = int(hub_theta)
+        if theta < 1:
+            raise ValueError(f"hub_theta must be ≥ 1 (or 0/'auto'), "
+                             f"got {theta}")
+
+    if theta >= 1:
+        hub_v = tdeg >= theta
+        n_hubs = int(hub_v.sum())
+        hub_e = hub_v[q_o]
+        pull_group = base_pull & ~hub_v[gv]
+        hub_table_bytes = int(S * (d_plus[hub_v] * w_hub_elem
+                                   + w_hub_hdr).sum()) * 4
+    else:
+        n_hubs = 0
+        hub_e = np.zeros(len(q_o), bool)
+        pull_group = base_pull
+        hub_table_bytes = 0
     pull_e = pull_group[inv]
+    push_e = ~pull_e & ~hub_e
 
     wedges_total = int(suffix.sum())
     gen_wedges = int(suffix_w.sum())
-    pushed = suffix_w[~pull_e]
+    hub_w = suffix_w * hub_e
+    hub_resolved = int(hub_w.sum())
+    hub_per_shard = np.bincount(s_o, weights=hub_w, minlength=S)
+    n_hub_steps = (ceil_div(int(hub_per_shard.max()), hub_wedge_cap)
+                   if hub_resolved else 0)
+
+    pushed = suffix_w[push_e]
     sd = s_o * S + d_o
-    push_stream = np.bincount(sd[~pull_e], weights=pushed, minlength=S * S)
+    push_stream = np.bincount(sd[push_e], weights=pushed, minlength=S * S)
     max_push_stream = int(push_stream.max()) if len(push_stream) else 0
     n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
+    push_caps = None
+    if transport == "ragged":
+        pc = -(-push_stream.astype(np.int64) // n_push_steps)
+        push_caps = tuple(tuple(int(x) for x in row)
+                          for row in pc.reshape(S, S))
 
     # pulled groups per (s, d) → pull supersteps; edge windows → edge cap
     n_pull_steps = 0
     pull_edge_cap = 1
+    pull_caps = None
+    pull_row_cap = 0
     n_pulled_groups = int(pull_group.sum())
-    L = int(d_plus.max()) if g.n and len(d_plus) else 1
     if mode == "pushpull" and n_pulled_groups:
         g_s = (uq // np.int64(g.n))[pull_group]
         g_q = (uq % np.int64(g.n))[pull_group]
         g_d = g_q % S
+        # reply rows pad to the heaviest row actually pulled — under hub
+        # delegation the heavy rows left the pull set, so this (and the
+        # dominant reply volume) shrinks to the heaviest survivor
+        pull_row_cap = max(1, int(d_plus[g_q].max()))
         per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
         if pull_q_cap is None:
-            pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr, max(1, L))
+            pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
+                                              pull_row_cap)
         n_pull_steps = max(1, ceil_div(int(per_sd.max()), pull_q_cap))
-        # edges per (s,d,window): group rank within (s,d) in (q) order, window
-        # = rank // pull_q_cap; edge count per window
+        if transport == "ragged":
+            pc = -(-per_sd.astype(np.int64) // n_pull_steps)
+            pull_caps = tuple(tuple(int(x) for x in row)
+                              for row in pc.reshape(S, S))
+            caps_of_sd = pc
+        else:
+            caps_of_sd = np.full(S * S, pull_q_cap, np.int64)
+        # edges per (s,d,window): group rank within (s,d) in (q) order,
+        # window = rank // cap(s,d); edge count per window
         grp_order = np.lexsort((g_q, g_d, g_s))
         gsd = (g_s * S + g_d)[grp_order]
         rank_in_sd = np.arange(len(gsd)) - np.searchsorted(gsd, gsd, side="left")
-        win = rank_in_sd // pull_q_cap
+        win = rank_in_sd // np.maximum(caps_of_sd[gsd], 1)
         # map each pulled edge to its group's window
         grp_win = np.empty(len(uq), np.int64)
         pulled_idx = np.nonzero(pull_group)[0]
@@ -247,14 +436,28 @@ def plan_engine(
         pull_edge_cap = max(1, int(per_window.max()))
     if pull_q_cap is None:
         pull_q_cap = 32  # nothing pulled — any cap is a no-op
+    if transport == "ragged" and pull_caps is None:
+        pull_caps = tuple((0,) * S for _ in range(S))
 
     # --- volumes ---
-    push_only_entries = gen_wedges
-    push_only_bytes = gen_wedges * w_push * 4
+    push_only_entries = gen_wedges - hub_resolved
+    push_only_bytes = push_only_entries * w_push * 4 + hub_table_bytes
     pp_push_entries = int(pushed.sum())
     pp_rows = int(d_plus[(uq % np.int64(g.n))[pull_group]].sum())
     pp_bytes = (pp_push_entries * w_push + n_pulled_groups * (w_req + w_hdr)
-                + pp_rows * w_row) * 4
+                + pp_rows * w_row) * 4 + hub_table_bytes
+    # --- transport wire volumes (buffer slots that actually cross shards,
+    # block padding included — must equal the engine's measured stats) ---
+    if transport == "ragged":
+        push_slots = int(sum(sum(row) for row in push_caps))
+        req_slots = int(sum(sum(row) for row in pull_caps)) if pull_caps else 0
+    else:
+        push_slots = S * S * push_cap
+        req_slots = S * S * pull_q_cap if n_pull_steps else 0
+    wire_push_bytes = n_push_steps * push_slots * w_push * 4
+    wire_req_bytes = n_pull_steps * req_slots * w_req * 4
+    wire_reply_bytes = (n_pull_steps * req_slots
+                        * (w_hdr + pull_row_cap * w_row) * 4)
     report = VolumeReport(
         S=S,
         wedges_total=wedges_total,
@@ -275,6 +478,17 @@ def plan_engine(
         gen_wedges=gen_wedges,
         epoch=epoch,
         pull_q_cap=pull_q_cap,
+        pull_row_cap=pull_row_cap,
+        transport=transport,
+        hub_theta=theta,
+        n_hubs=n_hubs,
+        hub_resolved_wedges=hub_resolved,
+        hub_table_bytes=hub_table_bytes,
+        wire_push_slots_step=push_slots,
+        wire_req_slots_step=req_slots,
+        wire_push_bytes=wire_push_bytes,
+        wire_req_bytes=wire_req_bytes,
+        wire_reply_bytes=wire_reply_bytes,
     )
     cfg = EngineConfig(
         mode=mode,
@@ -283,6 +497,7 @@ def plan_engine(
         pull_q_cap=pull_q_cap,
         pull_edge_cap=pull_edge_cap,
         n_pull_steps=n_pull_steps,
+        pull_row_cap=pull_row_cap,
         cost_model=cost_model,
         use_pallas=use_pallas,
         shard_axis=shard_axis,
@@ -292,6 +507,13 @@ def plan_engine(
         delta=delta,
         epoch=epoch,
         orient=orient,
+        transport=transport,
+        push_caps=push_caps,
+        pull_caps=pull_caps,
+        hub_theta=theta,
+        n_hub_steps=n_hub_steps,
+        hub_wedge_cap=hub_wedge_cap,
+        on_overflow=on_overflow,
     )
     return cfg, report
 
@@ -308,9 +530,13 @@ def plan_delta(
     the epoch so ``engine.survey_delta`` can cross-check provenance against
     the matching :func:`~repro.core.dodgr.shard_delta` ingest.
 
-    Accepts every :func:`plan_engine` keyword (mode, caps, cost model, …).
-    Default orientation is the epoch-stable key — see
-    :func:`~repro.core.dodgr.orient_edges`.
+    Accepts every :func:`plan_engine` keyword (mode, caps, cost model,
+    transport, hub_theta, …). Default orientation is the epoch-stable key —
+    see :func:`~repro.core.dodgr.orient_edges`. ``hub_theta="auto"`` here
+    weighs only the epoch's masked wedge volumes, so a batch that touches a
+    hub delegates exactly the rows that would otherwise blow up the
+    frontier exchange; pass the chosen ``cfg.hub_theta`` to
+    ``shard_delta``.
     """
     h, edge_new = dg.frontier()
     return plan_engine(h, S, survey, orient=orient, edge_new=edge_new,

@@ -633,10 +633,18 @@ class TopKWeightedTriangles(Survey):
     """Top-k heaviest triangles, weight = Σ of an edge float column
     (after Kumar et al., *Retrieving Top Weighted Triangles in Graphs*).
 
-    Per-shard state is a k-slot weight heap kept sorted by ``lax.top_k``
-    against each incoming batch; the cross-shard ``merge`` is the paper's
-    merge-by-sort over the S·k stacked candidates. Exact because the engine
-    discovers every triangle exactly once (push or pull, never both).
+    Per-shard state is a k-slot weight heap re-selected against each
+    incoming batch; the cross-shard ``merge`` is the paper's merge-by-sort
+    over the S·k stacked candidates. Exact because the engine discovers
+    every triangle exactly once (push, pull or hub lane — never two).
+
+    Every selection orders candidates by (weight desc, triangle key
+    (p, q, r) lex asc), so when more than k triangles tie at the k-th
+    weight the survivors are a *deterministic* function of the triangle
+    set — independent of discovery order, shard count, transport, and
+    epoch split. That makes the finalized result bitwise-identical across
+    {dense, ragged, ragged+hub} runs and epoch-accumulated vs one-shot
+    runs (asserted in tests), closing the tie caveat documented in PR 3.
     """
 
     def __init__(self, k: int, weight_col: int = 0):
@@ -651,8 +659,11 @@ class TopKWeightedTriangles(Survey):
         )
 
     def _select(self, w, tri):
-        topw, idx = jax.lax.top_k(w, self.k)
-        return dict(w=topw, tri=tri[idx])
+        # -w ascending == weight descending; -(-inf) pads sort last. The
+        # remaining keys never decide between distinct weights, only ties.
+        order = jnp.lexsort((tri[:, 2], tri[:, 1], tri[:, 0], -w))
+        idx = order[: self.k]
+        return dict(w=w[idx], tri=tri[idx])
 
     def update(self, state, tri):
         c = self.wc
@@ -669,11 +680,10 @@ class TopKWeightedTriangles(Survey):
 
     def merge_epochs(self, prev, delta):
         # merge-by-sort of the two k-heaps — top-k is decomposable over a
-        # disjoint partition of the triangle set. The weight multiset is
-        # exact either way; when >k triangles TIE at the k-th weight, WHICH
-        # tied triangle survives depends on candidate order (top_k breaks
-        # ties by position), so the `triangles` rows of an epoch-accumulated
-        # run can differ from a one-shot run at the boundary weight.
+        # disjoint partition of the triangle set, and the lexicographic
+        # tie-break in _select makes the k survivors a pure function of the
+        # candidate multiset, so epoch accumulation is bitwise-identical to
+        # a one-shot run even at a tied boundary weight.
         return self._select(jnp.concatenate([prev["w"], delta["w"]]),
                             jnp.concatenate([prev["tri"], delta["tri"]]))
 

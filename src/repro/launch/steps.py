@@ -439,7 +439,10 @@ def _tripoll_cell(arch, mod, shape: ShapeCell, mesh) -> CellPlan:
     gr = dodgr_spec(S=S, n_global=cfg.n_global, n_loc=n_loc, e_cap=e_cap,
                     d_plus_max=cfg.d_plus_max, dvi=cfg.dvi, dvf=cfg.dvf,
                     dei=cfg.dei, def_=cfg.def_)
-    spec_first = lambda aval: P(aa, *([None] * (len(aval.shape) - 1)))
+    # shard the [S, ...] stacked arrays on the mesh; the hub-table arrays
+    # (no leading shard axis — read-only replicas) stay fully replicated
+    spec_first = lambda aval: P(aa, *([None] * (len(aval.shape) - 1))) \
+        if aval.shape and aval.shape[0] == S else P(*([None] * len(aval.shape)))
     gr_sh = jax.tree.map(lambda a: NamedSharding(mesh, spec_first(a)), gr)
     if shape.extras.get("bundle"):
         survey = SurveyBundle([TriangleCount(), ClosureTime(),

@@ -1,0 +1,416 @@
+"""Two-tier exchange subsystem (ISSUE 4): the {dense, ragged, ragged+hub}
+transports must produce bitwise-identical survey results under push and
+pushpull, on full snapshots and across K=4 delta epochs; the planner's
+per-lane wire accounting must equal the engine's measured buffer volumes
+exactly; and overflowed windows must be loud (exact=False + warning +
+opt-in raise) instead of silently undercounting. The hypothesis fuzzing
+twin is test_exchange_property.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.comm.exchange import DenseExchange, RaggedExchange, make_exchange
+from repro.core.dodgr import shard_delta, shard_dodgr
+from repro.core.engine import (finalize_epochs, survey_delta,
+                               survey_push_only, survey_push_pull)
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.ref import (count_triangles_ref, survey_triangles_ref,
+                            wedge_count_ref)
+from repro.core.surveys import (Enumerate, SurveyBundle,
+                                TopKWeightedTriangles, TriangleCount)
+from repro.graphs import generators
+from repro.graphs.csr import HostGraph
+from repro.graphs.csr import MetaSpec as GraphSpec
+
+from test_delta import (_append, _bundle, _empty_base, _labeled_graph,
+                        _tree_equal, _ts_batches)
+
+TRANSPORTS = ["dense", "ragged", "ragged+hub"]
+
+
+def _hub_theta_for(g, frac=0.9):
+    """A θ that is guaranteed to select some hubs on these test graphs."""
+    return max(1, int(np.percentile(g.degrees(), frac * 100)))
+
+
+def _plan(g, S, survey, mode, transport, **kw):
+    hub = 0
+    name = transport
+    if transport == "ragged+hub":
+        name = "ragged"
+        hub = _hub_theta_for(g)
+    cfg, rep = plan_engine(g, S, survey, mode=mode, transport=name,
+                           hub_theta=hub, push_cap=64, pull_q_cap=4, **kw)
+    return cfg, rep
+
+
+def _run(g, S, survey, mode, transport, **kw):
+    cfg, rep = _plan(g, S, survey, mode, transport, **kw)
+    gr, _ = shard_dodgr(g, S=S, hub_theta=cfg.hub_theta,
+                        orient=kw.get("orient", "degree"))
+    run = survey_push_only if mode == "push" else survey_push_pull
+    res, st = run(gr, survey, cfg)
+    return res, st, rep, cfg
+
+
+# ---------------------------------------------------------------------------
+# transport unit layer
+
+
+def test_ragged_routing_is_a_permutation_of_dense():
+    """Scatter must deliver exactly the valid dense slots (as a set), and
+    gather must be scatter's inverse on every valid slot."""
+    rng = np.random.default_rng(0)
+    S = 4
+    caps = rng.integers(0, 7, (S, S))
+    ex = RaggedExchange(caps)
+    payload = rng.integers(0, 1 << 20, (S, ex.out_cap)).astype(np.int32)
+    ok = np.zeros((S, ex.out_cap), bool)
+    for s in range(S):
+        ok[s, : caps[s].sum()] = True
+    out = ex.scatter({"x": jnp.asarray(payload), "ok": jnp.asarray(ok)})
+    rok = np.asarray(ex.apply_recv_ok(out["ok"]))
+    # every valid sent value arrives exactly once, at its dest shard
+    got = np.asarray(out["x"])[rok]
+    want = payload[ok]
+    assert sorted(got.tolist()) == sorted(want.tolist())
+    for s in range(S):
+        for d in range(S):
+            lo = ex.block_off[s, d]
+            sent = payload[s, lo:lo + caps[s, d]]
+            assert all(v in np.asarray(out["x"])[d] for v in sent)
+    # gather inverts scatter on valid slots
+    back = ex.gather(out)
+    assert (np.asarray(back["x"])[ok] == payload[ok]).all()
+
+
+def test_dense_exchange_matches_swapaxes():
+    S, cap = 3, 5
+    ex = DenseExchange(S, cap)
+    x = np.arange(S * S * cap, dtype=np.int32).reshape(S, S * cap)
+    got = np.asarray(ex.scatter({"x": jnp.asarray(x)})["x"])
+    want = np.swapaxes(x.reshape(S, S, cap), 0, 1).reshape(S, S * cap)
+    assert (got == want).all()
+    # involution: gather undoes scatter
+    back = np.asarray(ex.gather({"x": jnp.asarray(got)})["x"])
+    assert (back == x).all()
+    assert ex.round_slots() == S * S * cap
+
+
+def test_make_exchange_validation():
+    with pytest.raises(ValueError, match="ragged transport needs"):
+        make_exchange("ragged", 2, 4, None)
+    with pytest.raises(ValueError, match="transport"):
+        make_exchange("sparse", 2, 4, None)
+    with pytest.raises(ValueError, match="caps"):
+        RaggedExchange(np.zeros((2, 3), np.int64))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance invariant: bitwise identity across transports
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_transports_bitwise_identical_full_snapshot(mode):
+    """Every bitwise-accumulating built-in survey, polled in one bundle:
+    dense, ragged and ragged+hub must agree bit for bit (results AND
+    triangle counts), on a labeled temporal_social graph."""
+    g = _labeled_graph(120, 1200, seed=4)
+    base = None
+    for tr in TRANSPORTS:
+        res, st, rep, cfg = _run(g, 3, _bundle(g), mode, tr)
+        tris = st["tris_push"] + st["tris_pull"] + st["tris_hub"]
+        if base is None:
+            base = (res, tris)
+        else:
+            assert _tree_equal(res, base[0]), tr
+            assert tris == base[1], tr
+        assert st["exact"] is True
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_transports_exact_on_skewed_rmat(transport):
+    g = generators.rmat(8, 8, seed=3)
+    t_ref = count_triangles_ref(g)
+    w_ref = wedge_count_ref(g)
+    res, st, rep, cfg = _run(g, 4, TriangleCount(), "pushpull", transport)
+    assert res == t_ref
+    # every wedge handled exactly once, across the three lanes
+    assert int(st["wedges_pushed"] + st["wedges_pulled"]
+               + st["wedges_hub"]) == w_ref
+    if transport == "ragged+hub":
+        assert cfg.hub_theta >= 1 and rep.n_hubs > 0
+        assert st["wedges_hub"] > 0
+
+
+def test_enumerate_set_identical_across_transports():
+    """Enumerate's buffer placement is lane/order-dependent, so the
+    contract across transports is set-level: same triangles, same total."""
+    g = _labeled_graph(100, 700, seed=5)
+    seen = []
+    for tr in TRANSPORTS:
+        res, st, _, _ = _run(g, 3, Enumerate(capacity=4096), "pushpull", tr)
+        assert res["overflowed"] == 0
+        seen.append((res["total_found"],
+                     {tuple(t) for t in res["triangles"].tolist()}))
+    assert seen[0] == seen[1] == seen[2]
+
+
+# ---------------------------------------------------------------------------
+# planner/engine agreement (the decision rule replicated across layers)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("cost_model", ["entries", "bytes"])
+def test_planner_engine_agreement_with_hub(transport, cost_model):
+    g = _labeled_graph(150, 1500, seed=7)
+    res, st, rep, cfg = _run(g, 4, TriangleCount(), "pushpull", transport,
+                             cost_model=cost_model)
+    assert int(st["pull_requests"]) == rep.pushpull_requests
+    assert int(st["wedges_pushed"]) == rep.pushpull_push_entries
+    assert int(st["wedges_pulled"]) == rep.pulled_wedges
+    assert int(st["wedges_hub"]) == rep.hub_resolved_wedges
+    assert st["stream_dropped"] == 0
+
+
+def test_hub_provenance_mismatch_raises():
+    g = _labeled_graph(120, 1200, seed=4)
+    theta = _hub_theta_for(g)
+    gr_plain, _ = shard_dodgr(g, S=2)
+    gr_hub, _ = shard_dodgr(g, S=2, hub_theta=theta)
+    cfg_hub, _ = plan_engine(g, 2, TriangleCount(), mode="push",
+                             hub_theta=theta)
+    cfg_plain, _ = plan_engine(g, 2, TriangleCount(), mode="push")
+    for gr_bad, cfg_bad in ((gr_plain, cfg_hub), (gr_hub, cfg_plain)):
+        with pytest.raises(ValueError, match="hub mismatch"):
+            survey_push_only(gr_bad, TriangleCount(), cfg_bad)
+
+
+def test_auto_theta_disabled_when_no_benefit():
+    # a cycle has no wedge volume concentration — delegation can't win
+    n = 30
+    src = np.arange(n)
+    g = HostGraph.from_edges(n, src, (src + 1) % n)
+    cfg, rep = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                           hub_theta="auto")
+    assert cfg.hub_theta == 0 and rep.n_hubs == 0 and cfg.n_hub_steps == 0
+
+
+def test_auto_theta_picks_hubs_on_skewed_graph():
+    g = generators.rmat(8, 8, seed=3)
+    cfg, rep = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                           transport="ragged", hub_theta="auto",
+                           cost_model="bytes")
+    assert cfg.hub_theta >= 1
+    assert rep.n_hubs > 0
+    assert rep.hub_resolved_wedges > 0
+    # delegation must pay for itself under the plan's own cost model
+    base_cfg, base_rep = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                                     transport="ragged", cost_model="bytes")
+    assert rep.wire_total_bytes < base_rep.wire_total_bytes
+
+
+# ---------------------------------------------------------------------------
+# satellite: VolumeReport analytic bytes == measured wire bytes (per lane,
+# per superstep) on the ragged path
+
+
+@pytest.mark.parametrize("gname,mk", [
+    ("rmat", lambda: generators.rmat(8, 8, seed=3)),
+    ("temporal_social", lambda: generators.temporal_social(150, 1500, seed=7)),
+])
+@pytest.mark.parametrize("transport", ["ragged", "ragged+hub", "dense"])
+def test_volume_accounting_matches_measured(gname, mk, transport):
+    g = mk()
+    res, st, rep, cfg = _run(g, 4, TriangleCount(), "pushpull", transport)
+    # totals, per lane (stats are words; the report is bytes = words · 4)
+    assert st["wire_push_words"] * 4 == rep.wire_push_bytes
+    assert st["wire_req_words"] * 4 == rep.wire_req_bytes
+    assert st["wire_reply_words"] * 4 == rep.wire_reply_bytes
+    # per superstep: the accumulated totals factor exactly into the planned
+    # per-round slot counts at the projected widths
+    assert st["wire_push_words"] == (
+        cfg.n_push_steps * rep.wire_push_slots_step * rep.push_entry_width)
+    if cfg.n_pull_steps:
+        assert st["wire_req_words"] == (
+            cfg.n_pull_steps * rep.wire_req_slots_step * rep.request_width)
+    assert res == count_triangles_ref(g)
+
+
+def test_ragged_never_ships_more_than_dense():
+    g = generators.rmat(8, 8, seed=3)
+    _, _, rep_d, cfg_d = _run(g, 4, TriangleCount(), "pushpull", "dense")
+    _, _, rep_r, cfg_r = _run(g, 4, TriangleCount(), "pushpull", "ragged")
+    assert rep_r.wire_push_bytes <= rep_d.wire_push_bytes
+    assert rep_r.wire_req_bytes <= rep_d.wire_req_bytes
+    assert rep_r.wire_reply_bytes <= rep_d.wire_reply_bytes
+    # and on a skewed graph the compaction is strict
+    assert rep_r.wire_total_bytes < rep_d.wire_total_bytes
+
+
+# ---------------------------------------------------------------------------
+# delta epochs: K=4 batches bitwise across transports, hub shrinks the wire
+
+
+@pytest.mark.parametrize("mode", ["push", "pushpull"])
+def test_k4_delta_epochs_bitwise_across_transports(mode):
+    g = _labeled_graph(120, 1200, seed=4)
+    splits = _ts_batches(g, 4)
+    results = []
+    for tr in TRANSPORTS:
+        name = "ragged" if tr == "ragged+hub" else tr
+        survey = _bundle(g)
+        dg, state = None, None
+        for idx in splits:
+            dg = _append(dg if dg is not None else _empty_base(g), g, idx)
+            cfg, rep = plan_delta(dg, 2, survey, mode=mode, transport=name,
+                                  hub_theta=("auto" if tr == "ragged+hub"
+                                             else 0),
+                                  push_cap=64, pull_q_cap=4)
+            gr, _ = shard_delta(dg, 2, hub_theta=cfg.hub_theta)
+            state, st = survey_delta(gr, survey, cfg, state)
+            assert st["exact"] is True
+        results.append(finalize_epochs(survey, state))
+    assert _tree_equal(results[0], results[1])
+    assert _tree_equal(results[0], results[2])
+
+
+def test_hub_shrinks_wire_on_hub_touching_delta_batch():
+    """The PR 3 known limit: a batch touching a hub inflates the delta
+    frontier. Delegating the hub must leave the exchanged wedge volume
+    measurably below the undelegated plan (the frontier blow-up resolves
+    on-shard), at identical results."""
+    g = generators.temporal_social(600, 6000, seed=3)
+    hub = int(np.argmax(g.degrees()))
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    touches = (g.src == hub) | (g.dst == hub)
+    # history = everything except 150 hub-touching edges; batch = those
+    batch_idx = np.nonzero(touches[order])[0][-150:]
+    batch = order[batch_idx]
+    hist = np.setdiff1d(order, batch)
+    dg = _append(_empty_base(g), g, hist)
+    dg = _append(dg, g, batch)
+
+    cfg_p, rep_p = plan_delta(dg, 4, TriangleCount(), mode="pushpull",
+                              push_cap=256)
+    cfg_h, rep_h = plan_delta(dg, 4, TriangleCount(), mode="pushpull",
+                              push_cap=256, transport="ragged",
+                              hub_theta="auto")
+    assert cfg_h.hub_theta >= 1, "auto θ must fire on a hub-touching batch"
+    assert rep_h.hub_resolved_wedges > 0
+    # exchanged wedge volume (what actually crosses shards) shrinks
+    exchanged_p = rep_p.pushpull_push_entries + rep_p.pulled_wedges
+    exchanged_h = rep_h.pushpull_push_entries + rep_h.pulled_wedges
+    assert exchanged_h < exchanged_p
+    # identical new-triangle folds either way
+    gr_p, _ = shard_delta(dg, 4)
+    gr_h, _ = shard_delta(dg, 4, hub_theta=cfg_h.hub_theta)
+    s_p, st_p = survey_delta(gr_p, TriangleCount(), cfg_p)
+    s_h, st_h = survey_delta(gr_h, TriangleCount(), cfg_h)
+    assert _tree_equal(s_p, s_h)
+    assert (st_p["tris_push"] + st_p["tris_pull"] ==
+            st_h["tris_push"] + st_h["tris_pull"] + st_h["tris_hub"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: loud exactness guard on overflowed windows
+
+
+def test_pull_overflow_flags_inexact_and_warns():
+    g = generators.temporal_social(150, 1500, seed=7)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                         push_cap=64, pull_q_cap=4)
+    bad = dataclasses.replace(cfg, pull_edge_cap=1)
+    with pytest.warns(RuntimeWarning, match="INEXACT"):
+        res, st = survey_push_pull(gr, TriangleCount(), bad)
+    assert st["pull_overflow"] > 0
+    assert st["exact"] is False
+    assert res < count_triangles_ref(g)  # triangles really were dropped
+
+
+def test_overflow_raises_when_opted_in():
+    g = generators.temporal_social(150, 1500, seed=7)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, TriangleCount(), mode="pushpull",
+                         push_cap=64, pull_q_cap=4, on_overflow="raise")
+    bad = dataclasses.replace(cfg, pull_edge_cap=1)
+    with pytest.raises(RuntimeError, match="INEXACT"):
+        survey_push_pull(gr, TriangleCount(), bad)
+
+
+def test_truncated_push_schedule_flags_inexact():
+    g = generators.rmat(7, 8, seed=1)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, TriangleCount(), mode="push", push_cap=64)
+    assert cfg.n_push_steps > 1
+    bad = dataclasses.replace(cfg, n_push_steps=1)
+    with pytest.warns(RuntimeWarning, match="INEXACT"):
+        res, st = survey_push_only(gr, TriangleCount(), bad)
+    assert st["stream_dropped"] > 0 and st["exact"] is False
+
+
+def test_planned_runs_stay_exact():
+    g = generators.temporal_social(150, 1500, seed=7)
+    res, st, _, _ = _run(g, 4, TriangleCount(), "pushpull", "ragged+hub")
+    assert st["exact"] is True and st["pull_overflow"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: deterministic top-k tie-breaking (lexicographic on the key)
+
+
+def _tied_graph(k=6):
+    """Clique with all edge weights equal: every triangle ties at weight 3,
+    so the k survivors are decided purely by the tie-break."""
+    kk = k
+    idx = np.arange(kk)
+    src, dst = np.meshgrid(idx, idx, indexing="ij")
+    keep = src < dst
+    spec = GraphSpec(e_float=("w",))
+    m = int(keep.sum())
+    return HostGraph.from_edges(kk, src[keep], dst[keep], spec=spec,
+                                emeta_f=np.ones((m, 1), np.float32))
+
+
+def test_topk_ties_break_lexicographic_and_transport_invariant():
+    g = _tied_graph(7)
+    k = 5
+    oracle = []
+    survey_triangles_ref(g, lambda p, q, r, m: oracle.append((p, q, r)))
+    want = sorted(oracle)[:k]
+    outs = []
+    for tr in TRANSPORTS:
+        res, _, _, _ = _run(g, 2, TopKWeightedTriangles(k=k), "pushpull", tr)
+        assert (res["weights"] == 3.0).all()
+        outs.append([tuple(t) for t in res["triangles"].tolist()])
+    assert outs[0] == outs[1] == outs[2] == want
+
+
+def test_topk_ties_epoch_merge_equals_one_shot():
+    """The PR 3 caveat, now an asserted property: epoch accumulation with a
+    tied k-th weight lands the same triangles as a one-shot run."""
+    g = _tied_graph(8)
+    k = 4
+    survey = TopKWeightedTriangles(k=k)
+    splits = np.array_split(np.arange(g.m), 3)
+    dg, state = None, None
+    for idx in splits:
+        dg = _append(dg if dg is not None else _empty_base(g), g, idx)
+        cfg, _ = plan_delta(dg, 2, survey, mode="pushpull", push_cap=64,
+                            pull_q_cap=4)
+        gr, _ = shard_delta(dg, 2)
+        state, _ = survey_delta(gr, survey, cfg, state)
+    res_delta = finalize_epochs(survey, state)
+    gr_f, _ = shard_dodgr(dg.union(), 2, orient="stable")
+    cfg_f, _ = plan_engine(dg.union(), 2, survey, mode="pushpull",
+                           orient="stable", push_cap=64, pull_q_cap=4)
+    res_full, _ = survey_push_pull(gr_f, survey, cfg_f)
+    assert _tree_equal(res_delta, res_full)
+    oracle = []
+    survey_triangles_ref(dg.union(), lambda p, q, r, m: oracle.append((p, q, r)),
+                         orient="stable")
+    assert [tuple(t) for t in res_full["triangles"].tolist()] == \
+        sorted(oracle)[:k]

@@ -1,0 +1,34 @@
+"""Static determinism & plan-conservation verifier (``python -m
+repro.analysis``).
+
+Three passes, all zero-device (abstract tracing + host numpy + AST):
+
+1. :mod:`~repro.analysis.contracts` — fold-contract analysis of every
+   survey's ``init``/``update``/``merge``/``merge_epochs`` algebra, plus a
+   determinism verdict (``bitwise`` / ``order_sensitive`` / ``unknown``)
+   that the planner stamps into ``EngineConfig.determinism``;
+2. :mod:`~repro.analysis.conservation` — plan/exchange conservation: the
+   transport's static routing maps are injective and fully covered, and
+   the stamped plan reconciles word-for-word with its ``VolumeReport``;
+3. :mod:`~repro.analysis.lint` — AST hygiene rules (no Python coercion of
+   traced fold values, no float scatter-add accumulators in core, stamps
+   read only via the provenance helper, every Pallas kernel has a pure-jnp
+   oracle).
+
+See ``docs/determinism.md`` for the contracts these passes enforce.
+"""
+from repro.analysis.conservation import check_exchange, check_plan
+from repro.analysis.contracts import (BITWISE, ORDER_SENSITIVE, UNKNOWN,
+                                      VERDICTS, builtin_surveys,
+                                      check_fold_contract,
+                                      classify_determinism)
+from repro.analysis.lint import (check_kernel_oracles, lint_file,
+                                 lint_repo)
+from repro.analysis.report import Violation, format_report
+
+__all__ = [
+    "BITWISE", "ORDER_SENSITIVE", "UNKNOWN", "VERDICTS", "Violation",
+    "builtin_surveys", "check_exchange", "check_fold_contract",
+    "check_kernel_oracles", "check_plan", "classify_determinism",
+    "format_report", "lint_file", "lint_repo",
+]

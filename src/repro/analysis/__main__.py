@@ -1,0 +1,132 @@
+"""CLI driver: ``python -m repro.analysis`` — run all three static passes
+over every built-in survey × transport and exit nonzero on violations.
+
+The whole run is *static*: abstract tracing (``jax.eval_shape`` /
+``jax.make_jaxpr``), host-numpy plan auditing, and AST linting. Nothing
+executes on a device, so this is safe (and fast) as a CI gate in front of
+the real test suite.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.analysis import (BITWISE, builtin_surveys, check_fold_contract,
+                            check_plan, classify_determinism, format_report,
+                            lint_repo)
+from repro.analysis.report import Violation
+
+PASSES = ("contracts", "plans", "lint")
+
+
+def _graph(n: int = 96, m: int = 700, seed: int = 4):
+    """temporal_social plus a degree vertex column and an int edge-label
+    column, so every built-in survey's lanes resolve (same shape as the
+    test suite's labeled fixture)."""
+    from repro.graphs import generators
+    from repro.graphs.csr import HostGraph
+    from repro.graphs.csr import MetaSpec as GraphSpec
+
+    g = generators.temporal_social(n, m, seed=seed)
+    spec = GraphSpec(v_int=g.spec.v_int + ("degree",), v_float=(),
+                     e_int=("elabel",), e_float=g.spec.e_float)
+    deg = g.degrees().astype(np.int32)
+    vmeta_i = np.concatenate([g.vmeta_i, deg[:, None]], 1)
+    elab = (np.arange(g.m, dtype=np.int32) % 7)[:, None]
+    return HostGraph(g.n, g.src, g.dst, spec, vmeta_i, None, elab, g.emeta_f)
+
+
+def run_contracts(surveys) -> list[Violation]:
+    out: list[Violation] = []
+    for name, s in surveys:
+        out += check_fold_contract(s, name=name)
+        verdict, reasons = classify_determinism(s)
+        if verdict != BITWISE:
+            for r in reasons:
+                out.append(Violation(
+                    "contracts", "non-bitwise-builtin", name,
+                    f"built-in surveys must be bitwise, classified "
+                    f"{verdict!r}: {r}"))
+    return out
+
+
+def run_plans(surveys, S: int = 4) -> list[Violation]:
+    from repro.core.pushpull import plan_delta, plan_engine
+
+    g = _graph()
+    deg = g.degrees()
+    theta = max(1, int(np.partition(deg, -8)[-8]))  # ≥ 8 delegated hubs
+    cells = [
+        dict(transport="dense"),
+        dict(transport="ragged"),
+        dict(transport="ragged", hub_theta=theta),
+    ]
+    out: list[Violation] = []
+    for name, s in surveys:
+        for cell in cells:
+            for mode in ("pushpull", "push"):
+                cfg, rep = plan_engine(g, S, s, mode=mode, push_cap=64,
+                                       **cell)
+                for v in check_plan(cfg, rep):
+                    out.append(Violation(v.passname, v.code,
+                                         f"{name}/{cell['transport']}"
+                                         f"{'+hub' if cell.get('hub_theta') else ''}"
+                                         f"/{mode}:{v.where}", v.message))
+    # one delta epoch (frontier plan) per transport, TriangleCount carrier
+    from repro.graphs.csr import HostGraph
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    k = len(order) // 2
+    base = HostGraph(g.n, g.src[order[:k]], g.dst[order[:k]], g.spec,
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[order[:k]],
+                     g.emeta_f[order[:k]])
+    dg = base.append_edges(g.src[order[k:]], g.dst[order[k:]],
+                           emeta_i=g.emeta_i[order[k:]],
+                           emeta_f=g.emeta_f[order[k:]])
+    for name, s in surveys:
+        cfg, rep = plan_delta(dg, S, s, transport="ragged", push_cap=64)
+        for v in check_plan(cfg, rep):
+            out.append(Violation(v.passname, v.code,
+                                 f"{name}/delta:{v.where}", v.message))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static determinism & plan-conservation verifier")
+    ap.add_argument("passes", nargs="*",
+                    help="subset of passes to run (default: all of "
+                         f"{', '.join(PASSES)})")
+    ap.add_argument("-S", type=int, default=4, help="shard count for plans")
+    args = ap.parse_args(argv)
+    for p in args.passes:
+        if p not in PASSES:
+            ap.error(f"unknown pass {p!r} (choose from {', '.join(PASSES)})")
+    selected = args.passes or list(PASSES)
+
+    surveys = builtin_surveys()
+    violations: list[Violation] = []
+    if "contracts" in selected:
+        v = run_contracts(surveys)
+        print(f"contracts: {len(surveys)} surveys checked, "
+              f"{len(v)} violation(s)")
+        violations += v
+    if "plans" in selected:
+        v = run_plans(surveys, S=args.S)
+        print(f"plans: {len(surveys)} surveys × {{dense, ragged, "
+              f"ragged+hub}} × {{pushpull, push}} + delta checked, "
+              f"{len(v)} violation(s)")
+        violations += v
+    if "lint" in selected:
+        v = lint_repo()
+        print(f"lint: repo swept, {len(v)} violation(s)")
+        violations += v
+
+    print(format_report(violations))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

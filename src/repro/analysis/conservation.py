@@ -1,0 +1,292 @@
+"""Plan/exchange conservation checker (pass 2 of ``repro.analysis``).
+
+Every quantity the engine ships across the shard axis is determined *on
+host, before compilation*: the planner stamps per-lane capacities and
+superstep counts into :class:`~repro.core.engine.EngineConfig`, the
+transport builds static index maps from them, and the
+:class:`~repro.core.pushpull.VolumeReport` claims analytic wire volumes
+that the engine's measured buffers must match byte-for-byte. That makes
+the whole communication structure *provable without moving a byte* — this
+module does exactly that, with plain numpy over the static maps:
+
+* :func:`check_exchange` — the send maps (``dest_of``/``lane_of``/
+  ``block_off``) address the wire buffer injectively, every sent slot has
+  exactly one recv slot (via ``in_off``), ``recv_ok`` covers precisely the
+  fed slots (no masked deliveries, no phantom reads), and per-pair caps
+  conserve slot counts end to end.
+* :func:`check_plan` — the stamped config and the report reconcile
+  word-for-word: projected ``meta_widths`` against the report's entry
+  widths, per-lane slot totals against the transports actually built from
+  the config, analytic ``wire_*_bytes`` recomputed from
+  steps × slots × width, and — the part that used to be a *runtime
+  truncation warning* — superstep counts × capacities actually cover the
+  planner's measured stream maxima, so a plan that would drop wedges is
+  rejected at plan time.
+
+Zero device execution: everything here is host numpy on static arrays.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.analysis.report import Violation
+from repro.comm.exchange import Exchange, make_exchange
+
+if TYPE_CHECKING:  # engine/pushpull import nothing from analysis at module
+    from repro.core.engine import EngineConfig       # scope, so no cycle —
+    from repro.core.pushpull import VolumeReport     # types only here
+
+
+def check_exchange(exch: Exchange, lane: str = "push") -> list[Violation]:
+    """Statically verify one transport's routing maps.
+
+    ``lane`` only labels the findings (``push`` / ``pull``)."""
+    v: list[Violation] = []
+
+    def bad(code: str, where: str, msg: str) -> None:
+        v.append(Violation("conservation", code, where, msg))
+
+    S = int(exch.S)
+    caps = np.asarray(exch.caps, np.int64)
+    if caps.shape != (S, S):
+        bad("caps-shape", f"{lane}", f"caps is {caps.shape}, expected "
+            f"({S}, {S}) — one per-round capacity per (src, dest) pair")
+        return v
+    if (caps < 0).any():
+        s, d = map(int, np.argwhere(caps < 0)[0])
+        bad("caps-negative", f"{lane}:({s}->{d})",
+            f"negative per-pair capacity {int(caps[s, d])}")
+        return v
+
+    dest_of = np.asarray(exch.dest_of, np.int64)
+    lane_of = np.asarray(exch.lane_of, np.int64)
+    cap_of = np.asarray(exch.cap_of, np.int64)
+    block_off = np.asarray(exch.block_off, np.int64)
+    in_off = np.asarray(exch.in_off, np.int64)
+    out_cap, in_cap = int(exch.out_cap), int(exch.in_cap)
+
+    # --- send side: maps address the wire buffer injectively ---
+    claimed = np.zeros((S, in_cap), np.int64)   # sent slots per recv slot
+    for s in range(S):
+        valid = dest_of[s] < S                  # dest_of == S marks padding
+        n_valid, n_caps = int(valid.sum()), int(caps[s].sum())
+        if n_valid != n_caps:
+            bad("send-cap-conservation", f"{lane}:src{s}",
+                f"send map exposes {n_valid} routable slots but caps[{s}, :] "
+                f"sums to {n_caps} — entries would be {'dropped' if n_valid < n_caps else 'fabricated'} on the wire")
+            continue
+        j = np.nonzero(valid)[0]
+        d, ln, c = dest_of[s][valid], lane_of[s][valid], cap_of[s][valid]
+        if (ln < 0).any() or (ln >= c).any():
+            k = int(j[(ln < 0) | (ln >= c)][0])
+            bad("send-lane-overflow", f"{lane}:src{s}:slot{k}",
+                f"lane_of[{s}, {k}] = {int(lane_of[s, k])} outside its block "
+                f"capacity {int(cap_of[s, k])}")
+            continue
+        if (c != caps[s, d]).any():
+            k = int(j[c != caps[s, d]][0])
+            bad("send-cap-mismatch", f"{lane}:src{s}:slot{k}",
+                f"cap_of[{s}, {k}] = {int(cap_of[s, k])} disagrees with "
+                f"caps[{s}, {int(dest_of[s, k])}] = "
+                f"{int(caps[s, dest_of[s, k]])}")
+            continue
+        if (j != block_off[s, d] + ln).any():
+            k = int(j[j != block_off[s, d] + ln][0])
+            bad("aliased-send-offsets", f"{lane}:src{s}:slot{k}",
+                f"slot {k} routes to (dest {int(dest_of[s, k])}, lane "
+                f"{int(lane_of[s, k])}) but block_off + lane addresses slot "
+                f"{int(block_off[s, dest_of[s, k]] + lane_of[s, k])} — the "
+                "send map does not invert the block layout, so two entries "
+                "would collide in one wire slot")
+            continue
+        pair = d * np.int64(out_cap) + ln
+        if len(np.unique(pair)) != len(pair):
+            bad("send-map-not-injective", f"{lane}:src{s}",
+                "two send slots map to the same (dest, lane) — one entry "
+                "silently overwrites the other on delivery")
+            continue
+        # --- recv side: where swapping/gather actually lands each slot ---
+        r = in_off[d, s] + ln
+        if (r < 0).any() or (r >= in_cap).any():
+            k = int(j[(r < 0) | (r >= in_cap)][0])
+            bad("recv-slot-oob", f"{lane}:src{s}:slot{k}",
+                f"slot {k} (dest {int(dest_of[s, k])}) lands at recv "
+                f"position {int(in_off[dest_of[s, k], s] + lane_of[s, k])} "
+                f"outside the recv buffer (in_cap={in_cap})")
+            continue
+        np.add.at(claimed, (d, r), 1)
+
+    if (claimed > 1).any():
+        d, r = map(int, np.argwhere(claimed > 1)[0])
+        bad("recv-slot-aliased", f"{lane}:dest{d}:recv{r}",
+            f"{int(claimed[d, r])} sent slots are delivered to the same "
+            f"recv slot {r} of shard {d} — deliveries overwrite each other")
+
+    ok = (np.ones((S, in_cap), bool) if exch.recv_ok is None
+          else np.asarray(exch.recv_ok, bool))
+    fed = claimed.astype(bool)
+    if (fed & ~ok).any():
+        d, r = map(int, np.argwhere(fed & ~ok)[0])
+        bad("recv-ok-missing", f"{lane}:dest{d}:recv{r}",
+            f"recv slot {r} of shard {d} receives a sent entry but recv_ok "
+            "masks it invalid — delivered work would be dropped")
+    if (ok & ~fed).any() and exch.recv_ok is not None:
+        d, r = map(int, np.argwhere(ok & ~fed)[0])
+        bad("recv-ok-phantom", f"{lane}:dest{d}:recv{r}",
+            f"recv_ok marks slot {r} of shard {d} valid but no sender feeds "
+            "it — the fold would consume stale buffer contents")
+
+    total = int(caps.sum())
+    if exch.round_slots() != total:
+        bad("round-slot-total", lane,
+            f"round_slots() = {exch.round_slots()} but per-pair caps sum to "
+            f"{total}")
+    return v
+
+
+def _coverage(code: str, lane: str, steps: int, per_round: int,
+              need: int, what: str, v: list[Violation]) -> None:
+    have = steps * per_round
+    if need > have:
+        v.append(Violation(
+            "conservation", code, lane,
+            f"plan covers {steps} superstep(s) × {per_round} {what}/round "
+            f"= {have}, but the planner measured a peak stream of {need} — "
+            f"{need - have} would be truncated at runtime. Raise the cap or "
+            "step count (plan_engine sizes these from the same histograms, "
+            "so a stamped plan violating this was built or edited by hand)"))
+
+
+def check_plan(cfg: "EngineConfig", report: "VolumeReport") -> list[Violation]:
+    """Reconcile a stamped plan against its :class:`VolumeReport`,
+    word-for-word, and verify the transports it will instantiate."""
+    v: list[Violation] = []
+
+    def bad(code: str, where: str, msg: str) -> None:
+        v.append(Violation("conservation", code, where, msg))
+
+    S = int(report.S)
+    if cfg.transport != report.transport:
+        bad("transport-mismatch", "plan",
+            f"config stamps transport={cfg.transport!r} but the report was "
+            f"accounted for {report.transport!r}")
+        return v
+
+    # --- widths: the stamped plan and the report must agree per word ---
+    if cfg.meta_widths is None:
+        bad("meta-widths-unstamped", "plan",
+            "EngineConfig.meta_widths is None — plan_engine always stamps "
+            "the projected (w_push, w_row, w_hdr, w_req); a hand-built "
+            "config cannot be byte-audited")
+        return v
+    w_push, w_row, w_hdr, w_req = cfg.meta_widths
+    rep_w = (report.push_entry_width, report.pull_row_width,
+             report.pull_header_width, report.request_width)
+    for name, cw, rw in zip(("w_push", "w_row", "w_hdr", "w_req"),
+                            cfg.meta_widths, rep_w):
+        if cw != rw:
+            bad("width-mismatch", f"plan:{name}",
+                f"config stamps {name}={cw} words but the report accounted "
+                f"{rw} — bytes on the wire would not match the audit")
+    if cfg.pull_row_cap != report.pull_row_cap:
+        bad("pull-row-cap-mismatch", "plan",
+            f"config stamps pull_row_cap={cfg.pull_row_cap} but the report "
+            f"accounted {report.pull_row_cap} reply rows")
+
+    # --- push lane: build the actual transport and audit it ---
+    try:
+        push_x = make_exchange(cfg.transport, S, cfg.push_cap, cfg.push_caps)
+    except Exception as e:
+        bad("push-exchange-invalid", "push",
+            f"config's push-lane capacities do not build a transport: {e}")
+        return v
+    v += check_exchange(push_x, "push")
+    push_slots = push_x.round_slots()
+    if push_slots != report.wire_push_slots_step:
+        bad("wire-slot-total", "push",
+            f"push transport ships {push_slots} slots/round but the report "
+            f"claims wire_push_slots_step={report.wire_push_slots_step}")
+    want = cfg.n_push_steps * push_slots * w_push * 4
+    if want != report.wire_push_bytes:
+        bad("wire-bytes-push", "push",
+            f"n_push_steps({cfg.n_push_steps}) × slots({push_slots}) × "
+            f"w_push({w_push}) × 4 = {want} B but the report claims "
+            f"wire_push_bytes={report.wire_push_bytes}")
+    _coverage("plan-truncation-push", "push", cfg.n_push_steps,
+              int(np.asarray(push_x.caps, np.int64).max()),
+              report.push_stream_max, "slots per heaviest (src,dest) pair",
+              v)
+    entries_need = (report.pushpull_push_entries if cfg.mode == "pushpull"
+                    else report.push_only_entries)
+    _coverage("plan-truncation-push", "push:total", cfg.n_push_steps,
+              push_slots, entries_need, "wire slots", v)
+
+    # --- pull lane ---
+    if cfg.n_pull_steps:
+        try:
+            pull_x = make_exchange(cfg.transport, S, cfg.pull_q_cap,
+                                   cfg.pull_caps)
+        except Exception as e:
+            bad("pull-exchange-invalid", "pull",
+                f"config's pull-lane capacities do not build a transport: "
+                f"{e}")
+            return v
+        v += check_exchange(pull_x, "pull")
+        req_slots = pull_x.round_slots()
+        if req_slots != report.wire_req_slots_step:
+            bad("wire-slot-total", "pull",
+                f"pull transport ships {req_slots} request slots/round but "
+                f"the report claims "
+                f"wire_req_slots_step={report.wire_req_slots_step}")
+        _coverage("plan-truncation-pull", "pull", cfg.n_pull_steps,
+                  int(np.asarray(pull_x.caps, np.int64).max()),
+                  report.pull_groups_max,
+                  "pulled groups per heaviest (src,dest) pair", v)
+        _coverage("plan-truncation-pull", "pull:total", cfg.n_pull_steps,
+                  req_slots, report.pushpull_requests, "request slots", v)
+    else:
+        req_slots = 0
+        if report.wire_req_slots_step != 0:
+            bad("wire-slot-total", "pull",
+                f"plan runs zero pull supersteps but the report claims "
+                f"wire_req_slots_step={report.wire_req_slots_step}")
+        if cfg.mode == "pushpull" and report.pushpull_requests > 0:
+            bad("plan-truncation-pull", "pull",
+                f"the planner measured {report.pushpull_requests} pulled "
+                "groups but the plan runs zero pull supersteps — every pull "
+                "would be dropped")
+    want = cfg.n_pull_steps * req_slots * w_req * 4
+    if want != report.wire_req_bytes:
+        bad("wire-bytes-req", "pull",
+            f"n_pull_steps({cfg.n_pull_steps}) × slots({req_slots}) × "
+            f"w_req({w_req}) × 4 = {want} B but the report claims "
+            f"wire_req_bytes={report.wire_req_bytes}")
+    want = cfg.n_pull_steps * req_slots * (w_hdr + cfg.pull_row_cap
+                                           * w_row) * 4
+    if want != report.wire_reply_bytes:
+        bad("wire-bytes-reply", "pull",
+            f"n_pull_steps({cfg.n_pull_steps}) × slots({req_slots}) × "
+            f"(w_hdr({w_hdr}) + pull_row_cap({cfg.pull_row_cap}) × "
+            f"w_row({w_row})) × 4 = {want} B but the report claims "
+            f"wire_reply_bytes={report.wire_reply_bytes}")
+
+    # --- hub lane (on-shard, no wire — but still capacity-planned) ---
+    if cfg.hub_theta != report.hub_theta:
+        bad("hub-theta-mismatch", "hub",
+            f"config stamps hub_theta={cfg.hub_theta} but the report was "
+            f"accounted at θ={report.hub_theta}")
+    if report.n_hubs > 0 and cfg.hub_theta < 1:
+        bad("hub-theta-mismatch", "hub",
+            f"report claims {report.n_hubs} delegated hubs but the config "
+            "disables delegation (hub_theta=0)")
+    if report.hub_resolved_wedges > 0 and cfg.n_hub_steps < 1:
+        bad("plan-truncation-hub", "hub",
+            f"the planner routed {report.hub_resolved_wedges} wedges "
+            "through the hub table but the plan runs zero hub supersteps")
+    elif cfg.n_hub_steps:
+        _coverage("plan-truncation-hub", "hub", cfg.n_hub_steps,
+                  cfg.hub_wedge_cap, report.hub_stream_max,
+                  "hub wedges per heaviest shard", v)
+    return v

@@ -1,0 +1,299 @@
+"""Static fold-contract analysis for surveys (pass 1 of ``repro.analysis``).
+
+The repo's whole test strategy leans on *bitwise identity* — incremental ==
+recompute, ragged/hub transport == dense, projected lanes == full metadata.
+Those contracts only hold when a survey's fold algebra is well-behaved:
+
+* ``update`` must be a **stable scan carry**: same pytree structure, shapes
+  and dtypes out as in (the engine folds it under ``jax.lax.scan``);
+* ``merge`` (cross-shard) and ``merge_epochs`` (epoch accumulation) must be
+  **closed over the state algebra**: same structure and dtypes as ``init``
+  produces, with no silent promotion (dtype drift across epochs breaks the
+  incremental == recompute identity at the first accumulate);
+* the fold hot path must be **order-insensitive**: float scatter-adds fold
+  colliding triangles in backend-defined order, host callbacks and RNG are
+  outside the deterministic algebra entirely.
+
+Everything here runs by *abstract tracing only* — ``jax.eval_shape`` for
+the algebra checks, ``jax.make_jaxpr`` for the determinism scan — so the
+verifier proves the contracts with **zero device execution**, before any
+expensive run. The verdict (:data:`BITWISE` vs :data:`ORDER_SENSITIVE`) is
+stamped into ``EngineConfig.determinism`` by ``pushpull.plan_engine`` so
+the delta engine can warn when a non-bitwise survey is accumulated through
+``merge_epochs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.analysis.report import Violation
+from repro.core.surveys import MetaSpec, Survey, TriangleBatch
+
+# determinism verdicts (stamped into EngineConfig.determinism)
+BITWISE = "bitwise"                  # fold algebra is reduction-order-free
+ORDER_SENSITIVE = "order_sensitive"  # result depends on fold/reduction order
+UNKNOWN = "unknown"                  # fold is not abstractly traceable
+
+VERDICTS = (BITWISE, ORDER_SENSITIVE, UNKNOWN)
+
+# storage widths (dvi, dvf, dei, def_) used when no graph schema is given;
+# wide enough for every built-in survey's default lane declarations
+DEFAULT_WIDTHS = (2, 2, 2, 2)
+
+# primitives that break the bitwise contract when they appear in a fold
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback", "outside_call"}
+_RNG_PRIMS = {"threefry2x32", "rng_bit_generator", "random_seed",
+              "random_bits", "random_wrap", "random_unwrap",
+              "random_fold_in", "random_gamma", "rng_uniform"}
+
+
+def _resolve(survey: Survey | MetaSpec, widths) -> MetaSpec:
+    spec = survey if isinstance(survey, MetaSpec) else \
+        getattr(survey, "meta_spec", MetaSpec.full())
+    return spec.resolve(*widths)
+
+
+def _tree_sig(tree):
+    """(treedef, [(shape, dtype) per leaf]) of an eval_shape output."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, [(tuple(l.shape), jnp.dtype(l.dtype)) for l in leaves]
+
+
+def _leaf_paths(tree) -> list[str]:
+    paths, _ = zip(*jax.tree_util.tree_flatten_with_path(tree)[0]) \
+        if jax.tree_util.tree_leaves(tree) else ((), None)
+    return [jax.tree_util.keystr(p) or "<root>" for p in paths]
+
+
+def _stack(tree, S: int):
+    """Prepend an abstract shard axis to every leaf (the merge input)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((S,) + tuple(l.shape), l.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking (determinism scan)
+
+
+def _subjaxprs(val):
+    """Yield nested (Closed)Jaxprs inside an eqn param value, duck-typed so
+    the walk survives jax.core API renames."""
+    if hasattr(val, "eqns"):                      # Jaxpr
+        yield val
+    elif hasattr(val, "jaxpr") and hasattr(getattr(val, "jaxpr"), "eqns"):
+        yield val.jaxpr                           # ClosedJaxpr
+    elif isinstance(val, (tuple, list)):
+        for item in val:
+            yield from _subjaxprs(item)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                yield from _iter_eqns(sub)
+
+
+def _is_float(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and jnp.issubdtype(dt, jnp.floating)
+
+
+def _scan_jaxpr(hook: str, fn: Callable, args, reasons: list[str]) -> None:
+    """Trace ``fn`` to a jaxpr and record every bitwise-contract breaker."""
+    jpr = jax.make_jaxpr(fn)(*args)
+    for eqn in _iter_eqns(jpr.jaxpr):
+        name = eqn.primitive.name
+        if name == "scatter-add":
+            upd = eqn.invars[-1]
+            if _is_float(getattr(upd, "aval", None)):
+                reasons.append(
+                    f"{hook}: float scatter-add "
+                    f"({upd.aval.dtype.name} accumulator) — the reduction "
+                    "order over colliding indices is backend-defined, so "
+                    "results are not bitwise across transports/epochs; "
+                    "accumulate into integer limbs (counter64, CountingSet) "
+                    "or bucket first")
+        elif name in _CALLBACK_PRIMS:
+            reasons.append(
+                f"{hook}: host callback ({name}) in the fold hot path — "
+                "callbacks escape the deterministic fold algebra; move "
+                "host-side work to finalize()")
+        elif name in _RNG_PRIMS:
+            reasons.append(
+                f"{hook}: RNG ({name}) in the fold hot path — a stochastic "
+                "fold can never satisfy the bitwise incremental==recompute "
+                "contract; sample host-side (DOULION-style) before planning")
+
+
+# ---------------------------------------------------------------------------
+# public API
+
+
+def classify_determinism(survey: Survey, widths=DEFAULT_WIDTHS, S: int = 4,
+                         batch: int = 64) -> tuple[str, list[str]]:
+    """Classify a survey's fold algebra: :data:`BITWISE` (reduction-order
+    free — the epoch/transport identity contracts can hold bitwise),
+    :data:`ORDER_SENSITIVE` (flagged primitives in a fold hook, with the
+    reasons returned), or :data:`UNKNOWN` (the fold is not abstractly
+    traceable — data-dependent shapes or Python coercion of traced values).
+
+    Pure abstract tracing; nothing executes on any device."""
+    reasons: list[str] = []
+    try:
+        spec = _resolve(survey, widths)
+        state = jax.eval_shape(survey.init)
+        tri = TriangleBatch.abstract(spec, batch)
+        _scan_jaxpr("update", lambda st, tr: survey.update(st, tr),
+                    (state, tri), reasons)
+        stacked = _stack(state, S)
+        merged = jax.eval_shape(survey.merge, stacked)
+        _scan_jaxpr("merge", survey.merge, (stacked,), reasons)
+        _scan_jaxpr("merge_epochs", survey.merge_epochs, (merged, merged),
+                    reasons)
+    except Exception as e:  # noqa: BLE001 — tracing failures ARE the finding
+        return UNKNOWN, [
+            f"fold is not abstractly traceable ({type(e).__name__}: {e}) — "
+            "data-dependent shapes or Python int()/float()/bool() coercion "
+            "of traced values in a fold hook"]
+    return (ORDER_SENSITIVE if reasons else BITWISE), reasons
+
+
+def check_fold_contract(survey: Survey, widths=DEFAULT_WIDTHS, S: int = 4,
+                        batch: int = 64,
+                        name: str | None = None) -> list[Violation]:
+    """Verify the epoch-merge algebra of one survey by abstract tracing.
+
+    Checks (each yields an actionable :class:`Violation` on failure):
+
+    * ``fold-carry-*`` — ``update`` is a stable scan carry (structure,
+      shape, dtype all preserved);
+    * ``merge-*`` — ``merge(stacked)`` keeps ``init()``'s pytree structure
+      and dtypes (shapes may change: concat-style merges are legal);
+    * ``epoch-merge-*`` — ``merge_epochs(prev, delta)`` is closed over the
+      merged-state algebra (structure + dtypes stable under accumulation),
+      so K epochs feed back without drift.
+    """
+    who = name or type(survey).__name__
+    v: list[Violation] = []
+
+    def bad(code: str, msg: str) -> None:
+        v.append(Violation("contracts", code, who, msg))
+
+    try:
+        spec = _resolve(survey, widths)
+    except Exception as e:
+        bad("meta-spec-unresolvable",
+            f"meta_spec does not resolve against storage widths {widths}: "
+            f"{e}")
+        return v
+    try:
+        state = jax.eval_shape(survey.init)
+    except Exception as e:
+        bad("init-not-traceable",
+            f"init() is not abstractly traceable: {type(e).__name__}: {e}")
+        return v
+    s_def, s_sig = _tree_sig(state)
+    paths = _leaf_paths(state)
+
+    # --- update: stable scan carry ---
+    try:
+        out = jax.eval_shape(lambda st, tr: survey.update(st, tr), state,
+                             TriangleBatch.abstract(spec, batch))
+        o_def, o_sig = _tree_sig(out)
+        if o_def != s_def:
+            bad("fold-carry-structure",
+                f"update() returns pytree structure {o_def} but the state is "
+                f"{s_def}; the fold is scanned, so the carry structure must "
+                "be preserved")
+        else:
+            for p, (ss, sd), (os_, od) in zip(paths, s_sig, o_sig):
+                if od != sd:
+                    bad("fold-carry-dtype-drift",
+                        f"update() drifts state leaf {p} from {sd} to {od}; "
+                        "a scan carry must keep its dtype — cast back "
+                        "explicitly inside update()")
+                elif os_ != ss:
+                    bad("fold-carry-shape-drift",
+                        f"update() drifts state leaf {p} from shape {ss} to "
+                        f"{os_}; a scan carry must keep static shapes — use "
+                        "fixed-capacity buffers")
+    except Exception as e:
+        bad("fold-not-traceable",
+            f"update() is not abstractly traceable: {type(e).__name__}: {e} "
+            "— data-dependent shapes or Python coercion of traced values")
+        return v
+
+    # --- merge: cross-shard reduce keeps the state algebra ---
+    try:
+        merged = jax.eval_shape(survey.merge, _stack(state, S))
+        m_def, m_sig = _tree_sig(merged)
+        if m_def != s_def:
+            bad("merge-structure",
+                f"merge(stacked) returns pytree structure {m_def} but init() "
+                f"builds {s_def}; finalize/merge_epochs consume the merged "
+                "state, so the structure must be preserved")
+        else:
+            for p, (_, sd), (_, md) in zip(paths, s_sig, m_sig):
+                if md != sd:
+                    bad("merge-dtype-drift",
+                        f"merge(stacked) drifts state leaf {p} from {sd} to "
+                        f"{md}; cross-shard reduction must not promote — "
+                        "cast back explicitly (watch np→jnp sum promotions)")
+    except Exception as e:
+        bad("merge-not-traceable",
+            f"merge() is not abstractly traceable: {type(e).__name__}: {e}")
+        return v
+
+    # --- merge_epochs: closed over the merged-state algebra ---
+    try:
+        acc = jax.eval_shape(survey.merge_epochs, merged, merged)
+        a_def, a_sig = _tree_sig(acc)
+        if a_def != m_def:
+            bad("epoch-merge-structure",
+                f"merge_epochs(prev, delta) returns pytree structure {a_def} "
+                f"but merged state is {m_def}; the accumulator feeds back as "
+                "prev_state, so the structure must be closed")
+        else:
+            for p, (_, md), (_, ad) in zip(_leaf_paths(merged), m_sig, a_sig):
+                if ad != md:
+                    bad("epoch-merge-dtype-drift",
+                        f"merge_epochs drifts state leaf {p} from {md} to "
+                        f"{ad}; after one epoch the accumulator no longer "
+                        "matches a one-shot run's dtype — the bitwise "
+                        "incremental==recompute identity is broken. Cast "
+                        "back explicitly in merge_epochs")
+            # closure: the accumulator must feed back as prev for epoch K+1
+            jax.eval_shape(survey.merge_epochs, acc, merged)
+    except Exception as e:
+        bad("epoch-merge-not-closed",
+            f"merge_epochs does not accept its own output as prev_state: "
+            f"{type(e).__name__}: {e}")
+    return v
+
+
+def builtin_surveys(n: int = 256) -> list[tuple[str, Survey]]:
+    """Every built-in survey (plus a representative bundle), instantiated
+    small — the matrix the CLI and CI gate verify."""
+    from repro.core.surveys import (ClosureTime, DegreeTriples, Enumerate,
+                                    LabelTripleSet, LocalVertexCount,
+                                    MaxEdgeLabelDist, SurveyBundle,
+                                    TopKWeightedTriangles, TriangleCount)
+    return [
+        ("TriangleCount", TriangleCount()),
+        ("LocalVertexCount", LocalVertexCount(n)),
+        ("ClosureTime", ClosureTime()),
+        ("MaxEdgeLabelDist", MaxEdgeLabelDist(n_labels=8)),
+        ("DegreeTriples", DegreeTriples(capacity=512)),
+        ("LabelTripleSet", LabelTripleSet(capacity=1024)),
+        ("Enumerate", Enumerate(capacity=64)),
+        ("TopKWeightedTriangles", TopKWeightedTriangles(k=8)),
+        ("SurveyBundle", SurveyBundle([TriangleCount(), ClosureTime(),
+                                       LabelTripleSet(capacity=512)])),
+    ]

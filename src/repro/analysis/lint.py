@@ -1,0 +1,268 @@
+"""AST lint pass (pass 3 of ``repro.analysis``): repo-wide determinism
+hygiene rules that hold by *convention* rather than by tracing.
+
+Four rules, each encoding an invariant the test suite relies on:
+
+``fold-python-coercion``
+    No Python ``int()``/``float()``/``bool()`` on values derived from a
+    fold hook's traced arguments inside a ``Survey`` subclass's
+    ``update``/``merge``/``merge_epochs`` — Python coercion forces
+    concretization, which either crashes under jit or silently bakes a
+    trace-time constant into the fold.
+
+``float-scatter-accumulator``
+    Inside ``src/repro/core``, every ``x.at[...].add(v)`` accumulator must
+    be provably integer (counter64 limbs, CountingSet counts): a float
+    scatter-add folds colliding indices in backend-defined order and
+    breaks every bitwise-identity contract.
+
+``provenance-direct-compare``
+    Provenance stamps (``sample_p``/``sample_seed``/``orient``/``epoch``/
+    ``is_delta``/``hub_theta``/``delta``) of two different objects are
+    only compared inside ``engine._check_provenance`` /
+    ``_check_sampling`` — the helpers that report *every* diverged field
+    with both values. Ad-hoc stamp comparisons scattered elsewhere rot as
+    stamps are added.
+
+``kernel-missing-oracle``
+    Every Pallas kernel directory under ``src/repro/kernels`` ships a
+    ``ref.py`` pure-jnp oracle sibling, so the kernel's bitwise tests have
+    a reference to diff against.
+
+Everything is :mod:`ast` on source text — no imports of the linted
+modules, no device, no tracing. The dtype-evidence heuristic resolves
+simple local ``name = ...`` assignments (depth-limited), which is exactly
+enough for the idioms this repo uses; when it cannot *prove* an integer
+accumulator it says so rather than staying silent.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.report import Violation
+
+FOLD_HOT = ("update", "merge", "merge_epochs")
+STAMPS = {"sample_p", "sample_seed", "orient", "epoch", "is_delta",
+          "hub_theta", "delta"}
+STAMP_HELPERS = {"_check_provenance", "_check_sampling"}
+INT_TOKENS = {"int8", "int16", "int32", "int64", "uint8", "uint16",
+              "uint32", "uint64", "bool_", "int", "bool"}
+FLOAT_TOKENS = {"float16", "float32", "float64", "bfloat16", "float"}
+
+
+def _names(node) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _base_name(b) -> str:
+    if isinstance(b, ast.Name):
+        return b.id
+    if isinstance(b, ast.Attribute):
+        return b.attr
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# rule 1: Python coercion of traced values in fold hot paths
+
+
+def _rule_fold_coercion(tree, filename: str, out: list[Violation]) -> None:
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        if not any("Survey" in _base_name(b) for b in cls.bases):
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, ast.FunctionDef) or fn.name not in FOLD_HOT:
+                continue
+            # taint: the traced arguments and everything assigned from them
+            tainted = {a.arg for a in fn.args.args[1:]}  # drop self
+            for _ in range(8):  # propagate to fixpoint (assignments chain)
+                grew = False
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Assign) \
+                            and _names(node.value) & tainted:
+                        for t in node.targets:
+                            new = _names(t) - tainted
+                            if new:
+                                tainted |= new
+                                grew = True
+                if not grew:
+                    break
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in ("int", "float", "bool")
+                        and node.args
+                        and _names(node.args[0]) & tainted):
+                    out.append(Violation(
+                        "lint", "fold-python-coercion",
+                        f"{filename}:{node.lineno}",
+                        f"{cls.name}.{fn.name} calls {node.func.id}() on a "
+                        "value derived from the traced fold arguments — "
+                        "Python coercion concretizes the tracer (crash "
+                        "under jit, or a baked-in trace-time constant). "
+                        "Use jnp casts/ops on the traced value instead"))
+
+
+# ---------------------------------------------------------------------------
+# rule 2: float scatter-add accumulators in core
+
+
+def _dtype_evidence(node, assigns: dict, depth: int = 3,
+                    seen: frozenset = frozenset()) -> set[str]:
+    """{'int'} / {'float'} / both / empty — dtype tokens reachable from
+    ``node``, resolving simple local name assignments up to ``depth``."""
+    ev: set[str] = set()
+    if node is None:
+        return ev
+    for n in ast.walk(node):
+        tok = None
+        if isinstance(n, ast.Attribute):
+            tok = n.attr
+        elif isinstance(n, ast.Name):
+            tok = n.id
+            if depth > 0 and tok in assigns and tok not in seen \
+                    and tok not in INT_TOKENS and tok not in FLOAT_TOKENS:
+                ev |= _dtype_evidence(assigns[tok], assigns, depth - 1,
+                                      seen | {tok})
+        if tok in INT_TOKENS:
+            ev.add("int")
+        elif tok in FLOAT_TOKENS:
+            ev.add("float")
+    return ev
+
+
+def _is_at_add(node) -> bool:
+    # x.at[...].add(v): Call(func=Attribute 'add' over Subscript over
+    # Attribute 'at')
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "add"
+            and isinstance(node.func.value, ast.Subscript)
+            and isinstance(node.func.value.value, ast.Attribute)
+            and node.func.value.value.attr == "at")
+
+
+def _rule_float_scatter(tree, filename: str, out: list[Violation]) -> None:
+    assigns = {t.id: node.value
+               for node in ast.walk(tree) if isinstance(node, ast.Assign)
+               for t in node.targets if isinstance(t, ast.Name)}
+    for node in ast.walk(tree):
+        if not _is_at_add(node) or not node.args:
+            continue
+        ev = _dtype_evidence(node.args[0], assigns)
+        if "float" in ev:
+            out.append(Violation(
+                "lint", "float-scatter-accumulator",
+                f"{filename}:{node.lineno}",
+                ".at[...].add() with a float operand — colliding indices "
+                "fold in backend-defined order, so the result is not "
+                "bitwise across transports/epochs. Accumulate into integer "
+                "limbs (counter64, CountingSet) and convert at finalize"))
+        elif "int" not in ev:
+            out.append(Violation(
+                "lint", "float-scatter-accumulator",
+                f"{filename}:{node.lineno}",
+                "cannot statically prove this .at[...].add() accumulator "
+                "is integer — make the dtype visible at the call site "
+                "(e.g. .astype(jnp.int32) on the operand) so the "
+                "order-insensitivity of the scatter is auditable"))
+
+
+# ---------------------------------------------------------------------------
+# rule 3: provenance stamps compared outside the helper
+
+
+def _stamp_bases(side) -> set[str]:
+    return {a.value.id for a in ast.walk(side)
+            if isinstance(a, ast.Attribute) and a.attr in STAMPS
+            and isinstance(a.value, ast.Name)}
+
+
+def _rule_stamp_compare(tree, filename: str, out: list[Violation]) -> None:
+    def visit(node, fstack):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fstack = fstack + [node.name]
+        if isinstance(node, ast.Compare) and not (set(fstack)
+                                                  & STAMP_HELPERS):
+            per_side = [_stamp_bases(s)
+                        for s in [node.left, *node.comparators]]
+            bases = set().union(*per_side)
+            if sum(bool(s) for s in per_side) >= 2 and len(bases) >= 2:
+                out.append(Violation(
+                    "lint", "provenance-direct-compare",
+                    f"{filename}:{node.lineno}",
+                    f"compares provenance stamps of {sorted(bases)} "
+                    "directly — stamps are cross-checked only via "
+                    "engine._check_provenance/_check_sampling, which "
+                    "report every diverged field with both values; ad-hoc "
+                    "comparisons silently miss newly added stamps"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, fstack)
+
+    visit(tree, [])
+
+
+# ---------------------------------------------------------------------------
+# rule 4: Pallas kernels ship a pure-jnp oracle
+
+
+def check_kernel_oracles(kernels_dir: Path) -> list[Violation]:
+    out: list[Violation] = []
+    for sub in sorted(p for p in Path(kernels_dir).iterdir() if p.is_dir()):
+        pys = [f for f in sorted(sub.glob("*.py")) if f.name != "ref.py"]
+        uses_pallas = any("pallas" in f.read_text(encoding="utf-8")
+                          for f in pys)
+        if uses_pallas and not (sub / "ref.py").exists():
+            out.append(Violation(
+                "lint", "kernel-missing-oracle", str(sub),
+                "Pallas kernel directory has no ref.py oracle — every "
+                "kernel needs a pure-jnp reference sibling so its bitwise "
+                "tests have something to diff against"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# drivers
+
+
+def lint_file(path: str | Path) -> list[Violation]:
+    """Lint one source file. Rule scopes are inferred from the path:
+    ``float-scatter-accumulator`` only applies under a ``core`` directory,
+    and the ``analysis`` package is exempt from
+    ``provenance-direct-compare`` (it *is* the verifier)."""
+    path = Path(path)
+    out: list[Violation] = []
+    try:
+        tree = ast.parse(path.read_text(encoding="utf-8"), filename=str(path))
+    except SyntaxError as e:
+        out.append(Violation("lint", "unparseable", f"{path}:{e.lineno}",
+                             f"file does not parse: {e.msg}"))
+        return out
+    name = str(path)
+    _rule_fold_coercion(tree, name, out)
+    if "core" in path.parts:
+        _rule_float_scatter(tree, name, out)
+    if "analysis" not in path.parts:
+        _rule_stamp_compare(tree, name, out)
+    return out
+
+
+def lint_repo(root: str | Path | None = None) -> list[Violation]:
+    """Lint every source file of the ``repro`` package (or any tree rooted
+    at ``root``), plus the kernel-oracle check."""
+    if root is None:
+        import repro
+        root = Path(next(iter(repro.__path__)))  # namespace-package safe
+    root = Path(root)
+    out: list[Violation] = []
+    for f in sorted(root.rglob("*.py")):
+        if "__pycache__" in f.parts:
+            continue
+        out += lint_file(f)
+    kernels = root / "kernels"
+    if kernels.is_dir():
+        out += check_kernel_oracles(kernels)
+    return out

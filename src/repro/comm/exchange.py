@@ -55,10 +55,26 @@ class Exchange:
     ``lane_of``    [S, out_cap] rank of slot j within its (s, d) block
     ``cap_of``     [S, out_cap] block capacity of slot j (0 on padding)
     ``block_off``  [S, S] offset of dest-d's block in s's send buffer
+    ``in_off``     [S_dest, S_src] offset of src-s's block in d's recv buffer
     ``recv_ok``    [S, in_cap] bool or None — valid recv slots (None = all)
+
+    The static maps fully determine the wire routing, so correctness
+    properties (send-map injectivity, recv coverage, cap conservation) are
+    *provable on host* without moving a byte — that is exactly what
+    :mod:`repro.analysis.conservation` does at plan time.
     """
 
     name: str
+    S: int
+    out_cap: int
+    in_cap: int
+    caps: np.ndarray
+    dest_of: np.ndarray
+    lane_of: np.ndarray
+    cap_of: np.ndarray
+    block_off: np.ndarray
+    in_off: np.ndarray
+    recv_ok: np.ndarray | None
 
     def scatter(self, tree):
         """Route send buffers to owners: ``[S, out_cap, ...] → [S, in_cap, ...]``."""
@@ -97,6 +113,10 @@ class DenseExchange(Exchange):
         self.cap_of = np.full((S, S * cap), cap, np.int32)
         self.block_off = np.broadcast_to(
             np.arange(S, dtype=np.int32) * cap, (S, S))
+        # swapaxes delivery: src s's block lands at offset s·cap of every
+        # dest's recv buffer
+        self.in_off = np.broadcast_to(
+            np.arange(S, dtype=np.int64) * cap, (S, S))
         self.recv_ok = None
 
     def scatter(self, tree):
@@ -139,6 +159,7 @@ class RaggedExchange(Exchange):
         # recv-side offsets: dest d's buffer concatenates blocks over src s
         in_off = np.zeros((S, S), np.int64)        # [dest, src]
         in_off[:, 1:] = np.cumsum(caps.T[:, :-1], 1)
+        self.in_off = in_off
 
         self.dest_of = np.full((S, self.out_cap), S, np.int32)
         self.lane_of = np.zeros((S, self.out_cap), np.int32)

@@ -147,6 +147,16 @@ class EngineConfig:
     #                               static window overflowed and triangles
     #                               were dropped (stats carry exact=False
     #                               either way)
+    determinism: str = "bitwise"  # fold-algebra verdict for the survey the
+    #                               plan was built for, stamped by
+    #                               pushpull.plan_engine from the static
+    #                               verifier (repro.analysis.contracts):
+    #                               "bitwise" | "order_sensitive" |
+    #                               "unknown". survey_delta warns when an
+    #                               order-sensitive survey is accumulated
+    #                               through merge_epochs — the incremental
+    #                               == recompute identity then holds only
+    #                               up to float reduction order
 
 
 def _constrain(x, cfg: EngineConfig, *trailing):
@@ -932,40 +942,51 @@ def _finalize_run(survey: Survey, cfg: EngineConfig, merged, stats):
     return result, stats
 
 
-def _check_sampling(gr: ShardedDODGr, cfg: EngineConfig):
+def _check_sampling(gr: ShardedDODGr, cfg: EngineConfig) -> list[str]:
     g_key = (gr.sample_p, gr.sample_seed)
     c_key = (cfg.sample_p, cfg.sample_seed)
     if gr.sample_p == cfg.sample_p == 1.0:
-        return  # unsampled on both sides; seeds are irrelevant
+        return []  # unsampled on both sides; seeds are irrelevant
     if g_key != c_key:
-        raise ValueError(
+        return [
             f"sampling mismatch: graph ingested with (p, seed)={g_key} but "
-            f"plan built with {c_key}; pass the same sample_p/sample_seed to "
-            "shard_dodgr and plan_engine")
+            f"plan built with {c_key}; pass the same sample_p/sample_seed "
+            "to shard_dodgr and plan_engine"]
+    return []
 
 
 def _check_provenance(gr: ShardedDODGr, cfg: EngineConfig):
     """Graph stamps and plan stamps must agree — sampling, orientation key,
-    hub threshold, and epoch/delta state — or results are silently wrong."""
-    _check_sampling(gr, cfg)
+    hub threshold, and epoch/delta state — or results are silently wrong.
+
+    Collects *every* diverged field and reports both the graph-side and
+    plan-side value for each, so one error names the complete repair
+    instead of failing one stamp at a time."""
+    diffs = _check_sampling(gr, cfg)
     if gr.is_delta != cfg.delta:
         what = "a delta frontier" if gr.is_delta else "a full snapshot"
         want = "survey_delta with a plan_delta plan" if gr.is_delta \
             else "survey_push_only/survey_push_pull with a plan_engine plan"
-        raise ValueError(f"graph is {what}; run it through {want}")
+        diffs.append(
+            f"delta mismatch: graph is {what} (is_delta={gr.is_delta}) but "
+            f"the plan stamps delta={cfg.delta}; run it through {want}")
     if gr.orient != cfg.orient:
-        raise ValueError(
+        diffs.append(
             f"orientation mismatch: graph sharded with orient={gr.orient!r} "
             f"but plan built with orient={cfg.orient!r}")
     if gr.hub_theta != cfg.hub_theta:
-        raise ValueError(
+        diffs.append(
             f"hub mismatch: graph sharded with hub_theta={gr.hub_theta} but "
             f"plan built with hub_theta={cfg.hub_theta}; pass the planner's "
             "θ (cfg.hub_theta) to shard_dodgr/shard_delta")
-    if cfg.delta and gr.epoch != cfg.epoch:
-        raise ValueError(
+    if cfg.delta and gr.is_delta and gr.epoch != cfg.epoch:
+        diffs.append(
             f"epoch mismatch: frontier is epoch {gr.epoch} but the plan was "
             f"built for epoch {cfg.epoch}; re-plan each appended batch")
+    if diffs:
+        raise ValueError(
+            "graph/plan provenance diverged on "
+            f"{len(diffs)} field(s):\n  - " + "\n  - ".join(diffs))
 
 
 def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
@@ -1011,6 +1032,14 @@ def survey_delta(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
         raise ValueError("DOULION sampling is not supported on delta epochs; "
                          "sample the full snapshot instead")
     _check_provenance(gr, cfg)
+    if prev_state is not None and cfg.determinism == "order_sensitive":
+        warnings.warn(
+            "survey_delta: the plan's survey was classified "
+            "order_sensitive by the static verifier (repro.analysis) — "
+            "accumulating it through merge_epochs holds the incremental == "
+            "recompute identity only up to float reduction order, not "
+            "bitwise. Run `python -m repro.analysis` for the reasons.",
+            RuntimeWarning, stacklevel=2)
     fn = jax.jit(make_survey_fn(survey, cfg))
     merged, stats = fn(gr)
     stats = jax.tree.map(float, jax.device_get(stats))

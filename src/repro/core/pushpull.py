@@ -38,6 +38,7 @@ Two further levers on top of the push-vs-pull split (ISSUE 4):
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass
 
 import numpy as np
@@ -109,6 +110,12 @@ class VolumeReport:
     wire_push_bytes: int = 0         # over all push supersteps
     wire_req_bytes: int = 0          # over all pull supersteps
     wire_reply_bytes: int = 0        # padded reply rows, all pull supersteps
+    # --- measured stream maxima (what the caps × steps must cover; the
+    # static verifier turns runtime truncation warnings into plan-time
+    # errors by checking coverage against exactly these) ---
+    push_stream_max: int = 0         # heaviest (src, dest) pushed stream
+    pull_groups_max: int = 0         # heaviest (src, dest) pulled groups
+    hub_stream_max: int = 0          # heaviest per-shard hub wedge stream
 
     @property
     def reduction(self) -> float:
@@ -126,6 +133,30 @@ class VolumeReport:
         plus the one-time hub-table replication."""
         return (self.wire_push_bytes + self.wire_req_bytes
                 + self.wire_reply_bytes + self.hub_table_bytes)
+
+
+# determinism verdicts are pure functions of (survey instance, storage
+# widths); classification traces three fold hooks, so cache it per survey
+# — re-planning every epoch must not re-trace
+_det_cache: "weakref.WeakKeyDictionary[Survey, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _determinism_of(survey, widths: tuple) -> str:
+    """Fold-algebra verdict for the plan's survey (see
+    :func:`repro.analysis.contracts.classify_determinism`), cached per
+    (survey, storage widths). A plan built from a bare MetaSpec (or none)
+    has no fold to classify — stamped ``"unknown"``."""
+    if not isinstance(survey, Survey):
+        return "unknown"
+    from repro.analysis.contracts import classify_determinism
+    try:
+        per_widths = _det_cache.setdefault(survey, {})
+    except TypeError:  # non-weakref-able survey object: classify uncached
+        per_widths = {}
+    if widths not in per_widths:
+        per_widths[widths] = classify_determinism(survey, widths)[0]
+    return per_widths[widths]
 
 
 def _resolve_plan_spec(survey, g: HostGraph) -> MetaSpec:
@@ -396,6 +427,7 @@ def plan_engine(
     pull_edge_cap = 1
     pull_caps = None
     pull_row_cap = 0
+    pull_groups_max = 0
     n_pulled_groups = int(pull_group.sum())
     if mode == "pushpull" and n_pulled_groups:
         g_s = (uq // np.int64(g.n))[pull_group]
@@ -406,6 +438,7 @@ def plan_engine(
         # dominant reply volume) shrinks to the heaviest survivor
         pull_row_cap = max(1, int(d_plus[g_q].max()))
         per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
+        pull_groups_max = int(per_sd.max())
         if pull_q_cap is None:
             pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
                                               pull_row_cap)
@@ -489,6 +522,9 @@ def plan_engine(
         wire_push_bytes=wire_push_bytes,
         wire_req_bytes=wire_req_bytes,
         wire_reply_bytes=wire_reply_bytes,
+        push_stream_max=max_push_stream,
+        pull_groups_max=pull_groups_max,
+        hub_stream_max=int(hub_per_shard.max()) if hub_resolved else 0,
     )
     cfg = EngineConfig(
         mode=mode,
@@ -514,6 +550,8 @@ def plan_engine(
         n_hub_steps=n_hub_steps,
         hub_wedge_cap=hub_wedge_cap,
         on_overflow=on_overflow,
+        determinism=_determinism_of(
+            survey, (g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)),
     )
     return cfg, report
 

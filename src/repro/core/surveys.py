@@ -130,7 +130,7 @@ class MetaSpec:
             kw[f.name] = r(getattr(self, f.name), width, f.name)
         return MetaSpec(**kw)
 
-    def lane_counts(self) -> tuple[int, int, int, int, int, int]:
+    def lane_counts(self) -> tuple[int, ...]:
         """Total (int + float) declared lanes per item, in the order
         :func:`repro.core.dodgr.meta_widths` expects:
         ``(n_vp, n_vq, n_vr, n_epq, n_epr, n_eqr)``. Resolved specs only."""
@@ -220,6 +220,39 @@ class TriangleBatch:
     e_pr_f: jax.Array
     e_qr_f: jax.Array
     valid: jax.Array      # [B] bool
+
+    @classmethod
+    def abstract(cls, spec: "MetaSpec", batch: int = 64) -> "TriangleBatch":
+        """Abstract (shape/dtype only) batch at ``spec``'s projected widths.
+
+        Every field is a :class:`jax.ShapeDtypeStruct`, so a survey's
+        ``update`` can be traced (``jax.eval_shape`` / ``jax.make_jaxpr``)
+        against exactly the batch the engine would hand it — with **zero
+        device execution**. ``spec`` must be resolved
+        (:meth:`MetaSpec.resolve`). This is the entry point of the static
+        fold-contract analysis (:mod:`repro.analysis.contracts`)."""
+        sds = jax.ShapeDtypeStruct
+
+        def item(lanes, dtype):
+            if lanes is None:
+                raise ValueError("TriangleBatch.abstract() needs a resolved "
+                                 "MetaSpec; call .resolve(dvi, dvf, dei, "
+                                 "def_) first")
+            return sds((batch, eff_width(lanes)), dtype)
+
+        i32, f32 = jnp.int32, jnp.float32
+        return cls(
+            p=sds((batch,), i32), q=sds((batch,), i32), r=sds((batch,), i32),
+            vp_i=item(spec.vp_i, i32), vq_i=item(spec.vq_i, i32),
+            vr_i=item(spec.vr_i, i32),
+            vp_f=item(spec.vp_f, f32), vq_f=item(spec.vq_f, f32),
+            vr_f=item(spec.vr_f, f32),
+            e_pq_i=item(spec.e_pq_i, i32), e_pr_i=item(spec.e_pr_i, i32),
+            e_qr_i=item(spec.e_qr_i, i32),
+            e_pq_f=item(spec.e_pq_f, f32), e_pr_f=item(spec.e_pr_f, f32),
+            e_qr_f=item(spec.e_qr_f, f32),
+            valid=sds((batch,), jnp.bool_),
+        )
 
 
 jax.tree_util.register_dataclass(

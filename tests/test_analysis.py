@@ -1,0 +1,363 @@
+"""Static verifier (repro.analysis): every seeded contract violation must
+be caught with an actionable message naming the invariant, every built-in
+survey × transport must come back clean, and the determinism verdict must
+flow from the classifier through the plan stamp into the delta engine's
+warning — all with zero device execution in the analysis passes themselves
+(abstract tracing + host numpy + AST)."""
+import dataclasses
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.analysis import (BITWISE, ORDER_SENSITIVE, UNKNOWN,
+                            builtin_surveys, check_exchange,
+                            check_fold_contract, check_plan,
+                            classify_determinism, format_report, lint_file,
+                            lint_repo)
+from repro.analysis.lint import check_kernel_oracles
+from repro.comm.exchange import DenseExchange, RaggedExchange
+from repro.core.dodgr import shard_delta, shard_dodgr
+from repro.core.engine import survey_delta, survey_push_only
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.surveys import MetaSpec, Survey, TriangleCount
+from repro.graphs import generators
+from repro.graphs.csr import HostGraph
+from repro.graphs.csr import MetaSpec as GraphSpec
+
+
+def _labeled_graph(n=80, m=500, seed=9):
+    g = generators.temporal_social(n, m, seed=seed)
+    spec = GraphSpec(v_int=g.spec.v_int + ("degree",), v_float=(),
+                     e_int=("elabel",), e_float=g.spec.e_float)
+    deg = g.degrees().astype(np.int32)
+    vmeta_i = np.concatenate([g.vmeta_i, deg[:, None]], 1)
+    elab = (np.arange(g.m, dtype=np.int32) % 7)[:, None]
+    return HostGraph(g.n, g.src, g.dst, spec, vmeta_i, None, elab, g.emeta_f)
+
+
+def _codes(violations):
+    return {v.code for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# violation fixtures: each fold-contract breach must be caught
+
+
+class OrderSensitiveFloat(Survey):
+    """Float scatter-add fold — the classic order-sensitive accumulator."""
+
+    meta_spec = MetaSpec.edges(f=(0,))
+
+    def init(self):
+        return jnp.zeros((16,), jnp.float32)
+
+    def update(self, state, tri):
+        w = jnp.where(tri.valid, tri.e_pq_f[:, 0], 0.0)
+        return state.at[tri.p % 16].add(w)
+
+    def merge(self, stacked):
+        return stacked.sum(0)
+
+
+class EpochDtypeDrift(Survey):
+    """merge_epochs silently promotes the accumulator to float32."""
+
+    meta_spec = MetaSpec.none()
+
+    def init(self):
+        return jnp.zeros((), jnp.int32)
+
+    def update(self, state, tri):
+        return state + tri.valid.sum().astype(jnp.int32)
+
+    def merge(self, stacked):
+        return stacked.sum(0).astype(jnp.int32)
+
+    def merge_epochs(self, prev, delta):
+        return (prev + delta).astype(jnp.float32)
+
+
+class CarryShapeDrift(Survey):
+    """update grows its own state — not a legal scan carry."""
+
+    meta_spec = MetaSpec.none()
+
+    def init(self):
+        return jnp.zeros((4,), jnp.int32)
+
+    def update(self, state, tri):
+        return jnp.concatenate([state, tri.valid.sum()[None].astype(jnp.int32)])
+
+    def merge(self, stacked):
+        return stacked.sum(0)
+
+
+class CarryStructureDrift(Survey):
+    """update returns a different pytree structure than init."""
+
+    meta_spec = MetaSpec.none()
+
+    def init(self):
+        return {"n": jnp.zeros((), jnp.int32)}
+
+    def update(self, state, tri):
+        return (state["n"] + tri.valid.sum().astype(jnp.int32),)
+
+    def merge(self, stacked):
+        return stacked
+
+
+def test_fixture_order_sensitive_float_fold_is_caught():
+    verdict, reasons = classify_determinism(OrderSensitiveFloat())
+    assert verdict == ORDER_SENSITIVE
+    assert any("float scatter-add" in r for r in reasons)
+    # the algebra itself is fine — only the determinism verdict fails
+    assert check_fold_contract(OrderSensitiveFloat()) == []
+
+
+def test_fixture_epoch_dtype_drift_is_caught():
+    v = check_fold_contract(EpochDtypeDrift())
+    assert "epoch-merge-dtype-drift" in _codes(v)
+    [drift] = [x for x in v if x.code == "epoch-merge-dtype-drift"]
+    assert "int32" in drift.message and "float32" in drift.message
+    assert "incremental==recompute" in drift.message
+
+
+def test_fixture_carry_shape_drift_is_caught():
+    assert "fold-carry-shape-drift" in _codes(
+        check_fold_contract(CarryShapeDrift()))
+
+
+def test_fixture_carry_structure_drift_is_caught():
+    assert "fold-carry-structure" in _codes(
+        check_fold_contract(CarryStructureDrift()))
+
+
+def test_builtin_surveys_all_pass_contracts_and_are_bitwise():
+    for name, s in builtin_surveys():
+        assert check_fold_contract(s, name=name) == [], name
+        verdict, reasons = classify_determinism(s)
+        assert verdict == BITWISE, (name, reasons)
+
+
+# ---------------------------------------------------------------------------
+# conservation: transports prove clean, corrupted maps are rejected
+
+
+@pytest.mark.parametrize("exch", [
+    DenseExchange(3, 5),
+    RaggedExchange(np.array([[0, 3, 1], [2, 0, 0], [4, 1, 2]])),
+])
+def test_exchange_maps_prove_clean(exch):
+    assert check_exchange(exch) == []
+
+
+def test_aliased_block_offsets_are_caught():
+    ex = RaggedExchange(np.array([[2, 2], [1, 3]]))
+    ex.block_off = ex.block_off.copy()
+    ex.block_off[0, 1] = ex.block_off[0, 0]  # two dest blocks collide
+    v = check_exchange(ex, "push")
+    assert "aliased-send-offsets" in _codes(v)
+    [alias] = [x for x in v if x.code == "aliased-send-offsets"][:1]
+    assert "collide" in alias.message
+
+
+def test_recv_ok_undercoverage_is_caught():
+    ex = RaggedExchange(np.array([[2, 2], [1, 3]]))
+    ex.recv_ok = ex.recv_ok.copy()
+    ex.recv_ok[0, 0] = False  # mask out a slot a sender feeds
+    assert "recv-ok-missing" in _codes(check_exchange(ex))
+
+
+def test_recv_ok_phantom_slot_is_caught():
+    ex = RaggedExchange(np.array([[2, 0], [1, 1]]))  # dest 1 gets 1 slot,
+    ex.recv_ok = ex.recv_ok.copy()                   # in_cap is 3 (dest 0)
+    ex.recv_ok[1, :] = True  # claims padding slots no sender feeds
+    assert "recv-ok-phantom" in _codes(check_exchange(ex))
+
+
+def test_cap_conservation_breach_is_caught():
+    ex = DenseExchange(2, 4)
+    ex.caps = ex.caps.copy()
+    ex.caps[0, 1] += 1  # stamped total no longer matches the send map
+    assert "send-cap-conservation" in _codes(check_exchange(ex))
+
+
+def test_plan_report_reconciles_for_builtins_and_transports():
+    g = _labeled_graph()
+    deg = g.degrees()
+    theta = max(1, int(np.partition(deg, -6)[-6]))
+    cells = [dict(transport="dense"), dict(transport="ragged"),
+             dict(transport="ragged", hub_theta=theta)]
+    for name, s in builtin_surveys(n=g.n):
+        for cell in cells:
+            cfg, rep = plan_engine(g, 4, s, mode="pushpull", push_cap=64,
+                                   **cell)
+            assert check_plan(cfg, rep) == [], (name, cell)
+
+
+def test_hand_edited_plan_truncation_is_a_plan_time_error():
+    g = _labeled_graph()
+    cfg, rep = plan_engine(g, 2, TriangleCount(), mode="pushpull",
+                           push_cap=64)
+    # halving the superstep count would truncate the heaviest stream —
+    # what used to warn at runtime must now fail the plan audit
+    bad = dataclasses.replace(cfg, n_push_steps=max(1, cfg.n_push_steps
+                                                    // 2 - 1))
+    codes = _codes(check_plan(bad, rep))
+    assert {"plan-truncation-push", "wire-bytes-push"} & codes
+    trunc = [v for v in check_plan(bad, rep)
+             if v.code == "plan-truncation-push"]
+    assert trunc and "truncated at runtime" in trunc[0].message
+    # and byte/width tampering is caught word-for-word
+    bad_w = dataclasses.replace(cfg, meta_widths=(cfg.meta_widths[0] + 1,
+                                                  *cfg.meta_widths[1:]))
+    assert "width-mismatch" in _codes(check_plan(bad_w, rep))
+
+
+def test_delta_plan_reconciles():
+    g = _labeled_graph()
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    k = len(order) // 2
+    base = HostGraph(g.n, g.src[order[:k]], g.dst[order[:k]], g.spec,
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[order[:k]],
+                     g.emeta_f[order[:k]])
+    dg = base.append_edges(g.src[order[k:]], g.dst[order[k:]],
+                           emeta_i=g.emeta_i[order[k:]],
+                           emeta_f=g.emeta_f[order[k:]])
+    for transport in ("dense", "ragged"):
+        cfg, rep = plan_delta(dg, 2, TriangleCount(), transport=transport)
+        assert check_plan(cfg, rep) == []
+
+
+# ---------------------------------------------------------------------------
+# determinism verdict: classifier → plan stamp → delta-engine warning
+
+
+def test_plan_stamps_determinism_verdict():
+    g = _labeled_graph()
+    cfg, _ = plan_engine(g, 2, TriangleCount(), mode="push")
+    assert cfg.determinism == BITWISE
+    cfg, _ = plan_engine(g, 2, OrderSensitiveFloat(), mode="push")
+    assert cfg.determinism == ORDER_SENSITIVE
+    # a bare MetaSpec has no fold to classify
+    cfg, _ = plan_engine(g, 2, MetaSpec.full(), mode="push")
+    assert cfg.determinism == UNKNOWN
+
+
+def test_survey_delta_warns_on_order_sensitive_accumulation():
+    g = _labeled_graph()
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    k = len(order) // 2
+    base = HostGraph(g.n, g.src[order[:k]], g.dst[order[:k]], g.spec,
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[order[:k]],
+                     g.emeta_f[order[:k]])
+    dg = base.append_edges(g.src[order[k:]], g.dst[order[k:]],
+                           emeta_i=g.emeta_i[order[k:]],
+                           emeta_f=g.emeta_f[order[k:]])
+    gr, _ = shard_delta(dg, 2)
+    survey = TriangleCount()
+    cfg, _ = plan_delta(dg, 2, survey, mode="push", push_cap=64)
+    state, _ = survey_delta(gr, survey, cfg)          # prev=None: no warn
+    cfg_os = dataclasses.replace(cfg, determinism="order_sensitive")
+    with pytest.warns(RuntimeWarning, match="order_sensitive"):
+        survey_delta(gr, survey, cfg_os, prev_state=state)
+
+
+# ---------------------------------------------------------------------------
+# provenance errors report every diverged field with both values
+
+
+def test_provenance_error_reports_all_diverged_fields():
+    g = _labeled_graph()
+    gr, _ = shard_dodgr(g, 2, orient="degree")
+    cfg, _ = plan_engine(g, 2, TriangleCount(), mode="push",
+                         orient="stable", hub_theta=3)
+    with pytest.raises(ValueError) as ei:
+        survey_push_only(gr, TriangleCount(), cfg)
+    msg = str(ei.value)
+    # both divergences, each with the graph-side AND plan-side value
+    assert "2 field(s)" in msg
+    assert "orientation mismatch" in msg
+    assert "'degree'" in msg and "'stable'" in msg
+    assert "hub mismatch" in msg
+    assert "hub_theta=0" in msg and "hub_theta=3" in msg
+
+
+# ---------------------------------------------------------------------------
+# lint pass
+
+
+def test_lint_catches_each_seeded_violation(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    f = core / "bad.py"
+    f.write_text(textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        class BadSurvey(Survey):
+            def update(self, state, tri):
+                w = tri.e_pq_f[:, 0]
+                n = int(w.sum())
+                return state
+
+        def accum(hist, idx, w):
+            wf = w.astype(jnp.float32)
+            return hist.at[idx].add(wf)
+
+        def check(gr, cfg):
+            if gr.epoch != cfg.epoch:
+                raise ValueError("boom")
+        """))
+    codes = _codes(lint_file(f))
+    assert codes == {"fold-python-coercion", "float-scatter-accumulator",
+                     "provenance-direct-compare"}
+
+
+def test_lint_int_evidence_resolves_local_assignments(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    f = core / "ok.py"
+    f.write_text(textwrap.dedent("""\
+        import jax.numpy as jnp
+
+        def accum(hist, idx, valid):
+            amt = jnp.where(valid, jnp.ones((4,), jnp.int32), 0)
+            return hist.at[idx].add(amt)
+        """))
+    assert lint_file(f) == []
+
+
+def test_kernel_oracle_rule(tmp_path):
+    k = tmp_path / "kernels"
+    (k / "mykern").mkdir(parents=True)
+    (k / "mykern" / "ops.py").write_text(
+        "from jax.experimental import pallas as pl\n")
+    v = check_kernel_oracles(k)
+    assert _codes(v) == {"kernel-missing-oracle"}
+    (k / "mykern" / "ref.py").write_text("def ref(): pass\n")
+    assert check_kernel_oracles(k) == []
+
+
+def test_repo_lint_is_clean():
+    assert lint_repo() == []
+
+
+# ---------------------------------------------------------------------------
+# CLI gate
+
+
+def test_cli_green_over_builtins_and_transports(capsys):
+    from repro.analysis.__main__ import main
+    assert main([]) == 0
+    out = capsys.readouterr().out
+    assert "OK: no violations" in out
+
+
+def test_report_formatting():
+    from repro.analysis.report import Violation
+    v = Violation("lint", "some-code", "here", "msg")
+    assert "[lint:some-code] here: msg" == str(v)
+    assert "1 violation(s)" in format_report([v])

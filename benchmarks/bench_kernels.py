@@ -13,10 +13,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hist.ops import hist_add
-from repro.kernels.hist.ref import hist_add_ref
+from repro.kernels.hist.ops import hist_add, hist_max
+from repro.kernels.hist.ref import hist_add_ref, hist_max_ref
+from repro.kernels.intersect.ops import intersect
 from repro.kernels.intersect.ref import intersect_ref
 from repro.kernels.wedge_check.ref import lower_bound_ref
+from repro.kernels.wedge_intersect import wedge_intersect
 
 
 def _t(fn, *args, reps=5):
@@ -27,6 +29,25 @@ def _t(fn, *args, reps=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / reps * 1e6
+
+
+def wedge_intersect_traffic_model(E: int, B: int, L: int,
+                                  bb: int = 128) -> dict:
+    """Candidate-key HBM word traffic of one intersect pass, both lowerings.
+
+    ``split`` (historic two-kernel composition): the engine gathers the 3
+    key words of every candidate from the [E] suffix-key arrays (B·L reads
+    each), materializes them as [B, L] staging arrays (B·L writes each),
+    and the intersect kernel streams them back in (B·L reads each) —
+    ``9·B·L`` words. ``fused`` (kernels/wedge_intersect): no staging; the
+    3 full key arrays stream into VMEM once per batch tile
+    (``3·E·ceil(B/bb)`` words) and candidate addressing is VMEM-local.
+    Row/ln/output traffic is identical on both paths and excluded.
+    tests/test_kernels.py asserts fused < split at the engine's planned
+    shapes; the crossover is E > 3·L·bb (tiny shards with huge windows).
+    """
+    ceil_tiles = -(-B // bb)
+    return dict(split_words=9 * B * L, fused_words=3 * E * ceil_tiles)
 
 
 def run(quick=True):
@@ -67,4 +88,50 @@ def run(quick=True):
                  dict(updates_per_s=round(nB / us * 1e6))))
     us = _t(lambda s, a: hist_add(s, a, cap, interpret=True), slots, amt)
     rows.append((f"hist_pallas_interp/B{nB}/cap{cap}", us, dict(note="interpret")))
+
+    # scatter-max twin (CountingSet packed-table updates)
+    nB2, cap2, W = (1 << 12, 1 << 10, 4) if quick else (1 << 16, 1 << 13, 8)
+    slots2 = jnp.asarray(rng.integers(0, cap2, nB2).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, 1 << 31, (nB2, W)).astype(np.uint32))
+    us = _t(jax.jit(lambda s, r: hist_max_ref(s, r, cap2)), slots2, vals)
+    rows.append((f"hist_max_ref/B{nB2}/cap{cap2}/W{W}", us,
+                 dict(updates_per_s=round(nB2 / us * 1e6))))
+    us = _t(lambda s, r: hist_max(s, r, cap2, interpret=True), slots2, vals)
+    rows.append((f"hist_max_pallas_interp/B{nB2}/cap{cap2}/W{W}", us,
+                 dict(note="interpret")))
+
+    # fused wedge-check/intersect vs the two-kernel composition. Wall-time
+    # on the CPU interpret path is secondary; the derived columns carry the
+    # HBM traffic model the fusion is judged on (and tested against).
+    E3, B3, L3 = (1 << 12, 256, 32) if quick else (1 << 15, 1024, 64)
+    kd = jnp.asarray(np.sort(rng.integers(0, 64, E3)).astype(np.int32))
+    kh = jnp.asarray(rng.integers(0, 1 << 16, E3).astype(np.uint32))
+    ki = jnp.asarray(np.arange(E3, dtype=np.int32))
+    e3 = jnp.asarray(rng.integers(0, E3, B3).astype(np.int32))
+    rd3 = jnp.asarray(np.sort(rng.integers(0, 64, (B3, L3)), 1).astype(np.int32))
+    rh3 = jnp.asarray(rng.integers(0, 1 << 16, (B3, L3)).astype(np.uint32))
+    ri3 = jnp.asarray(rng.integers(0, 1 << 20, (B3, L3)).astype(np.int32))
+    ln3 = jnp.asarray(rng.integers(0, L3, B3).astype(np.int32))
+
+    def split_path(kd, kh, ki, e, rd, rh, ri, ln):
+        k = jnp.arange(L3, dtype=jnp.int32)[None, :]
+        idx = jnp.clip(e[:, None] + 1 + k, 0, E3 - 1)
+        cd, ch, ci = kd[idx], kh[idx], ki[idx]
+        pos = intersect(rd, rh, ri, ln, cd, ch, ci, interpret=True)
+        return pos, ci
+
+    def fused_path(kd, kh, ki, e, rd, rh, ri, ln):
+        return wedge_intersect(kd, kh, ki, e, rd, rh, ri, ln, L=L3,
+                               interpret=True)
+
+    a3 = (kd, kh, ki, e3, rd3, rh3, ri3, ln3)
+    model = wedge_intersect_traffic_model(E3, B3, L3)
+    us_s = _t(split_path, *a3)
+    rows.append((f"wedge_intersect_split/E{E3}/B{B3}/L{L3}", us_s,
+                 dict(model_words=model["split_words"])))
+    us_f = _t(fused_path, *a3)
+    rows.append((f"wedge_intersect_fused/E{E3}/B{B3}/L{L3}", us_f,
+                 dict(model_words=model["fused_words"],
+                      model_ratio=round(model["split_words"]
+                                        / model["fused_words"], 2))))
     return rows

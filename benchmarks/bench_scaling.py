@@ -1,9 +1,16 @@
 """Paper Fig. 4/5 analog: strong/weak scaling of the survey engine over
 logical shard counts (single CPU device executes all shards, so the
 figure of merit is work-rate |W₊|/(S·t) shape, matching Fig. 5's y-axis,
-and the aggregation-opportunity trend, not wall-clock speedup)."""
+and the aggregation-opportunity trend, not wall-clock speedup).
+
+The ``mesh/S*`` cells run the real-collective transport over S forced
+host devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before jax initializes — cells emit a skipped marker otherwise) and
+report the compiled HLO's measured collective payload next to the plan's,
+via ``roofline.reconcile_collectives``."""
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from repro.core.dodgr import shard_dodgr
@@ -43,4 +50,51 @@ def run(quick=True):
         w = st["wedges_pushed"] + st["wedges_pulled"]
         rows.append((f"weak/S{S}/scale{base_scale+i}", dt * 1e6, dict(
             work_rate=round(w / S / max(dt, 1e-9)))))
+
+    rows.extend(_mesh_rows(quick))
+    return rows
+
+
+def _mesh_rows(quick=True):
+    """Real-collective cells: the same strong-scaling graph lowered through
+    shard_map over S forced host devices, with the compiled HLO's collective
+    payload reconciled against the plan (byte-exact, or the row is flagged).
+    """
+    import jax
+
+    from repro.core.engine import make_survey_fn
+    from repro.launch.mesh import make_shard_mesh
+    from repro.roofline import reconcile_collectives
+
+    rows = []
+    g = generators.rmat(9 if quick else 11, 16, seed=5)
+    for S in (2, 4, 8):
+        if jax.device_count() < S:
+            rows.append((f"mesh/S{S}", 0.0, dict(
+                skipped=f"needs {S} devices; run with XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count={S}")))
+            continue
+        mesh = make_shard_mesh(S)
+        cfg, rep = plan_engine(g, S, TriangleCount(), mode="pushpull",
+                               transport="mesh", push_cap=512, pull_q_cap=16)
+        gr, _ = shard_dodgr(g, S=S)
+        fn = jax.jit(make_survey_fn(TriangleCount(), cfg, mesh=mesh))
+        res, st = jax.block_until_ready(fn(gr))  # warm + compile
+        t0 = time.time()
+        res, st = jax.block_until_ready(fn(gr))
+        dt = time.time() - t0
+        # reconcile on the unrolled (cost-analysis mode) compile
+        cfg_u = dataclasses.replace(cfg, unroll_steps=True)
+        comp = jax.jit(
+            make_survey_fn(TriangleCount(), cfg_u, mesh=mesh)).lower(
+            gr).compile()
+        rec = reconcile_collectives(comp, cfg_u, S=S, volume=rep)
+        w = st["wedges_pushed"] + st["wedges_pulled"]
+        rows.append((f"mesh/S{S}", dt * 1e6, dict(
+            wedges=int(w),
+            collective_B_per_dev=rec["measured_bytes"],
+            planned_B_per_dev=rec["planned_bytes"],
+            reconciled=bool(rec["ok"]),
+            padding_B=rec["padding_bytes"],
+            wire_MB=round(rep.wire_total_bytes / 1e6, 3))))
     return rows

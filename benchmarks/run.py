@@ -2,11 +2,16 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only a,b]
                                             [--json BENCH_<suite>.json]
+                                            [--compare BENCH_baseline.json]
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the same rows as machine-readable JSON (one object per row plus a
 run header) — the perf-trajectory artifact CI uploads on every PR, so
 regressions in exchanged bytes / wall-clock are diffable across commits.
+``--compare BASELINE.json`` joins this run's rows against a previously
+written JSON (the checked-in ``BENCH_baseline.json``) by (suite, name)
+and prints old/new wall-times with the ratio; rows present on only one
+side are listed, never an error — suites grow across PRs.
 Roofline terms for the production mesh come from the dry-run artifacts
 (launch/dryrun.py + roofline/report.py), not from CPU wall-times.
 """
@@ -19,12 +24,36 @@ import sys
 import time
 
 
+def compare(records: list[dict], baseline_path: str) -> None:
+    """Join rows against a baseline JSON by (suite, name) and print the
+    wall-time ratio per shared row; one-sided rows are noted, not fatal."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    old = {(r["suite"], r["name"]): r for r in base.get("rows", [])}
+    new = {(r["suite"], r["name"]): r for r in records}
+    print(f"# compare vs {baseline_path} "
+          f"(baseline {base.get('timestamp', '?')})")
+    print("name,base_us,new_us,ratio")
+    for key in sorted(new):
+        if key not in old:
+            print(f"{key[1]},,{new[key]['us_per_call']:.1f},new-row")
+            continue
+        b, n = old[key]["us_per_call"], new[key]["us_per_call"]
+        ratio = f"{n / b:.2f}" if b else "n/a"
+        print(f"{key[1]},{b:.1f},{n:.1f},{ratio}")
+    for key in sorted(set(old) - set(new)):
+        print(f"{key[1]},{old[key]['us_per_call']:.1f},,baseline-only")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path")
+    ap.add_argument("--compare", default="",
+                    help="baseline JSON (a prior --json output) to diff "
+                         "this run's rows against by (suite, name)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -74,6 +103,8 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
+    if args.compare:
+        compare(records, args.compare)
     if failed:
         sys.exit(1)
 

@@ -62,6 +62,7 @@ def run_plans(surveys, S: int = 4) -> list[Violation]:
         dict(transport="dense"),
         dict(transport="ragged"),
         dict(transport="ragged", hub_theta=theta),
+        dict(transport="mesh"),  # host-side audit; maps match ragged
     ]
     out: list[Violation] = []
     for name, s in surveys:
@@ -116,7 +117,7 @@ def main(argv=None) -> int:
     if "plans" in selected:
         v = run_plans(surveys, S=args.S)
         print(f"plans: {len(surveys)} surveys × {{dense, ragged, "
-              f"ragged+hub}} × {{pushpull, push}} + delta checked, "
+              f"ragged+hub, mesh}} × {{pushpull, push}} + delta checked, "
               f"{len(v)} violation(s)")
         violations += v
     if "lint" in selected:

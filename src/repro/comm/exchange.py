@@ -38,7 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-TRANSPORTS = ("dense", "ragged")
+TRANSPORTS = ("dense", "ragged", "mesh")
 
 
 class Exchange:
@@ -212,14 +212,19 @@ class RaggedExchange(Exchange):
         return jax.tree.map(one, tree)
 
 
-def make_exchange(transport: str, S: int, cap: int,
-                  caps=None) -> Exchange:
+def make_exchange(transport: str, S: int, cap: int, caps=None,
+                  axis_name: str = "shards") -> Exchange:
     """Build the transport for one exchange lane.
 
     ``dense`` ignores ``caps`` and uses the uniform ``cap``. ``ragged``
     requires ``caps`` — the planner's per-(src, dest) per-round capacities
     (an [S, S] array or the nested-tuple form stamped into
-    ``EngineConfig``)."""
+    ``EngineConfig``). ``mesh`` is the real-collective transport
+    (:mod:`repro.comm.mesh_exchange`): same static maps as ragged (falling
+    back to a uniform ``cap`` grid when no per-pair caps are planned), with
+    ``scatter``/``gather`` executing under ``shard_map`` over
+    ``axis_name``; built host-side it still answers every static-map query,
+    so the conservation checker audits it like any other transport."""
     if transport == "dense":
         return DenseExchange(S, cap)
     if transport == "ragged":
@@ -228,4 +233,10 @@ def make_exchange(transport: str, S: int, cap: int,
                 "ragged transport needs per-(shard, dest) capacities — build "
                 "the plan with pushpull.plan_engine(..., transport='ragged')")
         return RaggedExchange(np.asarray(caps, np.int64).reshape(S, S))
+    if transport == "mesh":
+        from repro.comm.mesh_exchange import MeshExchange
+        if caps is None:
+            caps = np.full((S, S), max(1, int(cap)), np.int64)
+        return MeshExchange(np.asarray(caps, np.int64).reshape(S, S),
+                            axis_name=axis_name)
     raise ValueError(f"transport must be one of {TRANSPORTS}, got {transport!r}")

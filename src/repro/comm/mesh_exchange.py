@@ -1,0 +1,224 @@
+"""Real-mesh transport: the third :class:`~repro.comm.exchange.Exchange`.
+
+The ``dense`` and ``ragged`` transports *model* the exchange on a stacked
+``[S, ...]`` layout — every "shard" is a vmap lane on one device and no byte
+ever crosses a device boundary. :class:`MeshExchange` executes the same
+static routing with **real collectives** under ``shard_map`` over a 1-D
+device mesh (``launch.make_shard_mesh``), one shard per device:
+
+``uniform caps`` (a dense plan)
+    one literal ``lax.all_to_all``: the send buffer *is* the ``[S, cap]``
+    block grid, split over destinations and concatenated over sources, so
+    the delivered layout is exactly the dense/ragged-uniform recv layout
+    (``in_off[d, s] = s·cap``).
+
+``ragged caps`` (a ragged/mesh plan)
+    per-(src, dest) capped segments routed through ``S-1`` *rotation
+    rounds*: round ``k`` ships block ``(s, (s+k) mod S)`` from every source
+    at once via ``lax.ppermute`` with the rotation permutation, padded to
+    the round's worst pair ``ck = max_s caps[s, (s+k) mod S]`` (an
+    all-to-all decomposed into its diagonals — every device sends and
+    receives exactly one segment per round, the classic ring schedule).
+    Round 0 is the shard's own diagonal: a local copy, no collective.
+    On-device compaction re-places each delivered segment at its static
+    ``in_off`` offset with an out-of-bounds-dropping scatter, so the recv
+    buffer is *identical* to the stacked ragged layout and everything
+    downstream (recv_ok masking, reply routing, conservation proofs) is
+    shared with :class:`~repro.comm.exchange.RaggedExchange` — which this
+    class subclasses precisely so the static maps (and the host-side
+    conservation checker over them) are the same object.
+
+Wire accounting: ``round_slots()`` stays the *logical* Σ caps (the
+conservation invariant); :meth:`wire_round_slots` is the *physical*
+per-device payload that appears in the compiled HLO's collectives —
+``S·cap`` for the uniform all-to-all (the resident self-chunk is part of
+the op), ``Σ_{k≥1} ck`` for the rotation rounds (the self-diagonal never
+leaves the device). ``roofline.reconcile_collectives`` asserts the HLO
+against exactly these numbers (docs/mesh.md).
+
+Booleans are shipped as int32 so every wire slot is the planner's 4-byte
+word — the measured collective bytes then reconcile with ``VolumeReport``
+word-for-word (dense exactly; ragged up to the documented round padding).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.exchange import Exchange, RaggedExchange
+
+
+def _take_row(a, idx):
+    """Row ``idx`` (traced) of a host map, as a device array."""
+    return jax.lax.dynamic_index_in_dim(jnp.asarray(a), idx, 0,
+                                        keepdims=False)
+
+
+class MeshExchange(RaggedExchange):
+    """Collective transport over a 1-D device mesh (one shard per device).
+
+    Static maps are inherited from :class:`RaggedExchange` — a uniform
+    ``caps`` grid reproduces the dense block layout bit-for-bit — so the
+    host-side conservation proofs apply unchanged. ``scatter``/``gather``
+    must run *inside* ``shard_map`` over ``axis_name``; the engine calls
+    them through :meth:`local_view`, which slices the per-source rows of
+    the static maps for the executing device."""
+
+    name = "mesh"
+
+    def __init__(self, caps: np.ndarray, axis_name: str = "shards"):
+        super().__init__(caps)
+        self.axis_name = axis_name
+        S = self.S
+        caps = np.asarray(self.caps, np.int64)
+        self.uniform = bool((caps == caps[0, 0]).all() and caps[0, 0] >= 1)
+        # rotation rounds: round k ships diagonal (s → (s+k) mod S), padded
+        # to the diagonal's worst pair
+        self._rounds = []
+        for k in range(S):
+            ck = int(max(caps[s, (s + k) % S] for s in range(S)))
+            if ck == 0:
+                continue
+            send = np.zeros((S, ck), np.int32)
+            recv = np.full((S, ck), self.in_cap, np.int32)   # in_cap = drop
+            gsend = np.zeros((S, ck), np.int32)
+            grecv = np.full((S, ck), self.out_cap, np.int32)
+            for s in range(S):
+                d = (s + k) % S
+                c = int(caps[s, d])
+                if c:
+                    lane = np.arange(c)
+                    # forward: src s reads its (s, d) block ...
+                    send[s, :c] = self.block_off[s, d] + lane
+                    # ... and the reply lands back in the same block
+                    grecv[s, :c] = self.block_off[s, d] + lane
+                    # dest d compacts the segment at its static offset ...
+                    recv[d, :c] = self.in_off[d, s] + lane
+                    # ... and reads the reply segment back out of it
+                    gsend[d, :c] = self.in_off[d, s] + lane
+            self._rounds.append(dict(
+                k=k, ck=ck, send=send, recv=recv, gsend=gsend, grecv=grecv,
+                fwd=[(s, (s + k) % S) for s in range(S)],
+                bwd=[(d, (d - k) % S) for d in range(S)],
+            ))
+
+    # -- physical wire accounting -------------------------------------------
+
+    def wire_round_slots(self) -> int:
+        """Slots that cross the collective fabric per *device* per round —
+        the payload of the HLO collectives (uniform: the whole all-to-all
+        buffer including the self chunk; ragged: every rotation round's
+        padded segment, self-diagonal excluded)."""
+        if self.uniform:
+            return self.out_cap
+        return sum(r["ck"] for r in self._rounds if r["k"] != 0)
+
+    # -- device-local collective routing (inside shard_map) -----------------
+
+    def _route(self, x, fn):
+        """Apply ``fn`` to one leaf, shipping bools as 4-byte words."""
+        if x.dtype == jnp.bool_:
+            return fn(x.astype(jnp.int32)).astype(jnp.bool_)
+        return fn(x)
+
+    def _scatter_local(self, idx, tree):
+        S, axis = self.S, self.axis_name
+        cap = self.out_cap // S if self.uniform else 0
+
+        def one(x):
+            def go(x):
+                if self.uniform:
+                    y = x.reshape((1, S, cap) + x.shape[2:])
+                    y = jax.lax.all_to_all(y, axis, split_axis=1,
+                                           concat_axis=0)   # [S, 1, cap, ...]
+                    y = jnp.swapaxes(y, 0, 1)
+                    return y.reshape((1, S * cap) + y.shape[3:])
+                out = jnp.zeros((1, self.in_cap) + x.shape[2:], x.dtype)
+                for r in self._rounds:
+                    seg = jnp.take(x, _take_row(r["send"], idx), axis=1)
+                    if r["k"] != 0:
+                        seg = jax.lax.ppermute(seg, axis, r["fwd"])
+                    out = out.at[0, _take_row(r["recv"], idx)].set(
+                        seg[0], mode="drop")
+                return out
+
+            return self._route(x, go)
+
+        return jax.tree.map(one, tree)
+
+    def _gather_local(self, idx, tree):
+        S, axis = self.S, self.axis_name
+        cap = self.out_cap // S if self.uniform else 0
+
+        def one(x):
+            def go(x):
+                if self.uniform:
+                    # all_to_all on the (src, dest) block grid is an
+                    # involution — the forward op routes replies back
+                    y = x.reshape((1, S, cap) + x.shape[2:])
+                    y = jax.lax.all_to_all(y, axis, split_axis=1,
+                                           concat_axis=0)
+                    y = jnp.swapaxes(y, 0, 1)
+                    return y.reshape((1, S * cap) + y.shape[3:])
+                out = jnp.zeros((1, self.out_cap) + x.shape[2:], x.dtype)
+                for r in self._rounds:
+                    seg = jnp.take(x, _take_row(r["gsend"], idx), axis=1)
+                    if r["k"] != 0:
+                        seg = jax.lax.ppermute(seg, axis, r["bwd"])
+                    out = out.at[0, _take_row(r["grecv"], idx)].set(
+                        seg[0], mode="drop")
+                return out
+
+            return self._route(x, go)
+
+        return jax.tree.map(one, tree)
+
+    def local_view(self, idx) -> "LocalMeshView":
+        """The per-device :class:`Exchange` the engine's primitives see
+        inside ``shard_map``: static maps sliced to the executing device's
+        row (leading axis 1, mirroring the local graph leaves), scatter and
+        gather bound to the real collectives."""
+        return LocalMeshView(self, idx)
+
+
+class LocalMeshView(Exchange):
+    """Device-local window onto a :class:`MeshExchange` (inside shard_map).
+
+    Send-side maps carry a leading axis of 1 so the engine's per-shard
+    ``vmap`` treats this device as a one-shard stack; ``caps``/``block_off``
+    keep the full ``[1, S]`` destination row because slot→dest routing needs
+    every pair's capacity. ``in_off`` stays global ``[S, S]`` (host-side,
+    used only by the conservation checker)."""
+
+    def __init__(self, parent: MeshExchange, idx):
+        self.parent = parent
+        self.idx = idx
+        self.name = parent.name
+        self.S = parent.S
+        self.out_cap = parent.out_cap
+        self.in_cap = parent.in_cap
+        self.in_off = parent.in_off
+        row = lambda a: _take_row(a, idx)[None]
+        self.dest_of = row(parent.dest_of)
+        self.lane_of = row(parent.lane_of)
+        self.cap_of = row(parent.cap_of)
+        self.caps = row(np.asarray(parent.caps, np.int32))
+        self.block_off = row(parent.block_off)
+        self.recv_ok = (None if parent.recv_ok is None
+                        else row(parent.recv_ok))
+
+    def scatter(self, tree):
+        return self.parent._scatter_local(self.idx, tree)
+
+    def gather(self, tree):
+        return self.parent._gather_local(self.idx, tree)
+
+    def round_slots(self) -> int:
+        return self.parent.round_slots()
+
+    def apply_recv_ok(self, ok):
+        if self.recv_ok is None:
+            return ok
+        return ok & self.recv_ok

@@ -53,13 +53,14 @@ class CountingSet:
     min — all three recorded by one scatter-max (the all-zeros init is
     the identity for every column).
 
-    ``backend`` routes the count scatter-add: ``"scatter"`` is the XLA
-    ``.at[].add`` path, ``"pallas"`` the tiled one-hot-reduction kernel
-    (``kernels/hist``) — the TPU-native scatter idiom, bitwise-identical to
-    the scatter path (integer adds). ``"auto"`` (default) picks Pallas on a
+    ``backend`` routes *both* table scatters: ``"scatter"`` is the XLA
+    ``.at[].add`` / ``.at[].max`` path, ``"pallas"`` the tiled
+    one-hot-reduction kernels (``kernels/hist``: ``hist_add`` for counts,
+    ``hist_max`` for the packed key/check-hash rows) — the TPU-native
+    scatter idiom, bitwise-identical to the scatter path (integer adds;
+    idempotent commutative max). ``"auto"`` (default) picks Pallas on a
     real TPU backend and falls back to scatter elsewhere, so CPU test runs
-    are unchanged. The key/check-hash scatter-max stays on the XLA path in
-    every backend."""
+    are unchanged."""
 
     capacity: int
     n_key_cols: int
@@ -102,21 +103,27 @@ class CountingSet:
         slot = (_fold_keys(keys, jnp.uint32(0)) % jnp.uint32(cap)).astype(jnp.int32)
         chk = _fold_keys(keys, _CHK_SEED)
         amt = jnp.where(valid, jnp.asarray(amount, jnp.int32), 0)
-        if self._use_pallas():
-            from repro.kernels.hist.ops import hist_add
-
-            # OOB slots are dropped by the kernel — mask invalid to -1
-            count = state["count"] + hist_add(
-                jnp.where(valid, slot, -1), amt, cap,
-                cap_tile=self._cap_tile(), interpret=self._interpret())
-        else:
-            count = state["count"].at[slot].add(amt)
         # keys recorded by max (a no-op when all writers agree; collisions
         # are flagged by the check hash, so an arbitrary winner is fine)
         keys_u = keys.astype(jnp.uint32) ^ jnp.uint32(_SIGN)
         row = jnp.concatenate([keys_u, chk[:, None], (~chk)[:, None]], axis=-1)
         row = jnp.where(valid[:, None], row, jnp.uint32(0))
-        packed = state["packed"].at[slot].max(row)
+        if self._use_pallas():
+            from repro.kernels.hist.ops import hist_add, hist_max
+
+            # OOB slots are dropped by the kernels — mask invalid to -1
+            mslot = jnp.where(valid, slot, -1)
+            count = state["count"] + hist_add(
+                mslot, amt, cap,
+                cap_tile=self._cap_tile(), interpret=self._interpret())
+            # max-merge of a fresh scattered table: max is idempotent and
+            # commutative, so this equals the in-place .at[].max bit for bit
+            packed = jnp.maximum(state["packed"], hist_max(
+                mslot, row, cap,
+                cap_tile=self._cap_tile(), interpret=self._interpret()))
+        else:
+            count = state["count"].at[slot].add(amt)
+            packed = state["packed"].at[slot].max(row)
         return dict(count=count, packed=packed)
 
     def merge(self, stacked):

@@ -144,20 +144,44 @@ class ShardedDODGr:
         return e < self.row_ptr[:, -1:]
 
 
+# field split used both by the pytree registration and by the mesh lowering:
+# PER_SHARD fields carry the leading [S, ...] shard axis (split one shard per
+# device under shard_map); REPLICATED fields are the hub tables (no shard
+# axis — every device holds the full read-only copy, see class docstring)
+PER_SHARD_FIELDS = (
+    "row_ptr", "edge_src", "nbr", "nbr_d", "nbr_h", "nbr_dplus",
+    "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
+    "vdeg", "dplus", "nbr_new", "delta_gen", "nbr_hub",
+)
+REPLICATED_FIELDS = (
+    "hub_row_len", "hub_nbr", "hub_nbr_d", "hub_nbr_h", "hub_nbr_new",
+    "hub_eqr_i", "hub_eqr_f", "hub_tmeta_i", "hub_tmeta_f",
+    "hub_vmeta_i", "hub_vmeta_f",
+)
+META_FIELDS = ("S", "n_global", "n_loc", "e_cap", "d_plus_max",
+               "sample_p", "sample_seed", "orient", "epoch", "is_delta",
+               "hub_theta", "n_hubs", "hub_len")
+
 jax.tree_util.register_dataclass(
     ShardedDODGr,
-    data_fields=[
-        "row_ptr", "edge_src", "nbr", "nbr_d", "nbr_h", "nbr_dplus",
-        "emeta_i", "emeta_f", "tmeta_i", "tmeta_f", "vmeta_i", "vmeta_f",
-        "vdeg", "dplus", "nbr_new", "delta_gen",
-        "nbr_hub", "hub_row_len", "hub_nbr", "hub_nbr_d", "hub_nbr_h",
-        "hub_nbr_new", "hub_eqr_i", "hub_eqr_f", "hub_tmeta_i", "hub_tmeta_f",
-        "hub_vmeta_i", "hub_vmeta_f",
-    ],
-    meta_fields=["S", "n_global", "n_loc", "e_cap", "d_plus_max",
-                 "sample_p", "sample_seed", "orient", "epoch", "is_delta",
-                 "hub_theta", "n_hubs", "hub_len"],
+    data_fields=list(PER_SHARD_FIELDS) + list(REPLICATED_FIELDS),
+    meta_fields=list(META_FIELDS),
 )
+
+
+def mesh_specs(gr: ShardedDODGr, axis_name: str):
+    """A ShardedDODGr-shaped pytree of ``PartitionSpec`` for ``shard_map``:
+    per-shard arrays split over ``axis_name`` (one shard per device), hub
+    tables replicated. The static meta fields ride along unchanged, so the
+    result is a valid ``in_specs`` entry for the graph argument."""
+    from jax.sharding import PartitionSpec as P
+
+    kw = {f: getattr(gr, f) for f in META_FIELDS}
+    for f in PER_SHARD_FIELDS:
+        kw[f] = P(axis_name)
+    for f in REPLICATED_FIELDS:
+        kw[f] = P()
+    return ShardedDODGr(**kw)
 
 
 @dataclass(frozen=True)

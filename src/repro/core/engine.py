@@ -103,6 +103,13 @@ class EngineConfig:
     unroll_steps: bool = False    # unroll superstep scans (cost-analysis mode)
     use_pallas: bool = False      # route search/intersect through Pallas kernels
     pallas_interpret: bool = True  # interpret mode (CPU container validation)
+    pull_kernel: str = "auto"     # pull-phase Pallas kernel choice (only read
+    #                               when use_pallas): "auto"/"fused" runs the
+    #                               one-residency kernels/wedge_intersect
+    #                               (candidate keys gathered in VMEM);
+    #                               "split" keeps the historic two-launch
+    #                               gather + kernels/intersect composition.
+    #                               All three are bitwise-identical
     shard_axis: str | None = None  # mesh axis name for sharding constraints
     sample_p: float = 1.0         # DOULION edge-keep probability the graph was
     #                               sparsified with (host-side); < 1 debiases
@@ -250,8 +257,9 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, exch: Exchange, spec: MetaSpec,
 
     Metadata travels in wire form: only the lanes ``spec`` declares for
     meta(p), meta(pq), meta(pr); unread items ship zero-width. In delta mode
-    the entry additionally carries the wedge edges' newness bits so the
-    owner can settle the ≥1-new-edge test at closure."""
+    the entry additionally carries the wedge edges' newness bits — packed
+    into the one extra wire word the planner accounts (``w_push + 1``) — so
+    the owner can settle the ≥1-new-edge test at closure."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
     vp_i = project_lanes(gr.vmeta_i, spec.vp_i)
     vp_f = project_lanes(gr.vmeta_f, spec.vp_f)
@@ -286,8 +294,8 @@ def _gen_push_queries(gr: ShardedDODGr, st, t, exch: Exchange, spec: MetaSpec,
             ok=in_stream,
         )
         if delta:
-            out["pq_new"] = nbr_new[e]
-            out["pr_new"] = nbr_new[r_pos]
+            out["new2"] = (nbr_new[e].astype(jnp.int32)
+                           | (nbr_new[r_pos].astype(jnp.int32) << 1))
         return out
 
     return jax.vmap(per_shard)(
@@ -327,10 +335,15 @@ def _answer_push_queries(gr: ShardedDODGr, qr, cfg: EngineConfig,
             pos = _lower_bound(nbr_d, nbr_h, nbr, lo, hi, q["rd"], q["rh"],
                                q["r"], n_steps)
         pos_c = jnp.clip(pos, 0, e_cap - 1)
-        found = q["ok"] & (pos < hi) & (nbr[pos_c] == q["r"])
+        # the p >= 0 test is a no-op (every ok slot carries a real vertex
+        # id) but keeps the planned p word live on the wire for surveys
+        # whose fold never reads it — the planner accounts all six base
+        # words, and the mesh HLO reconciliation holds them to it
+        found = q["ok"] & (pos < hi) & (nbr[pos_c] == q["r"]) & (q["p"] >= 0)
         if cfg.delta:
             # fold only the three new-triangle classes: ≥1 of pq/pr/qr new
-            found &= q["pq_new"] | q["pr_new"] | nbr_new[pos_c]
+            # (pq_new | pr_new ≡ packed wire word ≠ 0)
+            found &= (q["new2"] != 0) | nbr_new[pos_c]
         return TriangleBatch(
             p=q["p"], q=q["q"], r=q["r"],
             vp_i=expand_lanes(q["vp_i"], spec.vp_i),
@@ -551,7 +564,8 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
     dest_of = jnp.asarray(exch.dest_of)
     lane_of = jnp.asarray(exch.lane_of)
     cap_of = jnp.asarray(exch.cap_of)
-    pcap_d = jnp.asarray(np.asarray(exch.caps, np.int32))   # [S, S]
+    # jnp (not np) coercion: a mesh local view hands traced map rows
+    pcap_d = jnp.asarray(exch.caps, jnp.int32)              # [S, S]
     boff = jnp.asarray(exch.block_off)                      # [S, S]
 
     # --- requester: build q-requests, flat [S, out_cap] ---
@@ -589,7 +603,7 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
             r_ti=vr_i[slots] * mask[..., None].astype(jnp.int32),
             r_tf=vr_f[slots] * mask[..., None],
             vq_i=vq_i[lq], vq_f=vq_f[lq],
-            ln=ln,
+            ln=ln, ok=ok,
         )
         if cfg.delta:
             out["r_new"] = mask & nbr_new[slots]
@@ -614,7 +628,9 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
     )
 
     # --- requester: intersect local suffixes against pulled rows ---
-    if cfg.use_pallas:
+    if cfg.use_pallas and cfg.pull_kernel in ("auto", "fused"):
+        from repro.kernels.wedge_intersect import ops as wi_ops
+    elif cfg.use_pallas:
         from repro.kernels.intersect import ops as is_ops
 
     def intersect(qrank2, qbase, qcount, pulled_end, dest_start2, ord2, pull,
@@ -649,9 +665,6 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
         k = jnp.arange(L, dtype=jnp.int32)
         r_pos = jnp.clip(e[..., None] + 1 + k[None, None, :], 0, e_cap - 1)
         cand_ok = ok_e[..., None] & (e[..., None] + 1 + k[None, None, :] < row_end[..., None])
-        cd = nbr_d[r_pos]
-        ch = nbr_h[r_pos]
-        ci = nbr[r_pos]
 
         # pulled row for each edge slot: [S, ecap, Lr]
         def pick(x):
@@ -660,7 +673,21 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
         rn, rd_, rh_ = pick(rp["r_nbr"]), pick(rp["r_d"]), pick(rp["r_h"])
         ln = pick(rp["ln"])
 
-        if cfg.use_pallas:
+        if cfg.use_pallas and cfg.pull_kernel in ("auto", "fused"):
+            # fused wedge-addressing + intersection: the candidate keys are
+            # gathered from the VMEM-resident suffix arrays *inside* the
+            # kernel, so the [B, L] cd/ch staging arrays never materialize
+            # and the key arrays are read in one residency
+            pos, ci = wi_ops.wedge_intersect(
+                nbr_d, nbr_h, nbr, e.reshape(-1),
+                rd_.reshape(-1, Lr), rh_.reshape(-1, Lr), rn.reshape(-1, Lr),
+                ln.reshape(-1), L=L, interpret=cfg.pallas_interpret)
+            pos = pos.reshape(S, ecap, L)
+            ci = ci.reshape(S, ecap, L)
+        elif cfg.use_pallas:
+            cd = nbr_d[r_pos]
+            ch = nbr_h[r_pos]
+            ci = nbr[r_pos]
             # the kernel co-blocks rows and candidates at one width: pad the
             # Lr-wide reply rows back to L with the same sentinels the owner
             # writes, reproducing the historic inputs bit for bit (padding
@@ -678,6 +705,10 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
                 ci.reshape(-1, L), interpret=cfg.pallas_interpret,
             ).reshape(S, ecap, L)
         else:
+            cd = nbr_d[r_pos]
+            ch = nbr_h[r_pos]
+            ci = nbr[r_pos]
+
             def lb(rowd, rowh, rowi, ln_1, qd, qh, qi):
                 lo = jnp.zeros_like(qi)
                 hi = jnp.broadcast_to(ln_1, qi.shape)
@@ -686,7 +717,12 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
             pos = jax.vmap(jax.vmap(lb))(rd_, rh_, rn, ln, cd, ch, ci)
 
         pos_c = jnp.clip(pos, 0, Lr - 1)
-        hit = cand_ok & (pos < ln[..., None]) & (jnp.take_along_axis(rn, pos_c, -1) == ci)
+        # the reply header's ok word (the owner's view of request validity)
+        # rides back with the rows; AND-ing it in is a no-op on every slot
+        # the requester's own maps admit, and keeps the planned header word
+        # live on the wire
+        hit = (cand_ok & pick(rp["ok"])[..., None] & (pos < ln[..., None])
+               & (jnp.take_along_axis(rn, pos_c, -1) == ci))
         if cfg.delta:
             qr_new = jnp.take_along_axis(pick(rp["r_new"]), pos_c, -1)
             hit &= (nbr_new[e][..., None] | nbr_new[r_pos] | qr_new)
@@ -730,157 +766,241 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
 # top-level survey functions
 
 
-def make_survey_fn(survey: Survey, cfg: EngineConfig):
-    """Build the jittable global survey function ``gr -> (merged_state, stats)``."""
+# static per-step wire-words stats: every device accumulates the identical
+# value, so the mesh path keeps one copy instead of summing over devices
+_WIRE_STAT_KEYS = ("wire_push_words", "wire_req_words", "wire_reply_words")
 
-    def run(gr: ShardedDODGr):
-        S = gr.S
-        spec = resolve_survey_spec(survey, gr, cfg)
-        state = jax.tree.map(lambda x: jnp.repeat(x[None], S, 0), survey.init())
 
-        # routing tables live across every superstep: pin them to the shard
-        # axis or the partitioner replicates the [S, e_cap] masks per device
-        # (measured: 2×36 GB/device on the rmat32 cell; EXPERIMENTS §Perf)
-        pin = lambda tree: jax.tree.map(lambda a: _constrain(a, cfg), tree)
+def _survey_body(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
+                 spec: MetaSpec, push_exch: Exchange,
+                 pull_exch: Exchange | None):
+    """The superstep pipeline, shared verbatim by both lowerings: on the
+    stacked path ``gr`` carries all ``S`` shards ([S, ...] leaves, host
+    transports); under ``shard_map`` it is one device's shard ([1, ...]
+    leaves, a :class:`~repro.comm.mesh_exchange.LocalMeshView` per lane).
+    Returns the *unmerged* per-shard state stack and per-call stats."""
+    S_ax = gr.row_ptr.shape[0]    # leading shard axis: S stacked, 1 on mesh
+    state = jax.tree.map(lambda x: jnp.repeat(x[None], S_ax, 0),
+                         survey.init())
 
-        # planner-stamped widths win so host plan and device decisions
-        # agree even if the plan was built for a different spec
-        mw = cfg.meta_widths
-        if mw is None:
-            mw = meta_widths(*spec.lane_counts())
-            if cfg.delta:   # newness bits on the wire (see plan_engine)
-                mw = (mw[0] + 1, mw[1] + 1, mw[2], mw[3])
-        w_push, w_row, w_hdr, w_req = mw
+    # routing tables live across every superstep: pin them to the shard
+    # axis or the partitioner replicates the [S, e_cap] masks per device
+    # (measured: 2×36 GB/device on the rmat32 cell; EXPERIMENTS §Perf)
+    pin = lambda tree: jax.tree.map(lambda a: _constrain(a, cfg), tree)
 
-        hub_on = cfg.n_hub_steps > 0 and gr.n_hubs > 0
-        is_hub = (gr.nbr_hub >= 0) if hub_on else None
-        gen = gr.delta_gen if cfg.delta else None
-        push_exch = _push_exchange(cfg, S)
+    # planner-stamped widths win so host plan and device decisions
+    # agree even if the plan was built for a different spec
+    mw = cfg.meta_widths
+    if mw is None:
+        mw = meta_widths(*spec.lane_counts())
+        if cfg.delta:   # newness bits on the wire (see plan_engine)
+            mw = (mw[0] + 1, mw[1] + 1, mw[2], mw[3])
+    w_push, w_row, w_hdr, w_req = mw
 
-        dropped = jnp.zeros((), jnp.float32)
-        push_caps_j = jnp.asarray(np.asarray(push_exch.caps, np.int32))
-        if cfg.mode == "pushpull":
-            st0 = pin(_stream_setup(gr))
-            sfx = st0["suffix"]
-            if cfg.delta:
-                # pull decisions weigh only wedges the delta mask generates,
-                # mirroring the planner's masked vol(s, q)
-                sfx = sfx * gen
-            if hub_on:
-                # hub-centered groups carry zero pullable volume
-                sfx = sfx * (~is_hub)
-            st0 = dict(st0, suffix=sfx)
-            ps = pin(_pull_setup(gr, st0, cfg, mw, hub_mask=is_hub))
-            push_mask = ~ps["pull"]
-            if cfg.delta:
-                push_mask = push_mask & gen
-            if hub_on:
-                push_mask = push_mask & ~is_hub
-            st = pin(_stream_setup(gr, weight_mask=push_mask))
-            pull_exch = _pull_exchange(cfg, S)
-            pull_caps_j = jnp.asarray(np.asarray(pull_exch.caps, np.int32))
-            dropped += jnp.maximum(
-                ps["qcount"] - cfg.n_pull_steps * pull_caps_j, 0
-            ).sum(dtype=jnp.float32)
-        else:
-            ps = None
-            wm = None
-            if cfg.delta and hub_on:
-                wm = gen & ~is_hub
-            elif cfg.delta:
-                wm = gen
-            elif hub_on:
-                wm = ~is_hub
-            st = pin(_stream_setup(gr, weight_mask=wm))
+    hub_on = cfg.n_hub_steps > 0 and gr.n_hubs > 0
+    is_hub = (gr.nbr_hub >= 0) if hub_on else None
+    gen = gr.delta_gen if cfg.delta else None
+
+    dropped = jnp.zeros((), jnp.float32)
+    push_caps_j = jnp.asarray(push_exch.caps, jnp.int32)
+    if cfg.mode == "pushpull":
+        st0 = pin(_stream_setup(gr))
+        sfx = st0["suffix"]
+        if cfg.delta:
+            # pull decisions weigh only wedges the delta mask generates,
+            # mirroring the planner's masked vol(s, q)
+            sfx = sfx * gen
+        if hub_on:
+            # hub-centered groups carry zero pullable volume
+            sfx = sfx * (~is_hub)
+        st0 = dict(st0, suffix=sfx)
+        ps = pin(_pull_setup(gr, st0, cfg, mw, hub_mask=is_hub))
+        push_mask = ~ps["pull"]
+        if cfg.delta:
+            push_mask = push_mask & gen
+        if hub_on:
+            push_mask = push_mask & ~is_hub
+        st = pin(_stream_setup(gr, weight_mask=push_mask))
+        pull_caps_j = jnp.asarray(pull_exch.caps, jnp.int32)
         dropped += jnp.maximum(
-            st["stream_len"] - cfg.n_push_steps * push_caps_j, 0
+            ps["qcount"] - cfg.n_pull_steps * pull_caps_j, 0
+        ).sum(dtype=jnp.float32)
+    else:
+        ps = None
+        wm = None
+        if cfg.delta and hub_on:
+            wm = gen & ~is_hub
+        elif cfg.delta:
+            wm = gen
+        elif hub_on:
+            wm = ~is_hub
+        st = pin(_stream_setup(gr, weight_mask=wm))
+    dropped += jnp.maximum(
+        st["stream_len"] - cfg.n_push_steps * push_caps_j, 0
+    ).sum(dtype=jnp.float32)
+
+    if hub_on:
+        hmask = is_hub if gen is None else (is_hub & gen)
+        hst = pin(_hub_setup(gr, st, hmask))
+        dropped += jnp.maximum(
+            hst["total"] - cfg.n_hub_steps * cfg.hub_wedge_cap, 0
         ).sum(dtype=jnp.float32)
 
-        if hub_on:
-            hmask = is_hub if gen is None else (is_hub & gen)
-            hst = pin(_hub_setup(gr, st, hmask))
-            dropped += jnp.maximum(
-                hst["total"] - cfg.n_hub_steps * cfg.hub_wedge_cap, 0
-            ).sum(dtype=jnp.float32)
+    stats = dict(
+        wedges_pushed=jnp.zeros((), jnp.float32),
+        tris_push=jnp.zeros((), jnp.float32),
+        wedges_pulled=jnp.zeros((), jnp.float32),
+        tris_pull=jnp.zeros((), jnp.float32),
+        wedges_hub=jnp.zeros((), jnp.float32),
+        tris_hub=jnp.zeros((), jnp.float32),
+        pull_requests=jnp.zeros((), jnp.float32),
+        pull_overflow=jnp.zeros((), jnp.float32),
+        stream_dropped=dropped,
+        wire_push_words=jnp.zeros((), jnp.float32),
+        wire_req_words=jnp.zeros((), jnp.float32),
+        wire_reply_words=jnp.zeros((), jnp.float32),
+    )
 
-        stats = dict(
-            wedges_pushed=jnp.zeros((), jnp.float32),
-            tris_push=jnp.zeros((), jnp.float32),
-            wedges_pulled=jnp.zeros((), jnp.float32),
-            tris_pull=jnp.zeros((), jnp.float32),
-            wedges_hub=jnp.zeros((), jnp.float32),
-            tris_hub=jnp.zeros((), jnp.float32),
-            pull_requests=jnp.zeros((), jnp.float32),
-            pull_overflow=jnp.zeros((), jnp.float32),
-            stream_dropped=dropped,
-            wire_push_words=jnp.zeros((), jnp.float32),
-            wire_req_words=jnp.zeros((), jnp.float32),
-            wire_reply_words=jnp.zeros((), jnp.float32),
-        )
+    # measured wire volume of one superstep: every slot (including block
+    # padding) that crosses the shard axis through the transport
+    push_step_words = float(push_exch.round_slots() * w_push)
 
-        # measured wire volume of one superstep: every slot (including block
-        # padding) that crosses the shard axis through the transport
-        push_step_words = float(push_exch.round_slots() * w_push)
+    def push_step(carry, t):
+        state, stats = carry
+        qr = _gen_push_queries(gr, st, t, push_exch, spec,
+                               delta=cfg.delta)
+        qx = push_exch.scatter(qr)
+        qx = dict(qx, ok=push_exch.apply_recv_ok(qx["ok"]))
+        qx = jax.tree.map(lambda x: _constrain(x, cfg), qx)
+        tri = _answer_push_queries(gr, qx, cfg, spec)
+        state = jax.vmap(survey.update)(state, tri)
+        stats = dict(stats)
+        stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
+        stats["tris_push"] += tri.valid.sum(dtype=jnp.float32)
+        stats["wire_push_words"] += push_step_words
+        return (state, stats), None
 
-        def push_step(carry, t):
+    (state, stats), _ = jax.lax.scan(
+        push_step, (state, stats), jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
+        unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
+
+    if hub_on:
+        def hub_step(carry, t):
             state, stats = carry
-            qr = _gen_push_queries(gr, st, t, push_exch, spec,
-                                   delta=cfg.delta)
-            qx = push_exch.scatter(qr)
-            qx = dict(qx, ok=push_exch.apply_recv_ok(qx["ok"]))
-            qx = jax.tree.map(lambda x: _constrain(x, cfg), qx)
-            tri = _answer_push_queries(gr, qx, cfg, spec)
+            tri, n_w = _hub_superstep(gr, hst, t, cfg, spec)
             state = jax.vmap(survey.update)(state, tri)
             stats = dict(stats)
-            stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
-            stats["tris_push"] += tri.valid.sum(dtype=jnp.float32)
-            stats["wire_push_words"] += push_step_words
+            stats["wedges_hub"] += n_w.sum()
+            stats["tris_hub"] += tri.valid.sum(dtype=jnp.float32)
             return (state, stats), None
 
         (state, stats), _ = jax.lax.scan(
-            push_step, (state, stats), jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
-            unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
+            hub_step, (state, stats),
+            jnp.arange(cfg.n_hub_steps, dtype=jnp.int32),
+            unroll=cfg.n_hub_steps if cfg.unroll_steps else 1)
 
-        if hub_on:
-            def hub_step(carry, t):
-                state, stats = carry
-                tri, n_w = _hub_superstep(gr, hst, t, cfg, spec)
-                state = jax.vmap(survey.update)(state, tri)
-                stats = dict(stats)
-                stats["wedges_hub"] += n_w.sum()
-                stats["tris_hub"] += tri.valid.sum(dtype=jnp.float32)
-                return (state, stats), None
+    if cfg.mode == "pushpull" and cfg.n_pull_steps > 0:
+        Lr = cfg.pull_row_cap if cfg.pull_row_cap else gr.d_plus_max
+        req_step_words = float(pull_exch.round_slots() * w_req)
+        reply_step_words = float(pull_exch.round_slots() * (w_hdr + Lr * w_row))
 
-            (state, stats), _ = jax.lax.scan(
-                hub_step, (state, stats),
-                jnp.arange(cfg.n_hub_steps, dtype=jnp.int32),
-                unroll=cfg.n_hub_steps if cfg.unroll_steps else 1)
+        def pull_step(carry, t):
+            state, stats = carry
+            tri, checked, overflow, n_req = _pull_superstep(
+                gr, ps, t, cfg, spec, pull_exch)
+            state = jax.vmap(survey.update)(state, tri)
+            stats = dict(stats)
+            stats["wedges_pulled"] += checked.sum()
+            stats["tris_pull"] += tri.valid.sum(dtype=jnp.float32)
+            stats["pull_requests"] += n_req
+            stats["pull_overflow"] += overflow.sum()
+            stats["wire_req_words"] += req_step_words
+            stats["wire_reply_words"] += reply_step_words
+            return (state, stats), None
 
-        if cfg.mode == "pushpull" and cfg.n_pull_steps > 0:
-            Lr = cfg.pull_row_cap if cfg.pull_row_cap else gr.d_plus_max
-            req_step_words = float(pull_exch.round_slots() * w_req)
-            reply_step_words = float(pull_exch.round_slots() * (w_hdr + Lr * w_row))
+        (state, stats), _ = jax.lax.scan(
+            pull_step, (state, stats), jnp.arange(cfg.n_pull_steps, dtype=jnp.int32),
+            unroll=cfg.n_pull_steps if cfg.unroll_steps else 1)
 
-            def pull_step(carry, t):
-                state, stats = carry
-                tri, checked, overflow, n_req = _pull_superstep(
-                    gr, ps, t, cfg, spec, pull_exch)
-                state = jax.vmap(survey.update)(state, tri)
-                stats = dict(stats)
-                stats["wedges_pulled"] += checked.sum()
-                stats["tris_pull"] += tri.valid.sum(dtype=jnp.float32)
-                stats["pull_requests"] += n_req
-                stats["pull_overflow"] += overflow.sum()
-                stats["wire_req_words"] += req_step_words
-                stats["wire_reply_words"] += reply_step_words
-                return (state, stats), None
+    return state, stats
 
-            (state, stats), _ = jax.lax.scan(
-                pull_step, (state, stats), jnp.arange(cfg.n_pull_steps, dtype=jnp.int32),
-                unroll=cfg.n_pull_steps if cfg.unroll_steps else 1)
 
-        merged = survey.merge(state)
-        return merged, stats
+def make_survey_fn(survey: Survey, cfg: EngineConfig, mesh=None):
+    """Build the jittable global survey function ``gr -> (merged_state,
+    stats)``.
+
+    ``mesh=None`` (the default) is the historic stacked lowering: all ``S``
+    shards are vmap lanes of one program, transports move bytes with
+    reshapes/gathers, results bit-for-bit what every prior PR produced.
+
+    Passing a 1-D device mesh (``launch.make_shard_mesh(S)``) lowers the
+    same superstep body through ``shard_map``: one shard per device, hub
+    tables replicated, and every transport ``scatter``/``gather`` executing
+    *real* collectives (:mod:`repro.comm.mesh_exchange` — a literal
+    ``all_to_all`` for uniform caps, ``ppermute`` rotation rounds for
+    ragged). Survey results are bitwise-identical to the stacked path:
+    the per-device recv buffers are compacted to the exact stacked layout,
+    per-shard state is restacked before ``survey.merge``, and all counted
+    stats are integer-valued f32 so the split reduction is exact
+    (tests/test_mesh.py asserts all of this; docs/mesh.md explains it).
+    """
+    if mesh is None:
+        if cfg.transport == "mesh":
+            raise ValueError(
+                "a transport='mesh' plan runs real collectives — pass "
+                "mesh=launch.make_shard_mesh(S) to make_survey_fn / the "
+                "survey entry points, or re-plan with transport='dense' or "
+                "'ragged' for the stacked path")
+
+        def run(gr: ShardedDODGr):
+            spec = resolve_survey_spec(survey, gr, cfg)
+            push_exch = _push_exchange(cfg, gr.S)
+            pull_exch = (_pull_exchange(cfg, gr.S)
+                         if cfg.mode == "pushpull" else None)
+            state, stats = _survey_body(gr, survey, cfg, spec, push_exch,
+                                        pull_exch)
+            return survey.merge(state), stats
+
+        return run
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core.dodgr import mesh_specs
+
+    axis = mesh.axis_names[-1]
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    # sharding-constraint hints are for the GSPMD path; inside shard_map
+    # the placement *is* the program
+    cfg_body = replace(cfg, shard_axis=None)
+
+    def run(gr: ShardedDODGr):
+        if n_dev != gr.S:
+            raise ValueError(
+                f"mesh has {n_dev} device(s) along {mesh.axis_names} but "
+                f"the graph has S={gr.S} shards; build it with "
+                "launch.make_shard_mesh(S)")
+        spec = resolve_survey_spec(survey, gr, cfg)
+        push_exch = make_exchange("mesh", gr.S, cfg.push_cap, cfg.push_caps,
+                                  axis_name=axis)
+        pull_exch = (make_exchange("mesh", gr.S, cfg.pull_q_cap,
+                                   cfg.pull_caps, axis_name=axis)
+                     if cfg.mode == "pushpull" else None)
+
+        def body(grl: ShardedDODGr):
+            idx = jax.lax.axis_index(axis)
+            pe = push_exch.local_view(idx)
+            qe = (pull_exch.local_view(idx)
+                  if pull_exch is not None else None)
+            state, stats = _survey_body(grl, survey, cfg_body, spec, pe, qe)
+            # stats leave the shard_map as [1]-stacks along the mesh axis
+            return state, {k: v[None] for k, v in stats.items()}
+
+        sm = shard_map(body, mesh=mesh, in_specs=(mesh_specs(gr, axis),),
+                       out_specs=(P(axis), P(axis)), check_rep=False)
+        state, stats = sm(gr)
+        stats = {k: (v[0] if k in _WIRE_STAT_KEYS else v.sum(0))
+                 for k, v in stats.items()}
+        return survey.merge(state), stats
 
     return run
 
@@ -989,18 +1109,20 @@ def _check_provenance(gr: ShardedDODGr, cfg: EngineConfig):
             f"{len(diffs)} field(s):\n  - " + "\n  - ".join(diffs))
 
 
-def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+def survey_push_only(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
+                     mesh=None):
     _check_provenance(gr, cfg)
     cfg = replace(cfg, mode="push")
-    fn = jax.jit(make_survey_fn(survey, cfg))
+    fn = jax.jit(make_survey_fn(survey, cfg, mesh=mesh))
     merged, stats = fn(gr)
     return _finalize_run(survey, cfg, merged, stats)
 
 
-def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
+def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
+                     mesh=None):
     _check_provenance(gr, cfg)
     cfg = replace(cfg, mode="pushpull")
-    fn = jax.jit(make_survey_fn(survey, cfg))
+    fn = jax.jit(make_survey_fn(survey, cfg, mesh=mesh))
     merged, stats = fn(gr)
     return _finalize_run(survey, cfg, merged, stats)
 
@@ -1010,7 +1132,7 @@ def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig):
 
 
 def survey_delta(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
-                 prev_state=None):
+                 prev_state=None, mesh=None):
     """One incremental epoch: traverse the delta frontier ``gr``, folding
     ONLY triangles that contain ≥1 edge of the current batch (the
     new-old-old / new-new-old / new-new-new classes), then accumulate into
@@ -1040,7 +1162,7 @@ def survey_delta(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
             "recompute identity only up to float reduction order, not "
             "bitwise. Run `python -m repro.analysis` for the reasons.",
             RuntimeWarning, stacklevel=2)
-    fn = jax.jit(make_survey_fn(survey, cfg))
+    fn = jax.jit(make_survey_fn(survey, cfg, mesh=mesh))
     merged, stats = fn(gr)
     stats = jax.tree.map(float, jax.device_get(stats))
     stats["epoch"] = float(cfg.epoch)

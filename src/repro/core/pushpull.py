@@ -304,6 +304,13 @@ def plan_engine(
     engine's ragged exchange ships each pair's own stream instead of the
     worst pair's; results are bitwise-identical to dense.
 
+    ``transport="mesh"`` plans exactly like ragged (same per-pair caps and
+    wire accounting — the logical volume is transport-independent) but
+    stamps the real-collective transport: the engine then requires a device
+    mesh (``make_survey_fn(..., mesh=launch.make_shard_mesh(S))``) and each
+    scatter/gather runs ppermute rotation rounds under shard_map
+    (docs/mesh.md).
+
     ``hub_theta`` enables hub delegation: ``"auto"`` chooses the threshold
     from the degree histogram + bytes cost model (bounded by ``max_hubs``
     replicated rows), an int forces it, 0 disables. Shard the graph with
@@ -417,7 +424,7 @@ def plan_engine(
     max_push_stream = int(push_stream.max()) if len(push_stream) else 0
     n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
     push_caps = None
-    if transport == "ragged":
+    if transport in ("ragged", "mesh"):
         pc = -(-push_stream.astype(np.int64) // n_push_steps)
         push_caps = tuple(tuple(int(x) for x in row)
                           for row in pc.reshape(S, S))
@@ -443,7 +450,7 @@ def plan_engine(
             pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
                                               pull_row_cap)
         n_pull_steps = max(1, ceil_div(int(per_sd.max()), pull_q_cap))
-        if transport == "ragged":
+        if transport in ("ragged", "mesh"):
             pc = -(-per_sd.astype(np.int64) // n_pull_steps)
             pull_caps = tuple(tuple(int(x) for x in row)
                               for row in pc.reshape(S, S))
@@ -469,7 +476,7 @@ def plan_engine(
         pull_edge_cap = max(1, int(per_window.max()))
     if pull_q_cap is None:
         pull_q_cap = 32  # nothing pulled — any cap is a no-op
-    if transport == "ragged" and pull_caps is None:
+    if transport in ("ragged", "mesh") and pull_caps is None:
         pull_caps = tuple((0,) * S for _ in range(S))
 
     # --- volumes ---
@@ -481,7 +488,7 @@ def plan_engine(
                 + pp_rows * w_row) * 4 + hub_table_bytes
     # --- transport wire volumes (buffer slots that actually cross shards,
     # block padding included — must equal the engine's measured stats) ---
-    if transport == "ragged":
+    if transport in ("ragged", "mesh"):
         push_slots = int(sum(sum(row) for row in push_caps))
         req_slots = int(sum(sum(row) for row in pull_caps)) if pull_caps else 0
     else:

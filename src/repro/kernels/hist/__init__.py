@@ -1,1 +1,1 @@
-from repro.kernels.hist.ops import hist_add
+from repro.kernels.hist.ops import hist_add, hist_max

@@ -50,3 +50,46 @@ def hist_add_pallas(slots, amounts, capacity: int, bb: int = 1024,
         out_shape=jax.ShapeDtypeStruct((capacity,), jnp.int32),
         interpret=interpret,
     )(slots, amounts)
+
+
+def _max_kernel(slot_ref, row_ref, out_ref, *, cap_tile):
+    i = pl.program_id(0)   # table tile
+    j = pl.program_id(1)   # batch tile
+
+    @pl.when(j == 0)
+    def _init():
+        # all-zeros is the max identity of the packed uint32 layout
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slots = slot_ref[...]                                    # [bb]
+    rows = row_ref[...]                                      # [bb, W]
+    base = i * cap_tile
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, cap_tile), 1)
+    hit = slots[:, None] == lane                             # [bb, cap_tile]
+    contrib = jnp.where(hit[:, :, None], rows[:, None, :], jnp.uint32(0))
+    out_ref[...] = jnp.maximum(out_ref[...], contrib.max(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "bb", "cap_tile", "interpret"))
+def hist_max_pallas(slots, rows, capacity: int, bb: int = 256,
+                    cap_tile: int = 256, interpret: bool = True):
+    """Row-wise scatter-max: same one-hot idiom as the add kernel, with
+    ``max`` as the reduction — max is idempotent and commutative, so the
+    tiled accumulation is bitwise-identical to XLA's ``.at[].max``.
+    VMEM: the [bb, cap_tile, W] select is the working set; the default
+    256×256 tiles keep it ≤ 2 MB at W = 8."""
+    B = slots.shape[0]
+    W = rows.shape[-1]
+    assert B % bb == 0 and capacity % cap_tile == 0
+    grid = (capacity // cap_tile, B // bb)
+    return pl.pallas_call(
+        functools.partial(_max_kernel, cap_tile=cap_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((cap_tile, W), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((capacity, W), rows.dtype),
+        interpret=interpret,
+    )(slots, rows)

@@ -21,3 +21,26 @@ def hist_add(slots, amounts, capacity: int, bb: int = 1024,
         amounts = jnp.pad(amounts, (0, pad))
     return hist_add_pallas(slots, amounts, capacity, bb=bb,
                            cap_tile=cap_tile, interpret=interpret)
+
+
+def hist_max(slots, rows, capacity: int, bb: int = 256,
+             cap_tile: int = 256, interpret: bool = True):
+    """Scatter-max ``rows`` [B, W] at ``slots`` into a fresh [capacity, W]
+    zero table (zeros = the max identity of the packed uint32 layout).
+
+    Out-of-range slots (masked entries set to -1) never match a lane and
+    are dropped, mirroring ``hist_add``.
+    """
+    from repro.kernels.hist.hist import hist_max_pallas
+
+    B = slots.shape[0]
+    bb = min(bb, max(8, B))
+    cap_tile = min(cap_tile, capacity)
+    while capacity % cap_tile:
+        cap_tile -= 1
+    pad = (-B) % bb
+    if pad:
+        slots = jnp.pad(slots, (0, pad), constant_values=-1)
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    return hist_max_pallas(slots, rows, capacity, bb=bb,
+                           cap_tile=cap_tile, interpret=interpret)

@@ -7,3 +7,12 @@ import jax.numpy as jnp
 def hist_add_ref(slots, amounts, capacity: int):
     """slots [B] int32 in [0, capacity); amounts [B] int32 → table [capacity]."""
     return jnp.zeros((capacity,), jnp.int32).at[slots].add(amounts)
+
+
+def hist_max_ref(slots, rows, capacity: int):
+    """slots [B] int32; rows [B, W] uint32 → table [capacity, W] via
+    scatter-max over a zero table (out-of-range slots dropped; negatives
+    are remapped past the end first — ``.at`` would wrap them)."""
+    table = jnp.zeros((capacity, rows.shape[-1]), rows.dtype)
+    slots = jnp.where(slots < 0, capacity, slots)
+    return table.at[slots].max(rows, mode="drop")

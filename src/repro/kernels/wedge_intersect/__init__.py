@@ -1,0 +1,1 @@
+from repro.kernels.wedge_intersect.ops import wedge_intersect

@@ -1,0 +1,29 @@
+"""jit'd wrapper: pad batch to tile multiple, dispatch, unpad."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.wedge_intersect.wedge_intersect import wedge_intersect_pallas
+
+
+def wedge_intersect(keys_d, keys_h, keys_i, e, row_d, row_h, row_i, ln,
+                    L: int, bb: int = 128, interpret: bool = True):
+    """Fused candidate addressing + lower-bound intersection.
+
+    Shapes: keys_* [E] (the shard's sorted suffix keys); e [B] edge slots;
+    row_* [B, Lr] pulled rows (valid prefix ``ln``); any B — padded
+    internally. Returns ``(pos, ci)`` both [B, L] — the lower-bound
+    position and the gathered candidate id of every suffix lane.
+    """
+    B = e.shape[0]
+    bb = min(bb, max(8, B))
+    pad = (-B) % bb
+    if pad:
+        m = lambda x: jnp.pad(x, ((0, pad), (0, 0)))
+        v = lambda x: jnp.pad(x, (0, pad))
+        row_d, row_h, row_i = m(row_d), m(row_h), m(row_i)
+        e, ln = v(e), v(ln)
+    pos, ci = wedge_intersect_pallas(keys_d, keys_h, keys_i, e,
+                                     row_d, row_h, row_i, ln,
+                                     L=L, bb=bb, interpret=interpret)
+    return pos[:B], ci[:B]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle + host ground truth for the fused wedge-intersect.
+
+The fused kernel must equal the *composition* it replaces: gather the
+candidate keys at ``clip(e+1+k, 0, E-1)`` (the engine's ``r_pos``), then
+lower-bound each candidate in its pulled row. Both references spell the
+composition out explicitly so the fusion has an unfused witness.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def wedge_intersect_ref(keys_d, keys_h, keys_i, e, row_d, row_h, row_i, ln,
+                        L: int):
+    """[B] edges × [B, Lr] rows → ([B, L] positions, [B, L] candidate ids)."""
+    e_cap = keys_d.shape[-1]
+    k = jnp.arange(L, dtype=jnp.int32)
+    idx = jnp.clip(e[:, None] + 1 + k[None, :], 0, e_cap - 1)
+    qd, qh, qi = keys_d[idx], keys_h[idx], keys_i[idx]
+    Lr = row_d.shape[-1]
+    n_steps = max(1, int(np.ceil(np.log2(max(2, L, Lr)))) + 1)
+
+    def one(rd, rh, ri, n, cd, ch, ci):
+        lo = jnp.zeros_like(ci)
+        hi = jnp.broadcast_to(n, ci.shape)
+
+        def body(_, carry):
+            lo, hi = carry
+            has = lo < hi
+            mid = jnp.where(has, (lo + hi) // 2, 0)
+            d = rd[mid]
+            h = rh[mid]
+            i = ri[mid]
+            less = (d < cd) | ((d == cd) & (h < ch)) | ((d == cd) & (h == ch) & (i < ci))
+            return jnp.where(has & less, mid + 1, lo), jnp.where(has & ~less, mid, hi)
+
+        lo, _ = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
+        return lo
+
+    pos = jax.vmap(one)(row_d, row_h, row_i, ln, qd, qh, qi)
+    return pos, qi
+
+
+def wedge_intersect_numpy(keys_d, keys_h, keys_i, e, row_d, row_h, row_i,
+                          ln, L: int):
+    """Host ground truth: explicit gather + per-candidate binary search."""
+    keys_d = np.asarray(keys_d)
+    keys_h = np.asarray(keys_h)
+    keys_i = np.asarray(keys_i)
+    e = np.asarray(e)
+    B = e.shape[0]
+    e_cap = keys_d.shape[-1]
+    pos = np.zeros((B, L), np.int32)
+    ci = np.zeros((B, L), np.asarray(keys_i).dtype)
+    for b in range(B):
+        n = int(ln[b])
+        row = [(int(row_d[b, j]), int(row_h[b, j]), int(row_i[b, j]))
+               for j in range(n)]
+        for kk in range(L):
+            j = min(max(int(e[b]) + 1 + kk, 0), e_cap - 1)
+            key = (int(keys_d[j]), int(keys_h[j]), int(keys_i[j]))
+            ci[b, kk] = keys_i[j]
+            l, h = 0, n
+            while l < h:
+                m = (l + h) // 2
+                if row[m] < key:
+                    l = m + 1
+                else:
+                    h = m
+            pos[b, kk] = l
+    return pos, ci

@@ -8,6 +8,30 @@ from __future__ import annotations
 import jax
 
 
+def make_shard_mesh(S: int, axis_name: str = "shards"):
+    """A 1-D mesh of ``S`` devices for the engine's real-collective path
+    (``make_survey_fn(..., mesh=)`` + the ``mesh`` transport): one survey
+    shard per device along ``axis_name``.
+
+    On a CPU container, force host devices *before* jax initializes::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+    (tests/conftest.py does this for the test suite; see docs/mesh.md).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < S:
+        raise ValueError(
+            f"need {S} devices for a {S}-shard mesh but jax sees "
+            f"{len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={S} before jax "
+            "initializes")
+    return Mesh(np.asarray(devs[:S]), (axis_name,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

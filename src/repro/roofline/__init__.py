@@ -1,3 +1,6 @@
-from repro.roofline.analysis import analyze_compiled, collective_bytes, HW
+from repro.roofline.analysis import (HW, analyze_compiled, collective_bytes,
+                                     mesh_collective_plan,
+                                     reconcile_collectives)
 
-__all__ = ["analyze_compiled", "collective_bytes", "HW"]
+__all__ = ["analyze_compiled", "collective_bytes", "HW",
+           "mesh_collective_plan", "reconcile_collectives"]

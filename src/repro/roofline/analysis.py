@@ -36,11 +36,23 @@ DTYPE_BYTES = {
     "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
 
-_COLL_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(", re.M)
+# every cross-device HLO mnemonic we model; order matters — longer names
+# first so ``ragged-all-to-all`` is not claimed by ``all-to-all``
+COLLECTIVE_KINDS = ("ragged-all-to-all", "all-to-all", "all-gather",
+                    "all-reduce", "reduce-scatter", "collective-permute",
+                    "collective-broadcast")
+
+# one optimized-HLO instruction per line: name = <result shapes> mnemonic(...)
+# The result-shape group is ``.+?`` so both the array form
+# (``s32[4,64] all-to-all(...)``) and the tuple-sharded form shard_map
+# emits (``(s32[1,64], u32[1,64]) all-to-all(...)``) are captured; tuple
+# component shapes sum to the payload.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w-]*)\(", re.M)
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# any instruction carrying a device group is a collective, whatever its
+# mnemonic — the unknown-kind detector keys on these attributes
+_GROUP_ATTR_RE = re.compile(r"replica_groups=|source_target_pairs=")
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -57,17 +69,44 @@ def _shape_bytes(shape_str: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-op-kind payload bytes (per device), from optimized HLO text."""
-    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
-           "all-to-all": 0, "collective-permute": 0}
-    counts = {k: 0 for k in out}
-    for m in _COLL_RE.finditer(hlo_text):
-        shape_str, kind = m.group(1), m.group(2)
+    """Collective payload bytes (per device) from optimized HLO text.
+
+    Returns ``per_kind`` / ``counts`` totals over :data:`COLLECTIVE_KINDS`,
+    an ``ops`` list with one ``(name, kind, bytes)`` record per collective
+    instruction (the per-op breakdown reconciliation diffs against), and an
+    ``unknown`` bucket: instructions that carry a device-group attribute
+    (``replica_groups`` / ``source_target_pairs``) but whose mnemonic we do
+    not model are *counted there*, never silently dropped. ``-start``
+    halves of async pairs are counted once (``-done`` is skipped).
+    """
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    ops = []
+    unknown = {"bytes": 0, "count": 0, "mnemonics": []}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        name, shape_str, mnem = m.group(1), m.group(2), m.group(3)
+        if mnem.endswith("-done"):
+            continue                      # payload counted at the -start op
+        base = mnem[:-6] if mnem.endswith("-start") else mnem
+        kind = next((k for k in COLLECTIVE_KINDS if base == k), None)
+        if kind is None:
+            if _GROUP_ATTR_RE.search(line) and base != "fusion":
+                unknown["bytes"] += _shape_bytes(shape_str)
+                unknown["count"] += 1
+                if base not in unknown["mnemonics"]:
+                    unknown["mnemonics"].append(base)
+            continue
         b = _shape_bytes(shape_str)
         out[kind] += b
         counts[kind] += 1
+        ops.append(dict(name=name, kind=kind, bytes=b))
     wire = sum(v * (2 if k == "all-reduce" else 1) for k, v in out.items())
-    return dict(per_kind=out, counts=counts, wire_bytes=wire)
+    wire += unknown["bytes"]
+    return dict(per_kind=out, counts=counts, ops=ops, unknown=unknown,
+                wire_bytes=wire)
 
 
 def analyze_compiled(compiled, n_devices: int, model_flops_total: float,
@@ -120,3 +159,97 @@ def analyze_compiled(compiled, n_devices: int, model_flops_total: float,
                            / max(terms.values())
                            if max(terms.values()) > 0 else 0.0),
     )
+
+
+# ---------------------------------------------------------------------------
+# mesh-plan reconciliation: compiled HLO collectives vs planned wire volume
+
+
+def mesh_collective_plan(cfg, S: int | None = None) -> dict:
+    """Planned *physical* per-device collective payload of one compiled mesh
+    survey call, from an ``EngineConfig`` with ``transport='mesh'``.
+
+    Physical ≠ logical: the uniform all-to-all ships the whole ``[S·cap]``
+    buffer (the resident self chunk is part of the op), the ragged rotation
+    rounds ship every round's diagonal padded to its worst pair and skip
+    the self diagonal (``MeshExchange.wire_round_slots``). Per-slot word
+    widths are the planner's: ``w_push`` on the push lane, ``w_req``
+    forward + ``w_hdr + Lr·w_row`` back on the pull lane. Multiply by the
+    device count to compare with ``VolumeReport`` totals — equal for a
+    uniform plan, larger by exactly the rotation padding minus the resident
+    diagonal for a ragged one.
+
+    The compiled fn must be built with ``unroll_steps=True`` (the config's
+    cost-analysis mode) so every superstep's collectives appear in the HLO
+    text instead of one copy inside a scan loop.
+    """
+    from repro.comm.exchange import make_exchange  # lazy: host-side core
+
+    if cfg.meta_widths is None:
+        raise ValueError("cfg.meta_widths is None — pass a planned config "
+                         "(pushpull.plan_engine stamps the wire widths)")
+    w_push, w_row, w_hdr, w_req = cfg.meta_widths
+    if S is None:
+        if cfg.push_caps is None:
+            raise ValueError("S not given and cfg.push_caps is None")
+        S = len(cfg.push_caps)
+    per_kind: dict = {}
+    lanes = dict(push=0, req=0, reply=0)
+
+    def lane(exch, n_steps, words_per_slot, key):
+        b = n_steps * S * exch.wire_round_slots() * words_per_slot * 4
+        lanes[key] = b
+        kind = "all-to-all" if exch.uniform else "collective-permute"
+        per_kind[kind] = per_kind.get(kind, 0) + b
+
+    push = make_exchange("mesh", S, cfg.push_cap, cfg.push_caps)
+    lane(push, cfg.n_push_steps, w_push, "push")
+    if cfg.mode == "pushpull" and cfg.n_pull_steps:
+        pull = make_exchange("mesh", S, cfg.pull_q_cap, cfg.pull_caps)
+        lane(pull, cfg.n_pull_steps, w_req, "req")
+        lane(pull, cfg.n_pull_steps, w_hdr + cfg.pull_row_cap * w_row,
+             "reply")
+    total = sum(lanes.values())
+    return dict(per_kind=per_kind, lanes=lanes, total_bytes=total,
+                per_device_bytes=total // S, n_devices=S)
+
+
+def reconcile_collectives(hlo_or_compiled, cfg, S: int | None = None,
+                          volume=None) -> dict:
+    """Diff the measured HLO collective payload against the mesh plan.
+
+    ``hlo_or_compiled`` is optimized HLO text or a jax ``Compiled`` (its
+    per-device SPMD module). ``ok`` asserts byte-exact agreement of the
+    wire-lane collectives (all-to-all + collective-permute + any ragged
+    form) with :func:`mesh_collective_plan`; unknown collectives break
+    reconciliation loudly via ``extra_bytes``. Pass the plan's
+    ``VolumeReport`` as ``volume`` to also report the logical wire bytes
+    and the physical padding over them (0 for a uniform plan).
+    """
+    hlo = (hlo_or_compiled if isinstance(hlo_or_compiled, str)
+           else hlo_or_compiled.as_text())
+    meas = collective_bytes(hlo)
+    plan = mesh_collective_plan(cfg, S=S)
+    wire_kinds = ("all-to-all", "ragged-all-to-all", "collective-permute")
+    measured = sum(meas["per_kind"][k] for k in wire_kinds)
+    # known non-wire collectives (the state/stat merge's all-gather /
+    # all-reduce when the merge is jitted with the survey) are reported,
+    # not reconciled; *unknown* collectives fail the reconciliation — the
+    # model has a hole
+    other = sum(v for k, v in meas["per_kind"].items() if k not in wire_kinds)
+    extra = meas["unknown"]["bytes"]
+    out = dict(
+        measured_bytes=measured,
+        planned_bytes=plan["per_device_bytes"],
+        other_bytes=other,
+        extra_bytes=extra,
+        ok=(measured == plan["per_device_bytes"] and extra == 0),
+        plan=plan,
+        measured=meas,
+    )
+    if volume is not None:
+        logical = (volume.wire_push_bytes + volume.wire_req_bytes
+                   + volume.wire_reply_bytes)
+        out["volume_wire_bytes"] = logical
+        out["padding_bytes"] = plan["total_bytes"] - logical
+    return out

@@ -1,0 +1,14 @@
+"""Force 8 host CPU devices before jax initializes, so the mesh-transport
+tests (tests/test_mesh.py) exercise real shard_map collectives on this
+single-host container. A no-op if jax is somehow already imported (the
+flag cannot take effect then — test_mesh skips itself on device count) or
+if the environment already forces a device count (the CI matrix does).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()

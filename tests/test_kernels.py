@@ -11,12 +11,15 @@ try:
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.kernels.hist.ops import hist_add
-from repro.kernels.hist.ref import hist_add_ref
+from repro.kernels.hist.ops import hist_add, hist_max
+from repro.kernels.hist.ref import hist_add_ref, hist_max_ref
 from repro.kernels.intersect.ops import intersect
 from repro.kernels.intersect.ref import intersect_numpy, intersect_ref
 from repro.kernels.wedge_check.ops import wedge_check
 from repro.kernels.wedge_check.ref import lower_bound_numpy, lower_bound_ref
+from repro.kernels.wedge_intersect.ops import wedge_intersect
+from repro.kernels.wedge_intersect.ref import (wedge_intersect_numpy,
+                                               wedge_intersect_ref)
 
 
 def _sorted_keys(rng, n):
@@ -123,6 +126,134 @@ def test_intersect_finds_common_elements():
 
 
 # ---------------------------------------------------------------------------
+# wedge_intersect (fused candidate addressing + intersection)
+
+
+def _wedge_intersect_case(rng, e_cap, B, L, Lr):
+    kd, kh, ki = _sorted_keys(rng, e_cap)
+    e = rng.integers(-1, e_cap, B).astype(np.int32)   # -1: degenerate slot
+    rows = [_sorted_keys(rng, Lr) for _ in range(B)]
+    rd = np.stack([r[0] for r in rows])
+    rh = np.stack([r[1] for r in rows])
+    ri = np.stack([r[2] for r in rows])
+    ln = rng.integers(0, Lr + 1, B).astype(np.int32)
+    return kd, kh, ki, e, rd, rh, ri, ln
+
+
+@pytest.mark.parametrize("e_cap,B,L,Lr,bb", [
+    (64, 16, 8, 8, 8), (256, 100, 16, 32, 32),
+    (1024, 128, 32, 16, 128), (8, 3, 4, 4, 8)])
+def test_wedge_intersect_vs_oracles(e_cap, B, L, Lr, bb):
+    """Fused kernel == jnp ref == host numpy ground truth, including the
+    clipped out-of-range candidate addressing at the array edges."""
+    rng = np.random.default_rng(e_cap * B + L)
+    case = _wedge_intersect_case(rng, e_cap, B, L, Lr)
+    want_pos, want_ci = wedge_intersect_numpy(*case, L=L)
+    ref_pos, ref_ci = wedge_intersect_ref(*map(jnp.asarray, case), L=L)
+    got_pos, got_ci = wedge_intersect(*map(jnp.asarray, case), L=L, bb=bb,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref_pos), want_pos)
+    np.testing.assert_array_equal(np.asarray(ref_ci), want_ci)
+    np.testing.assert_array_equal(np.asarray(got_pos), want_pos)
+    np.testing.assert_array_equal(np.asarray(got_ci), want_ci)
+
+
+def test_wedge_intersect_matches_two_kernel_composition():
+    """Bitwise parity with the historic split lowering: gather candidate
+    keys with jnp, pad rows to L, run kernels/intersect."""
+    rng = np.random.default_rng(7)
+    e_cap, B, L, Lr = 256, 64, 16, 16
+    kd, kh, ki, e, rd, rh, ri, ln = map(
+        jnp.asarray, _wedge_intersect_case(rng, e_cap, B, L, Lr))
+    k = jnp.arange(L, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(e[:, None] + 1 + k, 0, e_cap - 1)
+    cd, ch, ci = kd[idx], kh[idx], ki[idx]
+    split_pos = intersect(rd, rh, ri, ln, cd, ch, ci, interpret=True)
+    fused_pos, fused_ci = wedge_intersect(kd, kh, ki, e, rd, rh, ri, ln,
+                                          L=L, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused_pos),
+                                  np.asarray(split_pos))
+    np.testing.assert_array_equal(np.asarray(fused_ci), np.asarray(ci))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 128), st.integers(1, 60), st.integers(1, 16),
+           st.integers(1, 16), st.integers(0, 2**31 - 1))
+    def test_wedge_intersect_property(e_cap, B, L, Lr, seed):
+        """Property twin: the fused kernel returns the true lower bound of
+        the addressed candidate key in every valid row prefix."""
+        rng = np.random.default_rng(seed)
+        case = _wedge_intersect_case(rng, e_cap, B, L, Lr)
+        kd, kh, ki, e, rd, rh, ri, ln = case
+        pos, ci = wedge_intersect(*map(jnp.asarray, case), L=L, bb=16,
+                                  interpret=True)
+        pos, ci = np.asarray(pos), np.asarray(ci)
+        for b in range(B):
+            row = list(zip(rd[b, :ln[b]].tolist(), rh[b, :ln[b]].tolist(),
+                           ri[b, :ln[b]].tolist()))
+            for kk in range(L):
+                j = min(max(int(e[b]) + 1 + kk, 0), e_cap - 1)
+                key = (int(kd[j]), int(kh[j]), int(ki[j]))
+                assert ci[b, kk] == ki[j]
+                p = int(pos[b, kk])
+                assert all(r < key for r in row[:p])
+                if p < len(row):
+                    assert row[p] >= key
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_wedge_intersect_property():
+        pass
+
+
+@pytest.mark.parametrize("mode", ["pushpull"])
+def test_engine_fused_pull_kernel_bitwise(mode):
+    """Engine-level parity: pull_kernel='fused' == 'split' == jnp path,
+    result and stats, bit for bit."""
+    import dataclasses
+
+    from repro.core.dodgr import shard_dodgr
+    from repro.core.engine import survey_push_pull
+    from repro.core.pushpull import plan_engine
+    from repro.core.surveys import TriangleCount
+    from repro.graphs import generators
+
+    g = generators.rmat(6, 8, seed=11)
+    gr, _ = shard_dodgr(g, S=4)
+    cfg, _ = plan_engine(g, 4, mode=mode, push_cap=64, pull_q_cap=4,
+                         use_pallas=True)
+    res_f, st_f = survey_push_pull(
+        gr, TriangleCount(), dataclasses.replace(cfg, pull_kernel="fused"))
+    res_s, st_s = survey_push_pull(
+        gr, TriangleCount(), dataclasses.replace(cfg, pull_kernel="split"))
+    res_j, st_j = survey_push_pull(
+        gr, TriangleCount(), dataclasses.replace(cfg, use_pallas=False))
+    assert res_f == res_s == res_j
+    assert st_f == st_s == st_j
+
+
+def test_wedge_intersect_traffic_model_favors_fusion():
+    """The interpret-path op-count model: fused candidate-key traffic beats
+    the two-kernel composition at the engine's planned shapes (acceptance:
+    fusion must win on the model, not just avoid a launch)."""
+    bench = pytest.importorskip("benchmarks.bench_kernels")
+    from repro.core.dodgr import shard_dodgr
+    from repro.core.pushpull import plan_engine
+    from repro.graphs import generators
+
+    g = generators.rmat(8, 16, seed=5)
+    for S in (2, 4):
+        cfg, _ = plan_engine(g, S, mode="pushpull", push_cap=256,
+                             pull_q_cap=16)
+        gr, _ = shard_dodgr(g, S=S)
+        # the engine's fused call: E = shard suffix-key length, B = S·ecap
+        # flattened edge slots, L = the suffix window (dodgr.d_plus_max)
+        m = bench.wedge_intersect_traffic_model(
+            int(gr.e_cap), S * cfg.pull_edge_cap, int(gr.d_plus_max))
+        assert m["fused_words"] < m["split_words"], (S, m)
+
+
+# ---------------------------------------------------------------------------
 # hist
 
 
@@ -155,6 +286,51 @@ if HAVE_HYPOTHESIS:
 else:
     @pytest.mark.skip(reason="property tests need hypothesis")
     def test_hist_property_mass_conservation():
+        pass
+
+
+@pytest.mark.parametrize("B,cap,W,bb,ct", [
+    (32, 64, 3, 8, 16), (1000, 512, 5, 256, 512),
+    (37, 64, 5, 256, 256), (5, 8, 1, 8, 8)])
+def test_hist_max_vs_ref(B, cap, W, bb, ct):
+    """Tiled scatter-max == the .at[].max reference, including invalid
+    (negative) slots, which must be dropped — not wrapped."""
+    rng = np.random.default_rng(B * cap + W)
+    slots = rng.integers(-1, cap, B).astype(np.int32)
+    rows = rng.integers(0, 1 << 32, (B, W)).astype(np.uint32)
+    want = np.asarray(hist_max_ref(jnp.asarray(slots), jnp.asarray(rows), cap))
+    got = np.asarray(hist_max(jnp.asarray(slots), jnp.asarray(rows), cap,
+                              bb=bb, cap_tile=ct, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    # manual ground truth
+    manual = np.zeros((cap, W), np.uint32)
+    for b in range(B):
+        if slots[b] >= 0:
+            manual[slots[b]] = np.maximum(manual[slots[b]], rows[b])
+    np.testing.assert_array_equal(got, manual)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 300), st.sampled_from([8, 64]), st.integers(1, 4),
+           st.integers(0, 2**31 - 1))
+    def test_hist_max_property_idempotent(B, cap, W, seed):
+        """Scatter-max is idempotent and order-free: applying the batch
+        twice (or the kernel vs the reference) changes nothing."""
+        rng = np.random.default_rng(seed)
+        slots = jnp.asarray(rng.integers(-1, cap, B).astype(np.int32))
+        rows = jnp.asarray(rng.integers(0, 1 << 32, (B, W)).astype(np.uint32))
+        once = np.asarray(hist_max(slots, rows, cap, bb=64, cap_tile=8,
+                                   interpret=True))
+        ref = np.asarray(hist_max_ref(slots, rows, cap))
+        np.testing.assert_array_equal(once, ref)
+        twice = np.maximum(
+            once, np.asarray(hist_max(slots, rows, cap, bb=64, cap_tile=8,
+                                      interpret=True)))
+        np.testing.assert_array_equal(twice, once)
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_hist_max_property_idempotent():
         pass
 
 

@@ -11,7 +11,11 @@ regressions in exchanged bytes / wall-clock are diffable across commits.
 ``--compare BASELINE.json`` joins this run's rows against a previously
 written JSON (the checked-in ``BENCH_baseline.json``) by (suite, name)
 and prints old/new wall-times with the ratio; rows present on only one
-side are listed, never an error — suites grow across PRs.
+side are listed, never an error — suites grow across PRs. Wall-time
+ratios are informational, but a shared row whose deterministic
+``wire_padding_B`` (the mesh round scheduler's physical padding) grew by
+more than 10% is a **failure**: the process exits nonzero so CI blocks
+the regression.
 Roofline terms for the production mesh come from the dry-run artifacts
 (launch/dryrun.py + roofline/report.py), not from CPU wall-times.
 """
@@ -24,9 +28,18 @@ import sys
 import time
 
 
-def compare(records: list[dict], baseline_path: str) -> None:
+PADDING_REGRESSION_TOL = 1.10   # >10% more wire padding than baseline fails
+
+
+def compare(records: list[dict], baseline_path: str) -> int:
     """Join rows against a baseline JSON by (suite, name) and print the
-    wall-time ratio per shared row; one-sided rows are noted, not fatal."""
+    wall-time ratio per shared row; one-sided rows are noted, not fatal.
+
+    Wall-time ratios are informational (CPU benches are noisy), but the
+    round scheduler's ``wire_padding_B`` is *deterministic* — a shared row
+    whose padding grew past :data:`PADDING_REGRESSION_TOL` is printed as a
+    regression and counted in the returned value (``main`` exits nonzero).
+    """
     with open(baseline_path) as f:
         base = json.load(f)
     old = {(r["suite"], r["name"]): r for r in base.get("rows", [])}
@@ -34,6 +47,7 @@ def compare(records: list[dict], baseline_path: str) -> None:
     print(f"# compare vs {baseline_path} "
           f"(baseline {base.get('timestamp', '?')})")
     print("name,base_us,new_us,ratio")
+    regressions = 0
     for key in sorted(new):
         if key not in old:
             print(f"{key[1]},,{new[key]['us_per_call']:.1f},new-row")
@@ -41,8 +55,23 @@ def compare(records: list[dict], baseline_path: str) -> None:
         b, n = old[key]["us_per_call"], new[key]["us_per_call"]
         ratio = f"{n / b:.2f}" if b else "n/a"
         print(f"{key[1]},{b:.1f},{n:.1f},{ratio}")
+        pb = old[key].get("derived", {}).get("wire_padding_B")
+        pn = new[key].get("derived", {}).get("wire_padding_B")
+        if pb is not None and pn is not None and \
+                pn > pb * PADDING_REGRESSION_TOL and pn > pb:
+            regressions += 1
+            print(f"# PADDING REGRESSION {key[1]}: wire_padding_B "
+                  f"{pb} -> {pn} "
+                  f"(x{pn / pb:.2f} > x{PADDING_REGRESSION_TOL:.2f})"
+                  if pb else
+                  f"# PADDING REGRESSION {key[1]}: wire_padding_B "
+                  f"{pb} -> {pn}")
     for key in sorted(set(old) - set(new)):
         print(f"{key[1]},{old[key]['us_per_call']:.1f},,baseline-only")
+    if regressions:
+        print(f"# {regressions} padding regression(s) vs {baseline_path}",
+              file=sys.stderr)
+    return regressions
 
 
 def main() -> None:
@@ -103,9 +132,10 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
+    regressions = 0
     if args.compare:
-        compare(records, args.compare)
-    if failed:
+        regressions = compare(records, args.compare)
+    if failed or regressions:
         sys.exit(1)
 
 

@@ -17,7 +17,8 @@ Three passes, all zero-device (abstract tracing + host numpy + AST):
 
 See ``docs/determinism.md`` for the contracts these passes enforce.
 """
-from repro.analysis.conservation import check_exchange, check_plan
+from repro.analysis.conservation import (check_exchange, check_plan,
+                                          check_schedule)
 from repro.analysis.contracts import (BITWISE, ORDER_SENSITIVE, UNKNOWN,
                                       VERDICTS, builtin_surveys,
                                       check_fold_contract,
@@ -29,6 +30,7 @@ from repro.analysis.report import Violation, format_report
 __all__ = [
     "BITWISE", "ORDER_SENSITIVE", "UNKNOWN", "VERDICTS", "Violation",
     "builtin_surveys", "check_exchange", "check_fold_contract",
-    "check_kernel_oracles", "check_plan", "classify_determinism",
+    "check_kernel_oracles", "check_plan", "check_schedule",
+    "classify_determinism",
     "format_report", "lint_file", "lint_repo",
 ]

@@ -146,6 +146,97 @@ def check_exchange(exch: Exchange, lane: str = "push") -> list[Violation]:
     return v
 
 
+def check_schedule(schedule, caps, lane: str = "push") -> list[Violation]:
+    """Statically verify a mesh :class:`~repro.comm.round_schedule.
+    RoundSchedule` against its cap matrix.
+
+    Proves, with plain host arithmetic: every off-diagonal (src, dest) cap
+    is covered *exactly once* across the wire rounds (contiguous slices,
+    no gaps, no overlaps — no slot aliasing on the recv compaction); every
+    round is a valid partial permutation (each device sends at most once
+    and receives at most once per ppermute); every round's padded slot
+    count equals its longest part; the self diagonal is fully carried by
+    the local (no-wire) parts; and the schedule's slot totals are
+    self-consistent (``wire_slots`` == Σ round slots)."""
+    v: list[Violation] = []
+
+    def bad(code: str, where: str, msg: str) -> None:
+        v.append(Violation("conservation", code, where, msg))
+
+    caps = np.asarray(caps, np.int64)
+    S = int(schedule.S)
+    if caps.shape != (S, S):
+        bad("sched-caps-shape", lane,
+            f"schedule is for S={S} but caps is {caps.shape}")
+        return v
+
+    segs: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    for i, rnd in enumerate(schedule.wire_rounds):
+        if not rnd.parts:
+            bad("sched-empty-round", f"{lane}:round{i}",
+                "round ships no parts — a pure-padding collective")
+            continue
+        if rnd.slots != max(p.length for p in rnd.parts):
+            bad("sched-round-slots", f"{lane}:round{i}",
+                f"round pads to {rnd.slots} slots but its longest part is "
+                f"{max(p.length for p in rnd.parts)}")
+        srcs = [p.src for p in rnd.parts]
+        dsts = [p.dest for p in rnd.parts]
+        if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+            bad("sched-not-permutation", f"{lane}:round{i}",
+                "two parts share a source or destination device — one "
+                "ppermute cannot ship both")
+        for p in rnd.parts:
+            if p.src == p.dest:
+                bad("sched-diagonal-on-wire", f"{lane}:round{i}",
+                    f"part ({p.src}->{p.dest}) puts the resident self "
+                    "diagonal on the wire")
+            if p.length < 1 or p.length > rnd.slots:
+                bad("sched-part-length", f"{lane}:round{i}:({p.src}->"
+                    f"{p.dest})", f"part length {p.length} outside "
+                    f"(0, {rnd.slots}]")
+            segs.setdefault((p.src, p.dest), []).append(
+                (p.lane_lo, p.lane_lo + p.length))
+
+    # exact cover of every off-diagonal cap: sorted slices tile [0, cap)
+    for s in range(S):
+        for d in range(S):
+            if s == d:
+                continue
+            want = int(caps[s, d])
+            got = sorted(segs.pop((s, d), []))
+            lo = 0
+            for a, b in got:
+                if a != lo:
+                    bad("sched-cover", f"{lane}:({s}->{d})",
+                        f"chunk lanes [{lo}, {a}) are "
+                        f"{'re-shipped' if a < lo else 'never shipped'} — "
+                        "slices must tile the chunk exactly once")
+                    break
+                lo = b
+            else:
+                if lo != want:
+                    bad("sched-cover", f"{lane}:({s}->{d})",
+                        f"slices cover lanes [0, {lo}) of a {want}-slot "
+                        "chunk")
+    for (s, d) in segs:
+        bad("sched-cover", f"{lane}:({s}->{d})",
+            "schedule ships a pair with zero capacity")
+
+    loc = {(p.src, p.length) for p in schedule.local_parts}
+    diag = {(s, int(caps[s, s])) for s in range(S) if caps[s, s] > 0}
+    if loc != diag:
+        bad("sched-local-cover", lane,
+            f"local (self-diagonal) parts {sorted(loc)} do not match the "
+            f"cap diagonal {sorted(diag)}")
+
+    if schedule.wire_slots != sum(r.slots for r in schedule.wire_rounds):
+        bad("sched-slot-total", lane,
+            f"wire_slots={schedule.wire_slots} but rounds sum to "
+            f"{sum(r.slots for r in schedule.wire_rounds)}")
+    return v
+
+
 def _coverage(code: str, lane: str, steps: int, per_round: int,
               need: int, what: str, v: list[Violation]) -> None:
     have = steps * per_round
@@ -195,6 +286,34 @@ def check_plan(cfg: "EngineConfig", report: "VolumeReport") -> list[Violation]:
             f"config stamps pull_row_cap={cfg.pull_row_cap} but the report "
             f"accounted {report.pull_row_cap} reply rows")
 
+    # a mesh transport executes a RoundSchedule: prove it covers the caps
+    # exactly, and that the report's stamped schedule summary matches the
+    # (deterministically recomputed) schedule the transport will run
+    def audit_schedule(exch, lane, stamped, naive_stamped):
+        sc, naive = exch.schedule, exch.naive_schedule
+        v.extend(check_schedule(sc, exch.caps, lane))
+        covered = (sum(p.length for r in sc.wire_rounds for p in r.parts)
+                   + sum(p.length for p in sc.local_parts))
+        logical = int(np.asarray(exch.caps, np.int64).sum())
+        if covered != logical:
+            bad("sched-wire-words", lane,
+                f"schedule covers {covered} slots but the lane's logical "
+                f"wire words (Σ caps) are {logical}")
+        if stamped != (sc.n_rounds, sc.wire_slots):
+            bad("sched-report-mismatch", lane,
+                f"report stamps scheduled (rounds, slots)={stamped} but the "
+                f"transport's schedule is ({sc.n_rounds}, {sc.wire_slots})")
+        if naive_stamped != (naive.n_rounds, naive.wire_slots):
+            bad("sched-report-mismatch", f"{lane}:naive",
+                f"report stamps naive (rounds, slots)={naive_stamped} but "
+                f"the rotation schedule is "
+                f"({naive.n_rounds}, {naive.wire_slots})")
+        if sc.wire_slots > naive.wire_slots:
+            bad("sched-worse-than-naive", lane,
+                f"scheduled wire slots {sc.wire_slots} exceed the naive "
+                f"rotation's {naive.wire_slots} — the scheduler must never "
+                "regress the padded slot total")
+
     # --- push lane: build the actual transport and audit it ---
     try:
         push_x = make_exchange(cfg.transport, S, cfg.push_cap, cfg.push_caps)
@@ -203,6 +322,10 @@ def check_plan(cfg: "EngineConfig", report: "VolumeReport") -> list[Violation]:
             f"config's push-lane capacities do not build a transport: {e}")
         return v
     v += check_exchange(push_x, "push")
+    if cfg.transport == "mesh":
+        audit_schedule(push_x, "push",
+                       (report.sched_push_rounds, report.sched_push_slots),
+                       (report.naive_push_rounds, report.naive_push_slots))
     push_slots = push_x.round_slots()
     if push_slots != report.wire_push_slots_step:
         bad("wire-slot-total", "push",
@@ -234,6 +357,10 @@ def check_plan(cfg: "EngineConfig", report: "VolumeReport") -> list[Violation]:
                 f"{e}")
             return v
         v += check_exchange(pull_x, "pull")
+        if cfg.transport == "mesh":
+            audit_schedule(pull_x, "pull",
+                           (report.sched_req_rounds, report.sched_req_slots),
+                           (report.naive_req_rounds, report.naive_req_slots))
         req_slots = pull_x.round_slots()
         if req_slots != report.wire_req_slots_step:
             bad("wire-slot-total", "pull",

@@ -13,28 +13,37 @@ device mesh (``launch.make_shard_mesh``), one shard per device:
     (``in_off[d, s] = s·cap``).
 
 ``ragged caps`` (a ragged/mesh plan)
-    per-(src, dest) capped segments routed through ``S-1`` *rotation
-    rounds*: round ``k`` ships block ``(s, (s+k) mod S)`` from every source
-    at once via ``lax.ppermute`` with the rotation permutation, padded to
-    the round's worst pair ``ck = max_s caps[s, (s+k) mod S]`` (an
-    all-to-all decomposed into its diagonals — every device sends and
-    receives exactly one segment per round, the classic ring schedule).
-    Round 0 is the shard's own diagonal: a local copy, no collective.
-    On-device compaction re-places each delivered segment at its static
-    ``in_off`` offset with an out-of-bounds-dropping scatter, so the recv
-    buffer is *identical* to the stacked ragged layout and everything
-    downstream (recv_ok masking, reply routing, conservation proofs) is
-    shared with :class:`~repro.comm.exchange.RaggedExchange` — which this
-    class subclasses precisely so the static maps (and the host-side
+    per-(src, dest) capped segments routed through the physical rounds of a
+    :class:`~repro.comm.round_schedule.RoundSchedule`: each round is one
+    ``lax.ppermute`` over a *partial permutation* of (src, dest) parts,
+    padded to the round's longest part. The scheduler
+    (``round_schedule.best_schedule``) packs and splits chunks across
+    rounds to minimize Σ padded slots — never worse than the historic
+    S−1-diagonal rotation, and always hitting the Birkhoff lower bound
+    ``max(max row sum, max col sum)`` of the off-diagonal caps. The self
+    diagonal is a local copy, no collective. On-device compaction re-places
+    each delivered slice at its static ``in_off + lane_lo`` offset with an
+    out-of-bounds-dropping scatter, so the recv buffer is *identical* to
+    the stacked ragged layout and everything downstream (recv_ok masking,
+    reply routing, conservation proofs) is shared with
+    :class:`~repro.comm.exchange.RaggedExchange` — which this class
+    subclasses precisely so the static maps (and the host-side
     conservation checker over them) are the same object.
+
+The round loop is **double-buffered**: round ``r+1``'s ppermute is issued
+before round ``r``'s on-device compaction, so XLA's scheduler can overlap
+the next wire transfer with the current scatter instead of serializing
+them (the engine pipelines the same way one level up — superstep ``t+1``'s
+wire is issued while superstep ``t``'s fold runs; ``core.engine``).
 
 Wire accounting: ``round_slots()`` stays the *logical* Σ caps (the
 conservation invariant); :meth:`wire_round_slots` is the *physical*
 per-device payload that appears in the compiled HLO's collectives —
 ``S·cap`` for the uniform all-to-all (the resident self-chunk is part of
-the op), ``Σ_{k≥1} ck`` for the rotation rounds (the self-diagonal never
-leaves the device). ``roofline.reconcile_collectives`` asserts the HLO
-against exactly these numbers (docs/mesh.md).
+the op), ``schedule.wire_slots`` for the scheduled rounds (the
+self-diagonal never leaves the device). ``roofline.reconcile_collectives``
+asserts the HLO against exactly these numbers, with a per-round padding
+breakdown (docs/mesh.md).
 
 Booleans are shipped as int32 so every wire slot is the planner's 4-byte
 word — the measured collective bytes then reconcile with ``VolumeReport``
@@ -48,6 +57,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm.exchange import Exchange, RaggedExchange
+from repro.comm.round_schedule import (RoundSchedule, best_schedule,
+                                       rotation_schedule)
 
 
 def _take_row(a, idx):
@@ -74,46 +85,66 @@ class MeshExchange(RaggedExchange):
         S = self.S
         caps = np.asarray(self.caps, np.int64)
         self.uniform = bool((caps == caps[0, 0]).all() and caps[0, 0] >= 1)
-        # rotation rounds: round k ships diagonal (s → (s+k) mod S), padded
-        # to the diagonal's worst pair
+        # physical round structure: the scheduler's best-of candidates
+        # (≤ naive rotation by construction); the naive schedule is kept
+        # for the padding comparison the planner/bench report
+        self.schedule: RoundSchedule = best_schedule(caps)
+        self.naive_schedule: RoundSchedule = rotation_schedule(caps)
+        # per-round routing maps from the schedule's parts: slice
+        # [lane_lo, lane_lo+len) of pair (s, d) rides lanes [0, len) of the
+        # round's padded [S, slots] operand
         self._rounds = []
-        for k in range(S):
-            ck = int(max(caps[s, (s + k) % S] for s in range(S)))
-            if ck == 0:
-                continue
+        for rnd in self.schedule.wire_rounds:
+            ck = rnd.slots
             send = np.zeros((S, ck), np.int32)
             recv = np.full((S, ck), self.in_cap, np.int32)   # in_cap = drop
             gsend = np.zeros((S, ck), np.int32)
             grecv = np.full((S, ck), self.out_cap, np.int32)
-            for s in range(S):
-                d = (s + k) % S
-                c = int(caps[s, d])
-                if c:
-                    lane = np.arange(c)
-                    # forward: src s reads its (s, d) block ...
-                    send[s, :c] = self.block_off[s, d] + lane
-                    # ... and the reply lands back in the same block
-                    grecv[s, :c] = self.block_off[s, d] + lane
-                    # dest d compacts the segment at its static offset ...
-                    recv[d, :c] = self.in_off[d, s] + lane
-                    # ... and reads the reply segment back out of it
-                    gsend[d, :c] = self.in_off[d, s] + lane
+            for p in rnd.parts:
+                lane = p.lane_lo + np.arange(p.length)
+                # forward: src reads its slice of the (s, d) block ...
+                send[p.src, :p.length] = self.block_off[p.src, p.dest] + lane
+                # ... and the reply lands back in the same slice
+                grecv[p.src, :p.length] = (self.block_off[p.src, p.dest]
+                                           + lane)
+                # dest compacts the slice at its static offset ...
+                recv[p.dest, :p.length] = self.in_off[p.dest, p.src] + lane
+                # ... and reads the reply slice back out of it
+                gsend[p.dest, :p.length] = self.in_off[p.dest, p.src] + lane
             self._rounds.append(dict(
-                k=k, ck=ck, send=send, recv=recv, gsend=gsend, grecv=grecv,
-                fwd=[(s, (s + k) % S) for s in range(S)],
-                bwd=[(d, (d - k) % S) for d in range(S)],
+                ck=ck, send=send, recv=recv, gsend=gsend, grecv=grecv,
+                fwd=[(p.src, p.dest) for p in rnd.parts],
+                bwd=[(p.dest, p.src) for p in rnd.parts],
             ))
+        # resident self diagonal: one local copy, never on the wire
+        dparts = self.schedule.local_parts
+        dk = max((p.length for p in dparts), default=0)
+        self._local = None
+        if dk:
+            dsend = np.zeros((S, dk), np.int32)
+            drecv = np.full((S, dk), self.in_cap, np.int32)
+            dgsend = np.zeros((S, dk), np.int32)
+            dgrecv = np.full((S, dk), self.out_cap, np.int32)
+            for p in dparts:
+                lane = np.arange(p.length)
+                dsend[p.src, :p.length] = self.block_off[p.src, p.src] + lane
+                drecv[p.src, :p.length] = self.in_off[p.src, p.src] + lane
+                dgsend[p.src, :p.length] = self.in_off[p.src, p.src] + lane
+                dgrecv[p.src, :p.length] = (self.block_off[p.src, p.src]
+                                            + lane)
+            self._local = dict(send=dsend, recv=drecv,
+                               gsend=dgsend, grecv=dgrecv)
 
     # -- physical wire accounting -------------------------------------------
 
     def wire_round_slots(self) -> int:
         """Slots that cross the collective fabric per *device* per round —
         the payload of the HLO collectives (uniform: the whole all-to-all
-        buffer including the self chunk; ragged: every rotation round's
-        padded segment, self-diagonal excluded)."""
+        buffer including the self chunk; ragged: every scheduled round's
+        padded operand, self-diagonal excluded)."""
         if self.uniform:
             return self.out_cap
-        return sum(r["ck"] for r in self._rounds if r["k"] != 0)
+        return self.schedule.wire_slots
 
     # -- device-local collective routing (inside shard_map) -----------------
 
@@ -122,6 +153,35 @@ class MeshExchange(RaggedExchange):
         if x.dtype == jnp.bool_:
             return fn(x.astype(jnp.int32)).astype(jnp.bool_)
         return fn(x)
+
+    def _run_rounds(self, idx, x, out, rounds, local, send_key, recv_key,
+                    perm_key):
+        """Double-buffered round loop: the ppermute of round ``r+1`` is
+        issued before round ``r``'s compaction scatter, so the next wire
+        transfer overlaps the current on-device placement. The local
+        diagonal copy carries no collective and folds in last."""
+        axis = self.axis_name
+
+        def ship(r):
+            seg = jnp.take(x, _take_row(r[send_key], idx), axis=1)
+            return jax.lax.ppermute(seg, axis, r[perm_key])
+
+        def compact(out, r, seg):
+            return out.at[0, _take_row(r[recv_key], idx)].set(
+                seg[0], mode="drop")
+
+        if rounds:
+            pending = ship(rounds[0])
+            for i in range(1, len(rounds)):
+                nxt = ship(rounds[i])       # issue r+1 before compacting r
+                out = compact(out, rounds[i - 1], pending)
+                pending = nxt
+            out = compact(out, rounds[-1], pending)
+        if local is not None:
+            seg = jnp.take(x, _take_row(local[send_key], idx), axis=1)
+            out = out.at[0, _take_row(local[recv_key], idx)].set(
+                seg[0], mode="drop")
+        return out
 
     def _scatter_local(self, idx, tree):
         S, axis = self.S, self.axis_name
@@ -136,13 +196,8 @@ class MeshExchange(RaggedExchange):
                     y = jnp.swapaxes(y, 0, 1)
                     return y.reshape((1, S * cap) + y.shape[3:])
                 out = jnp.zeros((1, self.in_cap) + x.shape[2:], x.dtype)
-                for r in self._rounds:
-                    seg = jnp.take(x, _take_row(r["send"], idx), axis=1)
-                    if r["k"] != 0:
-                        seg = jax.lax.ppermute(seg, axis, r["fwd"])
-                    out = out.at[0, _take_row(r["recv"], idx)].set(
-                        seg[0], mode="drop")
-                return out
+                return self._run_rounds(idx, x, out, self._rounds,
+                                        self._local, "send", "recv", "fwd")
 
             return self._route(x, go)
 
@@ -163,13 +218,8 @@ class MeshExchange(RaggedExchange):
                     y = jnp.swapaxes(y, 0, 1)
                     return y.reshape((1, S * cap) + y.shape[3:])
                 out = jnp.zeros((1, self.out_cap) + x.shape[2:], x.dtype)
-                for r in self._rounds:
-                    seg = jnp.take(x, _take_row(r["gsend"], idx), axis=1)
-                    if r["k"] != 0:
-                        seg = jax.lax.ppermute(seg, axis, r["bwd"])
-                    out = out.at[0, _take_row(r["grecv"], idx)].set(
-                        seg[0], mode="drop")
-                return out
+                return self._run_rounds(idx, x, out, self._rounds,
+                                        self._local, "gsend", "grecv", "bwd")
 
             return self._route(x, go)
 

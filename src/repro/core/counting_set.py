@@ -54,13 +54,14 @@ class CountingSet:
     the identity for every column).
 
     ``backend`` routes *both* table scatters: ``"scatter"`` is the XLA
-    ``.at[].add`` / ``.at[].max`` path, ``"pallas"`` the tiled
-    one-hot-reduction kernels (``kernels/hist``: ``hist_add`` for counts,
-    ``hist_max`` for the packed key/check-hash rows) — the TPU-native
-    scatter idiom, bitwise-identical to the scatter path (integer adds;
-    idempotent commutative max). ``"auto"`` (default) picks Pallas on a
-    real TPU backend and falls back to scatter elsewhere, so CPU test runs
-    are unchanged."""
+    ``.at[].add`` / ``.at[].max`` path, ``"pallas"`` the fused
+    one-hot-reduction kernel (``kernels/fold_scatter.fold_count_max``:
+    counts and the packed key/check-hash rows reduced from ONE shared
+    one-hot in one pass — the fold-side twin of the mesh pipeline) — the
+    TPU-native scatter idiom, bitwise-identical to the scatter path
+    (integer adds; idempotent commutative max). ``"auto"`` (default) picks
+    Pallas on a real TPU backend and falls back to scatter elsewhere, so
+    CPU test runs are unchanged."""
 
     capacity: int
     n_key_cols: int
@@ -109,18 +110,20 @@ class CountingSet:
         row = jnp.concatenate([keys_u, chk[:, None], (~chk)[:, None]], axis=-1)
         row = jnp.where(valid[:, None], row, jnp.uint32(0))
         if self._use_pallas():
-            from repro.kernels.hist.ops import hist_add, hist_max
+            from repro.kernels.fold_scatter.ops import fold_count_max
 
-            # OOB slots are dropped by the kernels — mask invalid to -1
+            # OOB slots are dropped by the kernel — mask invalid to -1
             mslot = jnp.where(valid, slot, -1)
-            count = state["count"] + hist_add(
-                mslot, amt, cap,
+            # one fused pass forms the one-hot once and reduces both
+            # tables from it (kernels/fold_scatter); merging the fresh
+            # scattered tables is bitwise-identical to the in-place
+            # .at[].add / .at[].max — integer adds commute, max is
+            # idempotent and commutative
+            d_count, d_packed = fold_count_max(
+                mslot, amt, row, cap,
                 cap_tile=self._cap_tile(), interpret=self._interpret())
-            # max-merge of a fresh scattered table: max is idempotent and
-            # commutative, so this equals the in-place .at[].max bit for bit
-            packed = jnp.maximum(state["packed"], hist_max(
-                mslot, row, cap,
-                cap_tile=self._cap_tile(), interpret=self._interpret()))
+            count = state["count"] + d_count
+            packed = jnp.maximum(state["packed"], d_packed)
         else:
             count = state["count"].at[slot].add(amt)
             packed = state["packed"].at[slot].max(row)

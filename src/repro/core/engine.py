@@ -528,23 +528,24 @@ def _pull_setup(gr: ShardedDODGr, st, cfg: EngineConfig, widths,
                                st["valid"], hub_mask)
 
 
-def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
-                    spec: MetaSpec, exch: Exchange):
-    """One pull superstep: request rows, answer, intersect, emit TriangleBatch.
+def _pull_wire(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
+               spec: MetaSpec, exch: Exchange):
+    """The wire half of one pull superstep: build q-requests, route them to
+    the owners, answer with padded rows, and route the reply back.
 
     Both wire movements (the request buffer out, the padded reply back)
     route through the transport; the padded reply — ``pcap·L`` row slots,
     the dominant pull-phase volume — carries only the declared
-    meta(qr)/meta(r) lanes plus the declared meta(q) header lanes; local
-    meta(p)/(pq)/(pr) are gathered at declared width."""
+    meta(qr)/meta(r) lanes plus the declared meta(q) header lanes.
+    Returns ``(rep, n_req)``: the fold-form reply and the request count —
+    everything :func:`_pull_compute` needs, so the engine can issue
+    superstep ``t+1``'s collectives while superstep ``t``'s intersection
+    and fold still run (the mesh pipeline in :func:`_survey_body`)."""
     S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
-    ecap = cfg.pull_edge_cap
     L = gr.d_plus_max
     # reply rows pad to the max *pulled* row length (planner-stamped) — the
     # graph-wide d_plus_max only bounds the local suffix windows
     Lr = cfg.pull_row_cap if cfg.pull_row_cap else L
-    n_steps = max(1, int(np.ceil(np.log2(max(2, Lr)))) + 1)
-    out_cap = exch.out_cap
 
     # wire-form metadata sources (owner side of the reply)
     eqr_i_w = project_lanes(gr.emeta_i, spec.e_qr_i)
@@ -553,20 +554,10 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
     vr_f_w = project_lanes(gr.tmeta_f, spec.vr_f)
     vq_i_w = project_lanes(gr.vmeta_i, spec.vq_i)
     vq_f_w = project_lanes(gr.vmeta_f, spec.vq_f)
-    # fold-form local sources (requester side)
-    vp_i_l = narrow_lanes(gr.vmeta_i, spec.vp_i)
-    vp_f_l = narrow_lanes(gr.vmeta_f, spec.vp_f)
-    epq_i_l = narrow_lanes(gr.emeta_i, spec.e_pq_i)
-    epq_f_l = narrow_lanes(gr.emeta_f, spec.e_pq_f)
-    epr_i_l = narrow_lanes(gr.emeta_i, spec.e_pr_i)
-    epr_f_l = narrow_lanes(gr.emeta_f, spec.e_pr_f)
 
     dest_of = jnp.asarray(exch.dest_of)
     lane_of = jnp.asarray(exch.lane_of)
     cap_of = jnp.asarray(exch.cap_of)
-    # jnp (not np) coercion: a mesh local view hands traced map rows
-    pcap_d = jnp.asarray(exch.caps, jnp.int32)              # [S, S]
-    boff = jnp.asarray(exch.block_off)                      # [S, S]
 
     # --- requester: build q-requests, flat [S, out_cap] ---
     def gen_req(qrank2, qbase, qcount, ord2, nbr, dest_of, lane_of, cap_of):
@@ -626,6 +617,34 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
         vq_i=expand_lanes(rep["vq_i"], spec.vq_i),
         vq_f=expand_lanes(rep["vq_f"], spec.vq_f),
     )
+    return rep, req["ok"].sum(dtype=jnp.float32)
+
+
+def _pull_compute(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
+                  spec: MetaSpec, exch: Exchange, rep):
+    """The fold half of one pull superstep: intersect local suffixes
+    against the pulled rows ``rep`` (from :func:`_pull_wire` at the same
+    ``t``) and emit the TriangleBatch. Purely device-local — no
+    collectives — so the mesh pipeline can overlap it with the next
+    superstep's wire."""
+    S, e_cap, n_loc = gr.S, gr.e_cap, gr.n_loc
+    ecap = cfg.pull_edge_cap
+    L = gr.d_plus_max
+    Lr = cfg.pull_row_cap if cfg.pull_row_cap else L
+    n_steps = max(1, int(np.ceil(np.log2(max(2, Lr)))) + 1)
+    out_cap = exch.out_cap
+
+    # fold-form local sources (requester side)
+    vp_i_l = narrow_lanes(gr.vmeta_i, spec.vp_i)
+    vp_f_l = narrow_lanes(gr.vmeta_f, spec.vp_f)
+    epq_i_l = narrow_lanes(gr.emeta_i, spec.e_pq_i)
+    epq_f_l = narrow_lanes(gr.emeta_f, spec.e_pq_f)
+    epr_i_l = narrow_lanes(gr.emeta_i, spec.e_pr_i)
+    epr_f_l = narrow_lanes(gr.emeta_f, spec.e_pr_f)
+
+    # jnp (not np) coercion: a mesh local view hands traced map rows
+    pcap_d = jnp.asarray(exch.caps, jnp.int32)              # [S, S]
+    boff = jnp.asarray(exch.block_off)                      # [S, S]
 
     # --- requester: intersect local suffixes against pulled rows ---
     if cfg.use_pallas and cfg.pull_kernel in ("auto", "fused"):
@@ -758,7 +777,17 @@ def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
         ps["dest_start2"], ps["ord2"], ps["pull"], gr.row_ptr, gr.edge_src,
         gr.nbr, gr.nbr_d, gr.nbr_h, gr.nbr_new, gr.delta_gen,
         epq_i_l, epq_f_l, epr_i_l, epr_f_l, vp_i_l, vp_f_l, pcap_d, boff, rep)
-    n_req = req["ok"].sum(dtype=jnp.float32)
+    return tri, checked, overflow
+
+
+def _pull_superstep(gr: ShardedDODGr, ps, t, cfg: EngineConfig,
+                    spec: MetaSpec, exch: Exchange):
+    """One pull superstep: request rows, answer, intersect, emit
+    TriangleBatch — the sequential composition of :func:`_pull_wire` and
+    :func:`_pull_compute` (the stacked path; the mesh path interleaves
+    them across supersteps)."""
+    rep, n_req = _pull_wire(gr, ps, t, cfg, spec, exch)
+    tri, checked, overflow = _pull_compute(gr, ps, t, cfg, spec, exch, rep)
     return tri, checked, overflow, n_req
 
 
@@ -865,24 +894,58 @@ def _survey_body(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
     # padding) that crosses the shard axis through the transport
     push_step_words = float(push_exch.round_slots() * w_push)
 
-    def push_step(carry, t):
-        state, stats = carry
+    # On the mesh lowering the superstep loops run as a double-buffered
+    # pipeline: superstep t+1's wire (the scatter/gather collectives) is
+    # issued before superstep t's fold, so XLA can overlap the next
+    # transfer with the current answer/intersect/update. Fold t still
+    # consumes exactly wire t's output and the stats accumulate in the
+    # same order, so results and stats stay bitwise-identical to the
+    # sequential stacked loop (tests/test_mesh.py; docs/mesh.md).
+    pipelined = cfg.transport == "mesh"
+
+    def push_wire(t):
         qr = _gen_push_queries(gr, st, t, push_exch, spec,
                                delta=cfg.delta)
         qx = push_exch.scatter(qr)
         qx = dict(qx, ok=push_exch.apply_recv_ok(qx["ok"]))
         qx = jax.tree.map(lambda x: _constrain(x, cfg), qx)
+        return qx, qr["ok"].sum(dtype=jnp.float32)
+
+    def push_fold(state, stats, qx, n_gen):
         tri = _answer_push_queries(gr, qx, cfg, spec)
         state = jax.vmap(survey.update)(state, tri)
         stats = dict(stats)
-        stats["wedges_pushed"] += qr["ok"].sum(dtype=jnp.float32)
+        stats["wedges_pushed"] += n_gen
         stats["tris_push"] += tri.valid.sum(dtype=jnp.float32)
         stats["wire_push_words"] += push_step_words
-        return (state, stats), None
+        return state, stats
 
-    (state, stats), _ = jax.lax.scan(
-        push_step, (state, stats), jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
-        unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
+    if pipelined and cfg.n_push_steps > 0:
+        qx, n_gen = push_wire(jnp.int32(0))
+
+        def push_pipe(carry, t):
+            state, stats, qx, n_gen = carry
+            qx2, n_gen2 = push_wire(t + 1)   # wire t+1 before fold t
+            state, stats = push_fold(state, stats, qx, n_gen)
+            return (state, stats, qx2, n_gen2), None
+
+        if cfg.n_push_steps > 1:
+            (state, stats, qx, n_gen), _ = jax.lax.scan(
+                push_pipe, (state, stats, qx, n_gen),
+                jnp.arange(cfg.n_push_steps - 1, dtype=jnp.int32),
+                unroll=(cfg.n_push_steps - 1) if cfg.unroll_steps else 1)
+        state, stats = push_fold(state, stats, qx, n_gen)
+    else:
+        def push_step(carry, t):
+            state, stats = carry
+            qx, n_gen = push_wire(t)
+            state, stats = push_fold(state, stats, qx, n_gen)
+            return (state, stats), None
+
+        (state, stats), _ = jax.lax.scan(
+            push_step, (state, stats),
+            jnp.arange(cfg.n_push_steps, dtype=jnp.int32),
+            unroll=cfg.n_push_steps if cfg.unroll_steps else 1)
 
     if hub_on:
         def hub_step(carry, t):
@@ -904,10 +967,9 @@ def _survey_body(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
         req_step_words = float(pull_exch.round_slots() * w_req)
         reply_step_words = float(pull_exch.round_slots() * (w_hdr + Lr * w_row))
 
-        def pull_step(carry, t):
-            state, stats = carry
-            tri, checked, overflow, n_req = _pull_superstep(
-                gr, ps, t, cfg, spec, pull_exch)
+        def pull_fold(state, stats, t, rep, n_req):
+            tri, checked, overflow = _pull_compute(
+                gr, ps, t, cfg, spec, pull_exch, rep)
             state = jax.vmap(survey.update)(state, tri)
             stats = dict(stats)
             stats["wedges_pulled"] += checked.sum()
@@ -916,11 +978,45 @@ def _survey_body(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
             stats["pull_overflow"] += overflow.sum()
             stats["wire_req_words"] += req_step_words
             stats["wire_reply_words"] += reply_step_words
-            return (state, stats), None
+            return state, stats
 
-        (state, stats), _ = jax.lax.scan(
-            pull_step, (state, stats), jnp.arange(cfg.n_pull_steps, dtype=jnp.int32),
-            unroll=cfg.n_pull_steps if cfg.unroll_steps else 1)
+        if pipelined:
+            rep, n_req = _pull_wire(gr, ps, jnp.int32(0), cfg, spec,
+                                    pull_exch)
+
+            def pull_pipe(carry, t):
+                state, stats, rep, n_req = carry
+                rep2, n_req2 = _pull_wire(gr, ps, t + 1, cfg, spec,
+                                          pull_exch)   # wire t+1 ...
+                state, stats = pull_fold(state, stats, t, rep, n_req)
+                return (state, stats, rep2, n_req2), None   # ... fold t
+
+            if cfg.n_pull_steps > 1:
+                (state, stats, rep, n_req), _ = jax.lax.scan(
+                    pull_pipe, (state, stats, rep, n_req),
+                    jnp.arange(cfg.n_pull_steps - 1, dtype=jnp.int32),
+                    unroll=(cfg.n_pull_steps - 1) if cfg.unroll_steps else 1)
+            state, stats = pull_fold(
+                state, stats, jnp.int32(cfg.n_pull_steps - 1), rep, n_req)
+        else:
+            def pull_step(carry, t):
+                state, stats = carry
+                tri, checked, overflow, n_req = _pull_superstep(
+                    gr, ps, t, cfg, spec, pull_exch)
+                state = jax.vmap(survey.update)(state, tri)
+                stats = dict(stats)
+                stats["wedges_pulled"] += checked.sum()
+                stats["tris_pull"] += tri.valid.sum(dtype=jnp.float32)
+                stats["pull_requests"] += n_req
+                stats["pull_overflow"] += overflow.sum()
+                stats["wire_req_words"] += req_step_words
+                stats["wire_reply_words"] += reply_step_words
+                return (state, stats), None
+
+            (state, stats), _ = jax.lax.scan(
+                pull_step, (state, stats),
+                jnp.arange(cfg.n_pull_steps, dtype=jnp.int32),
+                unroll=cfg.n_pull_steps if cfg.unroll_steps else 1)
 
     return state, stats
 

@@ -116,6 +116,21 @@ class VolumeReport:
     push_stream_max: int = 0         # heaviest (src, dest) pushed stream
     pull_groups_max: int = 0         # heaviest (src, dest) pulled groups
     hub_stream_max: int = 0          # heaviest per-shard hub wedge stream
+    # --- mesh round schedule (transport == "mesh" only; zeros otherwise).
+    # The scheduler (comm.round_schedule.best_schedule) and the naive
+    # rotation it must never exceed, per wire lane: physical ppermute
+    # rounds per superstep and Σ padded slots per device per superstep.
+    # MeshExchange recomputes the identical schedule from the same caps
+    # (deterministic host-side), and the static verifier proves these
+    # numbers against it (analysis.conservation.check_schedule). ---
+    sched_push_rounds: int = 0
+    sched_push_slots: int = 0        # == MeshExchange.wire_round_slots()
+    naive_push_rounds: int = 0
+    naive_push_slots: int = 0
+    sched_req_rounds: int = 0
+    sched_req_slots: int = 0
+    naive_req_rounds: int = 0
+    naive_req_slots: int = 0
 
     @property
     def reduction(self) -> float:
@@ -498,6 +513,25 @@ def plan_engine(
     wire_req_bytes = n_pull_steps * req_slots * w_req * 4
     wire_reply_bytes = (n_pull_steps * req_slots
                         * (w_hdr + pull_row_cap * w_row) * 4)
+    # --- mesh round schedule: the planner stamps the same deterministic
+    # schedule the transport will execute, so the report carries the
+    # physical wire structure (and the naive-rotation bound) per lane ---
+    sched = dict(sched_push_rounds=0, sched_push_slots=0,
+                 naive_push_rounds=0, naive_push_slots=0,
+                 sched_req_rounds=0, sched_req_slots=0,
+                 naive_req_rounds=0, naive_req_slots=0)
+    if transport == "mesh":
+        from repro.comm.round_schedule import best_schedule, rotation_schedule
+        for lane, caps_l in (("push", push_caps), ("req", pull_caps)):
+            if caps_l is None or (lane == "req" and not n_pull_steps):
+                continue
+            caps_a = np.asarray(caps_l, np.int64)
+            best = best_schedule(caps_a)
+            naive = rotation_schedule(caps_a)
+            sched[f"sched_{lane}_rounds"] = best.n_rounds
+            sched[f"sched_{lane}_slots"] = best.wire_slots
+            sched[f"naive_{lane}_rounds"] = naive.n_rounds
+            sched[f"naive_{lane}_slots"] = naive.wire_slots
     report = VolumeReport(
         S=S,
         wedges_total=wedges_total,
@@ -532,6 +566,7 @@ def plan_engine(
         push_stream_max=max_push_stream,
         pull_groups_max=pull_groups_max,
         hub_stream_max=int(hub_per_shard.max()) if hub_resolved else 0,
+        **sched,
     )
     cfg = EngineConfig(
         mode=mode,

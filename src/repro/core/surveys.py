@@ -539,16 +539,40 @@ class Enumerate(Survey):
     the finalized result is a *capacity-bounded sample*: once a shard finds
     more than ``capacity`` triangles the ring wraps and earlier entries are
     overwritten (never duplicated — each triangle is written to exactly one
-    slot; which writer survives a wrapped slot is backend-defined, as JAX
-    scatter ties are unordered). ``total_found``
-    stays the exact count and ``overflowed`` reports how many triangles are
-    missing from the buffer (Σ per shard of max(0, n − capacity)).
+    slot). ``total_found`` stays the exact count and ``overflowed`` reports
+    how many triangles are missing from the buffer (Σ per shard of
+    max(0, n − capacity)).
+
+    ``backend`` routes the ring scatter: ``"scatter"`` is XLA's
+    ``.at[].set`` — which writer survives a *wrapped* slot is
+    backend-defined, as JAX scatter ties are unordered; ``"pallas"`` is
+    the ``kernels/fold_scatter.ring_set`` one-hot kernel, whose wrap
+    winner is *deterministic* (highest batch index — the last writer).
+    ``"auto"`` (default) picks Pallas on a real TPU backend and scatter
+    elsewhere, so CPU runs are unchanged. The two backends agree bitwise
+    whenever the buffer does not wrap (every slot has one writer); on
+    wrapped slots only the Pallas winner is reproducible across backends.
     """
 
     meta_spec = MetaSpec.none()
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, backend: str = "auto",
+                 pallas_interpret: bool | None = None):
+        if backend not in ("auto", "pallas", "scatter"):
+            raise ValueError(f"unknown Enumerate backend {backend!r}")
         self.capacity = capacity
+        self.backend = backend
+        self.pallas_interpret = pallas_interpret
+
+    def _use_pallas(self) -> bool:
+        if self.backend == "auto":
+            return jax.default_backend() == "tpu"
+        return self.backend == "pallas"
+
+    def _interpret(self) -> bool:
+        if self.pallas_interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.pallas_interpret
 
     def init(self):
         return dict(
@@ -561,7 +585,17 @@ class Enumerate(Survey):
         offs = jnp.cumsum(amt) - amt + state["n"]
         idx = jnp.where(tri.valid, offs % self.capacity, self.capacity)  # OOB drop for invalid
         rows = jnp.stack([tri.p, tri.q, tri.r], -1)
-        tris = state["tris"].at[idx].set(rows, mode="drop")
+        if self._use_pallas():
+            from repro.kernels.fold_scatter.ops import ring_set
+
+            # carried-table scatter-set with a deterministic wrap winner;
+            # the one-winner select sums masked rows, so invalid rows must
+            # be zeroed (vertex ids are non-negative)
+            rows = jnp.where(tri.valid[:, None], rows, 0)
+            tris = ring_set(state["tris"], idx, rows, self.capacity,
+                            interpret=self._interpret())
+        else:
+            tris = state["tris"].at[idx].set(rows, mode="drop")
         return dict(tris=tris, n=state["n"] + amt.sum())
 
     def merge(self, stacked):

@@ -1,0 +1,142 @@
+"""Pallas TPU kernels: fused fold-side scatters for scatter-bound surveys.
+
+The mesh pipeline overlaps superstep ``t+1``'s wire with superstep ``t``'s
+fold (``core.engine``), so the fold must keep up with the faster scheduled
+wire. The two scatter-bound folds are :class:`~repro.core.counting_set.
+CountingSet` (a count scatter-add plus a packed-record scatter-max per
+update — previously two separate ``hist`` kernels re-reading the slot ids
+and re-forming the same one-hot) and :class:`~repro.core.surveys.Enumerate`
+(a ring-buffer scatter-set XLA lowers to a serial scatter with
+backend-defined collision winners).
+
+Both get the ``hist`` family's native TPU idiom — tiled one-hot
+compare-and-reduce over a (table tile, batch tile) grid, batch innermost
+so each output tile accumulates in VMEM:
+
+``fold_count_max``
+    ONE kernel, two outputs: the [cap] count table (add-reduce) and the
+    [cap, W] packed row table (max-reduce) from a *shared* one-hot match.
+    Integer adds and idempotent/commutative max make both reductions
+    bitwise-identical to the two-kernel composition and to XLA's
+    ``.at[].add`` / ``.at[].max``.
+
+``ring_set``
+    last-writer-wins scatter-set into a carried table: for every table
+    lane the winning batch element is the *highest global batch index*
+    that targets it — a deterministic tie rule, unlike XLA scatter ties
+    (unordered, backend-defined). Batch tiles iterate sequentially, so
+    each tile simply overwrites the lanes it hits; within a tile the
+    winner is an argmax over unique batch indices. The prior table rides
+    in as an input block so untouched lanes pass through unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_max_kernel(slot_ref, amt_ref, row_ref, count_ref, packed_ref, *,
+                      cap_tile):
+    i = pl.program_id(0)   # table tile
+    j = pl.program_id(1)   # batch tile
+
+    @pl.when(j == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+        # all-zeros is the max identity of the packed uint32 layout
+        packed_ref[...] = jnp.zeros_like(packed_ref)
+
+    slots = slot_ref[...]                                    # [bb]
+    base = i * cap_tile
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, cap_tile), 1)
+    hit = slots[:, None] == lane                             # [bb, cap_tile]
+    count_ref[...] += (hit.astype(jnp.int32)
+                       * amt_ref[...][:, None]).sum(axis=0)
+    rows = row_ref[...]                                      # [bb, W]
+    contrib = jnp.where(hit[:, :, None], rows[:, None, :], jnp.uint32(0))
+    packed_ref[...] = jnp.maximum(packed_ref[...], contrib.max(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "bb", "cap_tile",
+                                             "interpret"))
+def fold_count_max_pallas(slots, amounts, rows, capacity: int, bb: int = 256,
+                          cap_tile: int = 256, interpret: bool = True):
+    """One fused pass: count scatter-add + packed-row scatter-max.
+
+    VMEM: the shared [bb, cap_tile] one-hot plus the [bb, cap_tile, W]
+    select; the default 256×256 tiles keep it ≤ 2 MB at W = 8 (the same
+    budget as the unfused ``hist_max``)."""
+    B = slots.shape[0]
+    W = rows.shape[-1]
+    assert B % bb == 0 and capacity % cap_tile == 0
+    grid = (capacity // cap_tile, B // bb)
+    return pl.pallas_call(
+        functools.partial(_count_max_kernel, cap_tile=cap_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (j,)),
+            pl.BlockSpec((bb,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((cap_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((cap_tile, W), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((capacity, W), rows.dtype),
+        ),
+        interpret=interpret,
+    )(slots, amounts, rows)
+
+
+def _ring_set_kernel(prior_ref, slot_ref, row_ref, out_ref, *, cap_tile, bb):
+    i = pl.program_id(0)   # table tile
+    j = pl.program_id(1)   # batch tile
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = prior_ref[...]
+
+    slots = slot_ref[...]                                    # [bb]
+    rows = row_ref[...]                                      # [bb, 3]
+    base = i * cap_tile
+    lane = base + jax.lax.broadcasted_iota(jnp.int32, (1, cap_tile), 1)
+    hit = slots[:, None] == lane                             # [bb, cap_tile]
+    gidx = j * bb + jax.lax.broadcasted_iota(jnp.int32, (bb, 1), 0)
+    cand = jnp.where(hit, gidx, -1)                          # [bb, cap_tile]
+    win = cand.max(axis=0)                                   # [cap_tile]
+    # batch indices are unique, so exactly one element attains the winner
+    sel = hit & (cand == win[None, :])
+    contrib = (rows[:, None, :] * sel[:, :, None]).sum(axis=0)
+    # later batch tiles run later in the sequential grid and overwrite —
+    # the global winner of a lane is the highest batch index that hits it
+    out_ref[...] = jnp.where((win >= 0)[:, None], contrib, out_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "bb", "cap_tile",
+                                             "interpret"))
+def ring_set_pallas(prior, slots, rows, capacity: int, bb: int = 256,
+                    cap_tile: int = 256, interpret: bool = True):
+    """Deterministic last-writer-wins scatter-set over a carried table.
+
+    ``rows`` must be non-negative where ``slots`` is in range (vertex ids
+    are) — the one-winner select sums masked rows."""
+    B = slots.shape[0]
+    assert B % bb == 0 and capacity % cap_tile == 0
+    grid = (capacity // cap_tile, B // bb)
+    return pl.pallas_call(
+        functools.partial(_ring_set_kernel, cap_tile=cap_tile, bb=bb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cap_tile, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb,), lambda i, j: (j,)),
+            pl.BlockSpec((bb, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((cap_tile, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((capacity, 3), rows.dtype),
+        interpret=interpret,
+    )(prior, slots, rows)

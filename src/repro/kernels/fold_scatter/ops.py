@@ -1,0 +1,53 @@
+"""jit'd wrappers for the fused fold scatters (padding + tile sizing)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fold_scatter.fold_scatter import (fold_count_max_pallas,
+                                                     ring_set_pallas)
+
+
+def _fit(cap_tile: int, capacity: int) -> int:
+    cap_tile = min(cap_tile, capacity)
+    while capacity % cap_tile:
+        cap_tile -= 1
+    return max(1, cap_tile)
+
+
+def fold_count_max(slots, amounts, rows, capacity: int, bb: int = 256,
+                   cap_tile: int = 256, interpret: bool = True):
+    """Fused scatter-add + scatter-max at ``slots`` into fresh tables.
+
+    Out-of-range slots (masked entries set to -1) never match a lane and
+    are dropped, mirroring ``hist_add``/``hist_max``.
+    """
+    B = slots.shape[0]
+    bb = min(bb, max(8, B))
+    cap_tile = _fit(cap_tile, capacity)
+    pad = (-B) % bb
+    if pad:
+        slots = jnp.pad(slots, (0, pad), constant_values=-1)
+        amounts = jnp.pad(amounts, (0, pad))
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    return fold_count_max_pallas(slots, amounts, rows, capacity, bb=bb,
+                                 cap_tile=cap_tile, interpret=interpret)
+
+
+def ring_set(prior, slots, rows, capacity: int, bb: int = 256,
+             cap_tile: int = 256, interpret: bool = True):
+    """Last-writer-wins scatter-set of ``rows`` [B, 3] at ``slots`` into
+    the carried ``prior`` [capacity, 3] table (highest batch index wins a
+    contested slot — deterministic, unlike XLA scatter ties).
+
+    Out-of-range slots (invalid entries set to ``capacity``) are dropped.
+    Padding slots are -1: they never match a lane.
+    """
+    B = slots.shape[0]
+    bb = min(bb, max(8, B))
+    cap_tile = _fit(cap_tile, capacity)
+    pad = (-B) % bb
+    if pad:
+        slots = jnp.pad(slots, (0, pad), constant_values=-1)
+        rows = jnp.pad(rows, ((0, pad), (0, 0)))
+    return ring_set_pallas(prior, slots, rows, capacity, bb=bb,
+                           cap_tile=cap_tile, interpret=interpret)

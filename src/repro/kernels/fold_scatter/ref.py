@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the fused fold scatters."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fold_count_max_ref(slots, amounts, rows, capacity: int):
+    """slots [B] int32; amounts [B] int32; rows [B, W] uint32 →
+    (count [capacity] i32, packed [capacity, W] u32). Out-of-range slots
+    are dropped; negatives are remapped past the end first (``.at`` would
+    wrap them)."""
+    s = jnp.where(slots < 0, capacity, slots)
+    count = jnp.zeros((capacity,), jnp.int32).at[s].add(amounts, mode="drop")
+    packed = jnp.zeros((capacity, rows.shape[-1]),
+                       rows.dtype).at[s].max(rows, mode="drop")
+    return count, packed
+
+
+def ring_set_ref(prior, slots, rows, capacity: int):
+    """Deterministic last-writer-wins scatter-set: each table slot keeps
+    the row of the *highest batch index* targeting it (so, unlike raw XLA
+    scatter-set, collisions have a defined winner). Out-of-range slots are
+    dropped; negatives remapped past the end first."""
+    B = slots.shape[0]
+    s = jnp.where((slots < 0) | (slots >= capacity), capacity, slots)
+    gidx = jnp.arange(B, dtype=jnp.int32)
+    win = jnp.full((capacity,), -1, jnp.int32).at[s].max(gidx, mode="drop")
+    sel = (s < capacity) & (win[jnp.clip(s, 0, capacity - 1)] == gidx)
+    tgt = jnp.where(sel, s, capacity)
+    return prior.at[tgt].set(rows, mode="drop")

@@ -195,12 +195,46 @@ def mesh_collective_plan(cfg, S: int | None = None) -> dict:
         S = len(cfg.push_caps)
     per_kind: dict = {}
     lanes = dict(push=0, req=0, reply=0)
+    # per-round padding breakdown: one entry per scheduled wire round
+    # (bytes of pure padding it ships across all devices and supersteps)
+    # plus one *negative* "resident" entry per ragged lane — the logical
+    # self-diagonal words that never cross the wire. Σ entries ==
+    # total_bytes − VolumeReport wire bytes, exactly (asserted by
+    # :func:`reconcile_collectives`).
+    padding_rounds: list = []
+    schedules: dict = {}
 
     def lane(exch, n_steps, words_per_slot, key):
         b = n_steps * S * exch.wire_round_slots() * words_per_slot * 4
         lanes[key] = b
         kind = "all-to-all" if exch.uniform else "collective-permute"
         per_kind[kind] = per_kind.get(kind, 0) + b
+        if exch.uniform:
+            # the all-to-all ships the exact logical block grid: no padding
+            padding_rounds.append(dict(lane=key, round=0, slots=exch.out_cap,
+                                       bytes=0))
+            return
+        sc, naive = exch.schedule, exch.naive_schedule
+        schedules[key] = dict(
+            method=sc.method, rounds=sc.n_rounds, wire_slots=sc.wire_slots,
+            naive_rounds=naive.n_rounds, naive_slots=naive.wire_slots,
+            # wire padding in bytes (all devices, all supersteps): what the
+            # schedule actually pads vs what the historic rotation would —
+            # the bench's regression-guarded figure of merit
+            padding_bytes=n_steps * sc.padding_slots() * words_per_slot * 4,
+            naive_padding_bytes=(n_steps * naive.padding_slots()
+                                 * words_per_slot * 4))
+        for i, rnd in enumerate(sc.wire_rounds):
+            shipped = sum(p.length for p in rnd.parts)
+            padding_rounds.append(dict(
+                lane=key, round=i, slots=rnd.slots,
+                bytes=n_steps * (S * rnd.slots - shipped)
+                      * words_per_slot * 4))
+        resident = sum(p.length for p in sc.local_parts)
+        if resident:
+            padding_rounds.append(dict(
+                lane=key, round=-1, slots=0,
+                bytes=-n_steps * resident * words_per_slot * 4))
 
     push = make_exchange("mesh", S, cfg.push_cap, cfg.push_caps)
     lane(push, cfg.n_push_steps, w_push, "push")
@@ -211,7 +245,8 @@ def mesh_collective_plan(cfg, S: int | None = None) -> dict:
              "reply")
     total = sum(lanes.values())
     return dict(per_kind=per_kind, lanes=lanes, total_bytes=total,
-                per_device_bytes=total // S, n_devices=S)
+                per_device_bytes=total // S, n_devices=S,
+                padding_rounds=padding_rounds, schedules=schedules)
 
 
 def reconcile_collectives(hlo_or_compiled, cfg, S: int | None = None,
@@ -251,5 +286,14 @@ def reconcile_collectives(hlo_or_compiled, cfg, S: int | None = None,
         logical = (volume.wire_push_bytes + volume.wire_req_bytes
                    + volume.wire_reply_bytes)
         out["volume_wire_bytes"] = logical
-        out["padding_bytes"] = plan["total_bytes"] - logical
+        # the padding scalar is the *sum of the per-round breakdown* (each
+        # scheduled round's pure-padding bytes, minus the resident
+        # self-diagonal words that never hit the wire) — and must equal
+        # the old total−logical derivation identically, or the breakdown
+        # has drifted from the schedule
+        out["padding_rounds"] = plan["padding_rounds"]
+        out["padding_bytes"] = sum(e["bytes"] for e in plan["padding_rounds"])
+        assert out["padding_bytes"] == plan["total_bytes"] - logical, (
+            "per-round padding breakdown disagrees with plan−logical: "
+            f"{out['padding_bytes']} != {plan['total_bytes']} - {logical}")
     return out

@@ -28,7 +28,20 @@ import sys
 import time
 
 
-PADDING_REGRESSION_TOL = 1.10   # >10% more wire padding than baseline fails
+PADDING_REGRESSION_TOL = 1.10   # kept for external importers
+
+# derived keys the --compare step GATES (>10% the wrong way fails CI).
+# direction "max": the value must not grow past baseline * tol (costs —
+# e.g. the round scheduler's deterministic wire padding); direction
+# "min": it must not fall below baseline / tol (wins the serving layer
+# is supposed to deliver — plan-cache speedup, coalesced throughput).
+# Rows where either side lacks the key are never gated, so suites can
+# grow keys across PRs without breaking old baselines.
+REGRESSION_GATES = {
+    "wire_padding_B": ("max", PADDING_REGRESSION_TOL),
+    "warm_plan_speedup": ("min", 1.10),
+    "coalesced_qps_x": ("min", 1.10),
+}
 
 
 def compare(records: list[dict], baseline_path: str) -> int:
@@ -36,8 +49,8 @@ def compare(records: list[dict], baseline_path: str) -> int:
     wall-time ratio per shared row; one-sided rows are noted, not fatal.
 
     Wall-time ratios are informational (CPU benches are noisy), but the
-    round scheduler's ``wire_padding_B`` is *deterministic* — a shared row
-    whose padding grew past :data:`PADDING_REGRESSION_TOL` is printed as a
+    derived keys in :data:`REGRESSION_GATES` are load-bearing — a shared
+    row whose gated value moved >10% the wrong way is printed as a
     regression and counted in the returned value (``main`` exits nonzero).
     """
     with open(baseline_path) as f:
@@ -55,21 +68,23 @@ def compare(records: list[dict], baseline_path: str) -> int:
         b, n = old[key]["us_per_call"], new[key]["us_per_call"]
         ratio = f"{n / b:.2f}" if b else "n/a"
         print(f"{key[1]},{b:.1f},{n:.1f},{ratio}")
-        pb = old[key].get("derived", {}).get("wire_padding_B")
-        pn = new[key].get("derived", {}).get("wire_padding_B")
-        if pb is not None and pn is not None and \
-                pn > pb * PADDING_REGRESSION_TOL and pn > pb:
-            regressions += 1
-            print(f"# PADDING REGRESSION {key[1]}: wire_padding_B "
-                  f"{pb} -> {pn} "
-                  f"(x{pn / pb:.2f} > x{PADDING_REGRESSION_TOL:.2f})"
-                  if pb else
-                  f"# PADDING REGRESSION {key[1]}: wire_padding_B "
-                  f"{pb} -> {pn}")
+        for gate, (direction, tol) in REGRESSION_GATES.items():
+            gb = old[key].get("derived", {}).get(gate)
+            gn = new[key].get("derived", {}).get(gate)
+            if gb is None or gn is None or not gb:
+                continue
+            worse = (gn > gb * tol if direction == "max"
+                     else gn < gb / tol)
+            if worse:
+                regressions += 1
+                print(f"# REGRESSION {key[1]}: {gate} {gb} -> {gn} "
+                      f"(x{gn / gb:.2f}, allowed "
+                      f"{'<=' if direction == 'max' else '>='} "
+                      f"x{tol if direction == 'max' else 1 / tol:.2f})")
     for key in sorted(set(old) - set(new)):
         print(f"{key[1]},{old[key]['us_per_call']:.1f},,baseline-only")
     if regressions:
-        print(f"# {regressions} padding regression(s) vs {baseline_path}",
+        print(f"# {regressions} gated regression(s) vs {baseline_path}",
               file=sys.stderr)
     return regressions
 
@@ -88,7 +103,8 @@ def main() -> None:
 
     from benchmarks import (bench_closure, bench_counting, bench_kernels,
                             bench_metadata, bench_multi_survey,
-                            bench_pushpull, bench_scaling, bench_streaming)
+                            bench_pushpull, bench_scaling, bench_serve,
+                            bench_streaming)
 
     suites = dict(
         pushpull=bench_pushpull,     # Tab. 3 / Tab. 4 + transport/hub cells
@@ -99,6 +115,7 @@ def main() -> None:
         kernels=bench_kernels,       # kernel layer
         multi_survey=bench_multi_survey,  # SurveyBundle amortization + DOULION
         streaming=bench_streaming,   # delta engine vs full recompute
+        serve=bench_serve,           # plan cache + coalescing + ingest overlap
     )
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only.split(",")}

@@ -134,6 +134,14 @@ class ShardedDODGr:
     hub_theta: int = 0
     n_hubs: int = 0
     hub_len: int = 1
+    # --- hub-row sourcing (static): "frontier" = rows rebuilt from this
+    # view's own edges (the historic inline build); "union" = rows served
+    # from a HubTableCache across delta epochs (each row is the hub's full
+    # union Adj₊ — a superset of its frontier row). Union rows are only
+    # ever stamped on delta frontiers, where the ≥1-new-edge fold mask
+    # provably discards every extra (all-old) table hit, so results stay
+    # bitwise-identical to a frontier-row build (tests/test_hub_reuse.py) ---
+    hub_rows: str = "frontier"
 
     def __post_init__(self):
         pass
@@ -160,7 +168,7 @@ REPLICATED_FIELDS = (
 )
 META_FIELDS = ("S", "n_global", "n_loc", "e_cap", "d_plus_max",
                "sample_p", "sample_seed", "orient", "epoch", "is_delta",
-               "hub_theta", "n_hubs", "hub_len")
+               "hub_theta", "n_hubs", "hub_len", "hub_rows")
 
 jax.tree_util.register_dataclass(
     ShardedDODGr,
@@ -288,11 +296,190 @@ def delta_gen_mask(q_s: np.ndarray, row_start: np.ndarray, row_len: np.ndarray,
     return new_s | suffix_new | (t_q & suffix_touched)
 
 
+class HubTableCache:
+    """Replicate-once / refresh-on-touch hub tables across delta epochs.
+
+    The historic :func:`shard_delta` path rebuilds every ``hub_*`` array
+    from the epoch's frontier on every batch — O(frontier) gather + sort
+    work per epoch even when the batch never goes near most hubs. This
+    cache instead maintains the **oriented union adjacency** host-side
+    (seeded once from the base graph, then advanced by each epoch's compact
+    overlay in O(batch) inserts) and serves hub rows straight out of it:
+
+    * an **untouched** hub's row is copied verbatim from the cache —
+      bitwise-stable across epochs because the epoch-stable orientation key
+      ``(0, hash(v), v)`` never moves and metadata is immutable;
+    * a **touched** hub's row already holds the freshly inserted overlay
+      edges; only its per-entry newness flags are recomputed against the
+      current epoch's delta keys.
+
+    Served rows are the hub's full *union* ``Adj₊`` — a superset of the
+    frontier row the inline build would produce. That is exact for the
+    delta engine: any extra table hit closes a triangle whose three edges
+    are all old (a new ``pq``/``pr`` forces ``q``/``r`` into the touched
+    set, putting ``qr`` in the frontier row too), and the hub fold's
+    ``≥ 1 new edge`` mask discards exactly those, so survey results are
+    bitwise-identical to a per-epoch rebuild (tests/test_hub_reuse.py).
+    Requires ``orient="stable"`` — under the degree key a vertex's row
+    order (and the hub set itself) legally moves between epochs.
+    """
+
+    def __init__(self, base: HostGraph, orient: str = "stable"):
+        if orient != "stable":
+            raise ValueError(
+                "HubTableCache requires orient='stable': union rows are "
+                "only epoch-stable under the (0, hash, id) key — the "
+                f"degree key reorders rows as batches arrive (got "
+                f"{orient!r})")
+        self.orient = orient
+        self.at_epoch = 0   # chain cursor: last overlay folded in
+        self.rows_reused = 0      # cumulative: rows served verbatim
+        self.rows_refreshed = 0   # cumulative: rows with newness recomputed
+        self.last_build: dict = {}
+        self._rows: dict[int, dict] = {}   # pivot -> sorted union Adj₊ row
+        self._vmeta_i = np.asarray(base.vmeta_i)
+        self._vmeta_f = np.asarray(base.vmeta_f)
+        self._dei, self._def = base.spec.dei, base.spec.def_
+        self._new_keys = np.zeros(0, np.int64)   # this epoch's delta edges
+        self._touched_pivots: set = set()
+        self._ingest(base.src, base.dst, base.emeta_i, base.emeta_f)
+
+    @staticmethod
+    def _orient_stable(src, dst):
+        """Per-edge stable orientation — identical to
+        :func:`orient_edges` with the zero degree component."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        h_u = splitmix32_np(src.astype(np.uint32)).astype(np.int64)
+        h_v = splitmix32_np(dst.astype(np.uint32)).astype(np.int64)
+        u_first = (h_u < h_v) | ((h_u == h_v) & (src < dst))
+        p = np.where(u_first, src, dst)
+        q = np.where(u_first, dst, src)
+        hq = np.where(u_first, h_v, h_u)
+        return p, q, hq
+
+    def _ingest(self, src, dst, emeta_i, emeta_f) -> np.ndarray:
+        """Insert oriented edges into their pivot rows, keeping each row
+        sorted by the (hash, id) key — the shard layer's within-row order.
+        Returns the distinct pivot ids whose rows changed."""
+        if len(src) == 0:
+            return np.zeros(0, np.int64)
+        p, q, hq = self._orient_stable(src, dst)
+        emeta_i = np.asarray(emeta_i, np.int32).reshape(len(p), self._dei)
+        emeta_f = np.asarray(emeta_f, np.float32).reshape(len(p), self._def)
+        order = np.lexsort((q, hq, p))
+        p, q, hq = p[order], q[order], hq[order]
+        emeta_i, emeta_f = emeta_i[order], emeta_f[order]
+        piv, starts = np.unique(p, return_index=True)
+        bounds = np.append(starts, len(p))
+        for i, v in enumerate(piv):
+            lo, hi = bounds[i], bounds[i + 1]
+            add = dict(nbr=q[lo:hi], h=hq[lo:hi].astype(np.uint32),
+                       eqr_i=emeta_i[lo:hi], eqr_f=emeta_f[lo:hi])
+            row = self._rows.get(int(v))
+            if row is None:
+                self._rows[int(v)] = add
+                continue
+            nbr = np.concatenate([row["nbr"], add["nbr"]])
+            h = np.concatenate([row["h"], add["h"]])
+            srt = np.lexsort((nbr, h.astype(np.int64)))
+            self._rows[int(v)] = dict(
+                nbr=nbr[srt], h=h[srt],
+                eqr_i=np.concatenate([row["eqr_i"], add["eqr_i"]])[srt],
+                eqr_f=np.concatenate([row["eqr_f"], add["eqr_f"]])[srt])
+        return piv
+
+    def advance(self, dg: DeltaGraph) -> None:
+        """Fold one epoch's overlay into the union rows. Idempotent at the
+        current epoch; epochs must arrive in order (no gaps) — the cache is
+        a chain over the exact batch history, like the delta engine's
+        accumulator."""
+        if dg.epoch == self.at_epoch:
+            return
+        if dg.epoch != self.at_epoch + 1:
+            raise ValueError(
+                f"HubTableCache is at epoch {self.at_epoch} but the delta "
+                f"graph is at epoch {dg.epoch}; advance() must see every "
+                "epoch in order")
+        piv = self._ingest(dg.d_src, dg.d_dst, dg.d_emeta_i, dg.d_emeta_f)
+        p, q, _ = self._orient_stable(dg.d_src, dg.d_dst)
+        self._new_keys = (p << np.int64(32)) | q
+        self._touched_pivots = set(int(v) for v in piv)
+        # base vmeta may have grown with the vertex set; existing rows are
+        # immutable (append_edges only extends), so gathers stay bitwise
+        self._vmeta_i = np.asarray(dg.base.vmeta_i)
+        self._vmeta_f = np.asarray(dg.base.vmeta_f)
+        self.at_epoch = dg.epoch
+
+    def build(self, hub_ids: np.ndarray) -> dict:
+        """Assemble the replicated ``hub_*`` arrays for this epoch's hub set
+        from the cached union rows — the ``hub_tables`` argument of
+        :func:`shard_dodgr`. Untouched rows are served verbatim
+        (``rows_reused``); touched rows get their newness flags recomputed
+        against the epoch's delta keys (``rows_refreshed``)."""
+        hub_ids = np.asarray(hub_ids, np.int64)
+        n_hubs = len(hub_ids)
+        hc = max(1, n_hubs)
+        rows = [self._rows.get(int(v)) for v in hub_ids]
+        lens = [0 if r is None else len(r["nbr"]) for r in rows]
+        hub_len = max(1, max(lens, default=1))
+        dvi, dvf = self._vmeta_i.shape[1], self._vmeta_f.shape[1]
+        t = dict(
+            hub_row_len=np.zeros(hc, np.int32),
+            hub_nbr=np.full((hc, hub_len), PAD_ID, np.int32),
+            hub_nbr_d=np.full((hc, hub_len), PAD_D, np.int32),
+            hub_nbr_h=np.zeros((hc, hub_len), np.uint32),
+            hub_nbr_new=np.zeros((hc, hub_len), bool),
+            hub_eqr_i=np.zeros((hc, hub_len, self._dei), np.int32),
+            hub_eqr_f=np.zeros((hc, hub_len, self._def), np.float32),
+            hub_tmeta_i=np.zeros((hc, hub_len, dvi), np.int32),
+            hub_tmeta_f=np.zeros((hc, hub_len, dvf), np.float32),
+            hub_vmeta_i=np.zeros((hc, dvi), np.int32),
+            hub_vmeta_f=np.zeros((hc, dvf), np.float32),
+        )
+        reused = refreshed = 0
+        for i, (v, row) in enumerate(zip(hub_ids, rows)):
+            if row is None:
+                reused += 1
+                continue
+            k = lens[i]
+            t["hub_row_len"][i] = k
+            t["hub_nbr"][i, :k] = row["nbr"]
+            t["hub_nbr_d"][i, :k] = 0   # stable key: degree component is 0
+            t["hub_nbr_h"][i, :k] = row["h"]
+            t["hub_eqr_i"][i, :k] = row["eqr_i"]
+            t["hub_eqr_f"][i, :k] = row["eqr_f"]
+            t["hub_tmeta_i"][i, :k] = self._vmeta_i[row["nbr"]]
+            t["hub_tmeta_f"][i, :k] = self._vmeta_f[row["nbr"]]
+            if int(v) in self._touched_pivots:
+                key = (np.int64(v) << np.int64(32)) | row["nbr"]
+                t["hub_nbr_new"][i, :k] = np.isin(key, self._new_keys)
+                refreshed += 1
+            else:
+                reused += 1
+        if n_hubs:
+            t["hub_vmeta_i"][:n_hubs] = self._vmeta_i[hub_ids]
+            t["hub_vmeta_f"][:n_hubs] = self._vmeta_f[hub_ids]
+        self.rows_reused += reused
+        self.rows_refreshed += refreshed
+        self.last_build = dict(epoch=self.at_epoch, n_hubs=n_hubs,
+                               rows_reused=reused, rows_refreshed=refreshed)
+        t.update(hub_ids=hub_ids, hub_len=hub_len, hub_rows="union")
+        return t
+
+    def nbytes(self) -> int:
+        """Host-resident bytes of the cached union rows."""
+        return sum(int(a.nbytes) for row in self._rows.values()
+                   for a in row.values())
+
+
 def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
                 sample_p: float = 1.0, sample_seed: int = 0,
                 edge_new: np.ndarray | None = None, orient: str = "degree",
                 epoch: int = 0,
-                hub_theta: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
+                hub_theta: int = 0,
+                hub_tables: dict | None = None
+                ) -> tuple[ShardedDODGr, RoutingStats]:
     """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
 
     ``sample_p < 1`` ingests a DOULION-sparsified view of ``g`` (see
@@ -316,6 +503,12 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     wedges locally. θ normally comes from the planner
     (``pushpull.plan_engine(..., hub_theta='auto')``) — pass the same value
     here; provenance is cross-checked at run time.
+
+    ``hub_tables`` (a :meth:`HubTableCache.build` result) substitutes
+    cache-served union rows for the inline per-view rebuild — the
+    hub-table-reuse path of :func:`shard_delta`. The hub *set* is still
+    derived from this view's degrees and must match the prebuilt ids
+    exactly; the result is stamped ``hub_rows="union"``.
     """
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
@@ -389,48 +582,76 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     if hub_theta < 0:
         raise ValueError(f"hub_theta must be ≥ 0, got {hub_theta}")
     n_hubs = 0
+    hub_ids = np.zeros(0, np.int64)
     if hub_theta >= 1:
         tdeg = deg if orient == "degree" else g.degrees()
         hub_ids = np.nonzero(tdeg >= hub_theta)[0]
         n_hubs = len(hub_ids)
     hc = max(1, n_hubs)
+    hub_rows = "frontier"
     hub_len = 1
-    hub_row_len = np.zeros(hc, np.int32)
     hub_of_q = None
     if n_hubs:
         hub_id_of = np.full(g.n, -1, np.int32)
         hub_id_of[hub_ids] = np.arange(n_hubs, dtype=np.int32)
-        hub_row_len[:n_hubs] = d_plus[hub_ids]
-        hub_len = max(1, int(d_plus[hub_ids].max()))
         hub_of_q = hub_id_of[q_s]
-    hub_nbr = alloc((hc, hub_len), np.int32, PAD_ID)
-    hub_nbr_d = alloc((hc, hub_len), np.int32, PAD_D)
-    hub_nbr_h = alloc((hc, hub_len), np.uint32)
-    hub_nbr_new = alloc((hc, hub_len), bool, False)
-    hub_eqr_i = alloc((hc, hub_len, dei), np.int32)
-    hub_eqr_f = alloc((hc, hub_len, def_), np.float32)
-    hub_tmeta_i = alloc((hc, hub_len, dvi), np.int32)
-    hub_tmeta_f = alloc((hc, hub_len, dvf), np.float32)
-    hub_vmeta_i = alloc((hc, dvi), np.int32)
-    hub_vmeta_f = alloc((hc, dvf), np.float32)
+    if hub_tables is not None and hub_theta >= 1:
+        # cache-served union rows (HubTableCache.build): the hub SET must
+        # still be this view's — the planner removed exactly these wedges
+        # from the wire lanes, and nbr_hub below marks exactly these edges
+        if not np.array_equal(np.asarray(hub_tables["hub_ids"], np.int64),
+                              hub_ids.astype(np.int64)):
+            raise ValueError(
+                "hub_tables was built for a different hub set than "
+                f"deg ≥ {hub_theta} selects in this view; build it from "
+                "this epoch's frontier degrees")
+        hub_rows = str(hub_tables["hub_rows"])
+        hub_len = int(hub_tables["hub_len"])
+        hub_row_len = np.asarray(hub_tables["hub_row_len"], np.int32)
+        hub_nbr = np.asarray(hub_tables["hub_nbr"], np.int32)
+        hub_nbr_d = np.asarray(hub_tables["hub_nbr_d"], np.int32)
+        hub_nbr_h = np.asarray(hub_tables["hub_nbr_h"], np.uint32)
+        hub_nbr_new = np.asarray(hub_tables["hub_nbr_new"], bool)
+        hub_eqr_i = np.asarray(hub_tables["hub_eqr_i"], np.int32)
+        hub_eqr_f = np.asarray(hub_tables["hub_eqr_f"], np.float32)
+        hub_tmeta_i = np.asarray(hub_tables["hub_tmeta_i"], np.int32)
+        hub_tmeta_f = np.asarray(hub_tables["hub_tmeta_f"], np.float32)
+        hub_vmeta_i = np.asarray(hub_tables["hub_vmeta_i"], np.int32)
+        hub_vmeta_f = np.asarray(hub_tables["hub_vmeta_f"], np.float32)
+    else:
+        hub_row_len = np.zeros(hc, np.int32)
+        if n_hubs:
+            hub_row_len[:n_hubs] = d_plus[hub_ids]
+            hub_len = max(1, int(d_plus[hub_ids].max()))
+        hub_nbr = alloc((hc, hub_len), np.int32, PAD_ID)
+        hub_nbr_d = alloc((hc, hub_len), np.int32, PAD_D)
+        hub_nbr_h = alloc((hc, hub_len), np.uint32)
+        hub_nbr_new = alloc((hc, hub_len), bool, False)
+        hub_eqr_i = alloc((hc, hub_len, dei), np.int32)
+        hub_eqr_f = alloc((hc, hub_len, def_), np.float32)
+        hub_tmeta_i = alloc((hc, hub_len, dvi), np.int32)
+        hub_tmeta_f = alloc((hc, hub_len, dvf), np.float32)
+        hub_vmeta_i = alloc((hc, dvi), np.int32)
+        hub_vmeta_f = alloc((hc, dvf), np.float32)
+        if n_hubs:
+            # rows of hub pivots are contiguous runs of the sorted edge
+            # list, so the replicated table is a verbatim copy of the owner
+            # shards' rows
+            he = np.nonzero(hub_id_of[p_s] >= 0)[0]
+            hid = hub_id_of[p_s[he]]
+            hpos = pos_in_row[he]
+            hub_nbr[hid, hpos] = q_s[he]
+            hub_nbr_d[hid, hpos] = deg[q_s[he]]
+            hub_nbr_h[hid, hpos] = h[q_s[he]].astype(np.uint32)
+            hub_eqr_i[hid, hpos] = emeta_i_src[he]
+            hub_eqr_f[hid, hpos] = emeta_f_src[he]
+            hub_tmeta_i[hid, hpos] = g.vmeta_i[q_s[he]]
+            hub_tmeta_f[hid, hpos] = g.vmeta_f[q_s[he]]
+            hub_vmeta_i[:n_hubs] = g.vmeta_i[hub_ids]
+            hub_vmeta_f[:n_hubs] = g.vmeta_f[hub_ids]
+            if new_s is not None:
+                hub_nbr_new[hid, hpos] = new_s[he]
     nbr_hub = alloc((S, e_cap), np.int32, -1)
-    if n_hubs:
-        # rows of hub pivots are contiguous runs of the sorted edge list, so
-        # the replicated table is a verbatim copy of the owner shards' rows
-        he = np.nonzero(hub_id_of[p_s] >= 0)[0]
-        hid = hub_id_of[p_s[he]]
-        hpos = pos_in_row[he]
-        hub_nbr[hid, hpos] = q_s[he]
-        hub_nbr_d[hid, hpos] = deg[q_s[he]]
-        hub_nbr_h[hid, hpos] = h[q_s[he]].astype(np.uint32)
-        hub_eqr_i[hid, hpos] = emeta_i_src[he]
-        hub_eqr_f[hid, hpos] = emeta_f_src[he]
-        hub_tmeta_i[hid, hpos] = g.vmeta_i[q_s[he]]
-        hub_tmeta_f[hid, hpos] = g.vmeta_f[q_s[he]]
-        hub_vmeta_i[:n_hubs] = g.vmeta_i[hub_ids]
-        hub_vmeta_f[:n_hubs] = g.vmeta_f[hub_ids]
-        if new_s is not None:
-            hub_nbr_new[hid, hpos] = new_s[he]
 
     for s in range(S):
         lo, hi = start[s], start[s + 1]
@@ -479,6 +700,7 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         sample_p=sample_p, sample_seed=sample_seed,
         orient=orient, epoch=epoch, is_delta=edge_new is not None,
         hub_theta=hub_theta, n_hubs=n_hubs, hub_len=hub_len,
+        hub_rows=hub_rows,
         row_ptr=jnp.asarray(row_ptr), edge_src=jnp.asarray(edge_src),
         nbr=jnp.asarray(nbr), nbr_d=jnp.asarray(nbr_d),
         nbr_h=jnp.asarray(nbr_h), nbr_dplus=jnp.asarray(nbr_dp),
@@ -503,7 +725,9 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
 
 def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
                 orient: str = "stable",
-                hub_theta: int = 0) -> tuple[ShardedDODGr, RoutingStats]:
+                hub_theta: int = 0,
+                hub_cache: HubTableCache | None = None
+                ) -> tuple[ShardedDODGr, RoutingStats]:
     """Shard the epoch's delta frontier with the same cyclic owner map as the
     full snapshot (owner ``v % S`` is id-based, so frontier shards align with
     union shards) and stamp epoch provenance.
@@ -516,10 +740,29 @@ def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
     frontier subgraph — a hub the batch touches keeps its full row there),
     the lever against the hub-touching frontier blow-up; pass the θ from
     ``pushpull.plan_delta(..., hub_theta='auto')`` for this epoch.
+
+    ``hub_cache`` (a :class:`HubTableCache` seeded from the stream's base)
+    replaces the per-epoch ``hub_*`` rebuild with cache-served union rows:
+    the cache is advanced to this epoch's overlay (O(batch) inserts), only
+    rows the batch touched get their newness flags refreshed, and survey
+    results stay bitwise-identical to the rebuild path (the ≥ 1-new-edge
+    fold mask discards the union rows' extra all-old entries — see
+    :class:`HubTableCache`). Requires ``orient="stable"``.
     """
     h, edge_new = dg.frontier()
+    hub_tables = None
+    if hub_cache is not None and hub_theta >= 1:
+        if orient != "stable":
+            raise ValueError(
+                "shard_delta(hub_cache=...) requires orient='stable' — "
+                "union hub rows are only epoch-stable under the "
+                f"(0, hash, id) key (got {orient!r})")
+        hub_cache.advance(dg)
+        hub_tables = hub_cache.build(
+            np.nonzero(h.degrees() >= hub_theta)[0])
     return shard_dodgr(h, S, e_cap=e_cap, edge_new=edge_new, orient=orient,
-                       epoch=dg.epoch, hub_theta=hub_theta)
+                       epoch=dg.epoch, hub_theta=hub_theta,
+                       hub_tables=hub_tables)
 
 
 def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,

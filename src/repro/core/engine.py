@@ -1223,6 +1223,26 @@ def survey_push_pull(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig,
     return _finalize_run(survey, cfg, merged, stats)
 
 
+def survey_with_fn(gr: ShardedDODGr, survey: Survey, cfg: EngineConfig, fn):
+    """Run a *pre-built* jitted survey closure (``jax.jit(make_survey_fn(
+    survey, cfg))`` or its raw result) through the same provenance check and
+    host epilogue as the one-shot entry points.
+
+    This is the serving fast path: a plan-cache hit replays the cached
+    closure against the cached shards and skips ``plan_engine``, re-sharding
+    and recompilation entirely — bitwise-identical to a cold
+    :func:`survey_push_only`/:func:`survey_push_pull` run because both paths
+    execute the identical traced program on the identical arrays (the
+    warm == cold == solo entry of docs/determinism.md's identity lattice).
+    The caller is responsible for pairing ``fn`` with the ``(survey, cfg)``
+    it was built from; provenance between ``gr`` and ``cfg`` is still
+    cross-checked here, so a stale graph can never run under a cached plan.
+    """
+    _check_provenance(gr, cfg)
+    merged, stats = fn(gr)
+    return _finalize_run(survey, cfg, merged, stats)
+
+
 # ---------------------------------------------------------------------------
 # epoch-incremental entry point (delta engine)
 

@@ -38,8 +38,9 @@ Two further levers on top of the push-vs-pull split (ISSUE 4):
 """
 from __future__ import annotations
 
+import hashlib
 import weakref
-from dataclasses import dataclass
+from dataclasses import dataclass, fields as dc_fields
 
 import numpy as np
 
@@ -150,11 +151,119 @@ class VolumeReport:
                 + self.wire_reply_bytes + self.hub_table_bytes)
 
 
+# ---------------------------------------------------------------------------
+# content keys (serving layer): pure functions from provenance stamps to
+# stable hex digests, so a plan cache can recognize "the same question
+# against the same graph" across survey instances, epochs, and processes.
+
+
+def _canon(obj):
+    """Canonical, hashable encoding of a survey parameter value. Recurses
+    into nested surveys (bundles), MetaSpecs, containers, and numpy scalars;
+    anything else falls back to ``repr`` (stable for the plain-value params
+    every built-in survey holds)."""
+    if isinstance(obj, Survey):
+        return ("survey", type(obj).__module__, type(obj).__qualname__,
+                _canon(_survey_params(obj)))
+    if isinstance(obj, MetaSpec):
+        return ("metaspec",) + tuple(
+            (f.name, _canon(getattr(obj, f.name))) for f in dc_fields(obj))
+    if isinstance(obj, dict):
+        return ("dict",) + tuple(sorted(
+            (str(k), _canon(v)) for k, v in obj.items()))
+    if isinstance(obj, (tuple, list)):
+        return ("seq",) + tuple(_canon(v) for v in obj)
+    if isinstance(obj, np.generic):
+        return ("np", obj.item())
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    return ("repr", repr(obj))
+
+
+def _survey_params(survey) -> dict:
+    """The survey's constructor-derived attributes, whether it stores them
+    in ``__dict__`` or in ``__slots__`` (the non-weakref-able case)."""
+    d = getattr(survey, "__dict__", None)
+    if d is not None:
+        return d
+    out = {}
+    for klass in type(survey).__mro__:
+        for name in getattr(klass, "__slots__", ()):
+            if hasattr(survey, name):
+                out[name] = getattr(survey, name)
+    return out
+
+
+def survey_fingerprint(survey) -> str:
+    """Stable content key of a survey (or bare :class:`MetaSpec`): class
+    identity + every constructor parameter, recursing into bundle members.
+    Two instances with equal fingerprints plan, classify, and fold
+    identically, so the fingerprint can stand in for the instance in any
+    cache key."""
+    return hashlib.blake2b(
+        repr(_canon(survey)).encode(), digest_size=16).hexdigest()
+
+
+def graph_token(g: HostGraph) -> str:
+    """Content token of a host graph snapshot: edges, metadata, and the
+    DOULION stamp. Epoch appends should prefer :func:`advance_token`
+    (hash the batch, not the cumulative union)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((g.n, g.m, g.sample_p, g.sample_seed)).encode())
+    for a in (g.src, g.dst, g.vmeta_i, g.vmeta_f, g.emeta_i, g.emeta_f):
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def advance_token(token: str, src, dst, emeta_i=None, emeta_f=None,
+                  epoch: int | None = None) -> str:
+    """Chain-advance a graph token by one appended edge batch: the new token
+    commits to the entire epoch history without rehashing the union."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(token.encode())
+    h.update(repr(("epoch", epoch)).encode())
+    for a in (src, dst, emeta_i, emeta_f):
+        if a is not None:
+            h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()
+
+
+def delta_token(dg: DeltaGraph, base_token: str | None = None) -> str:
+    """Token of a :class:`DeltaGraph` snapshot: the base's token advanced by
+    the current overlay. Pass ``base_token`` when the base's token is
+    already known (the serving layer maintains the chain incrementally)."""
+    t = base_token if base_token is not None else graph_token(dg.base)
+    return advance_token(t, dg.d_src, dg.d_dst, dg.d_emeta_i, dg.d_emeta_f,
+                         epoch=dg.epoch)
+
+
+def plan_content_key(token: str, S: int, survey, *, mode: str = "pushpull",
+                     transport: str = "dense", hub_theta="auto",
+                     sample_p: float = 1.0, sample_seed: int = 0,
+                     orient: str = "degree", epoch: int = 0,
+                     extra=()) -> str:
+    """Content key of one planned question: everything that can change the
+    plan, the sharded graph, or the compiled closure. Any difference in
+    (graph epoch/token, survey MetaSpec + params, transport, hub θ, S,
+    sampling, orientation) yields a different key; equal keys are guaranteed
+    to replay the exact same (cfg, shards, jitted fn) triplet."""
+    fp = survey if isinstance(survey, str) else survey_fingerprint(survey)
+    blob = repr((token, S, fp, mode, transport, hub_theta,
+                 float(sample_p), int(sample_seed), orient, int(epoch),
+                 _canon(tuple(extra))))
+    return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
+
+
 # determinism verdicts are pure functions of (survey instance, storage
 # widths); classification traces three fold hooks, so cache it per survey
 # — re-planning every epoch must not re-trace
 _det_cache: "weakref.WeakKeyDictionary[Survey, dict]" = \
     weakref.WeakKeyDictionary()
+# non-weakref-able surveys (e.g. __slots__ without __weakref__) fall back
+# to a strong dict keyed by content fingerprint — classification still runs
+# once per (survey content, widths) instead of once per plan
+_det_cache_by_fp: dict = {}
+_DET_FP_CACHE_MAX = 1024
 
 
 def _determinism_of(survey, widths: tuple) -> str:
@@ -167,8 +276,14 @@ def _determinism_of(survey, widths: tuple) -> str:
     from repro.analysis.contracts import classify_determinism
     try:
         per_widths = _det_cache.setdefault(survey, {})
-    except TypeError:  # non-weakref-able survey object: classify uncached
-        per_widths = {}
+    except TypeError:
+        # non-weakref-able survey object: key by content fingerprint — the
+        # verdict is a pure function of (class, params, widths), so distinct
+        # instances with equal fingerprints can share one classification
+        if len(_det_cache_by_fp) >= _DET_FP_CACHE_MAX:
+            _det_cache_by_fp.clear()
+        per_widths = _det_cache_by_fp.setdefault(
+            survey_fingerprint(survey), {})
     if widths not in per_widths:
         per_widths[widths] = classify_determinism(survey, widths)[0]
     return per_widths[widths]

@@ -59,3 +59,30 @@ def load_delta(path: str) -> DeltaGraph:
     return DeltaGraph(base=_graph_from_npz(z), d_src=z["d_src"],
                       d_dst=z["d_dst"], d_emeta_i=z["d_emeta_i"],
                       d_emeta_f=z["d_emeta_f"], epoch=int(z["epoch"]))
+
+
+def save_epoch_state(path: str, dg: DeltaGraph, token: str = ""):
+    """Serving checkpoint: a :func:`save_delta` payload plus the content
+    token chain and the base's DOULION stamp, so a restored
+    :class:`~repro.serve.service.SurveyService` derives the *same* plan
+    content keys it would have produced without the restart."""
+    np.savez_compressed(
+        path, **_graph_fields(dg.base),
+        d_src=dg.d_src, d_dst=dg.d_dst,
+        d_emeta_i=dg.d_emeta_i, d_emeta_f=dg.d_emeta_f,
+        epoch=dg.epoch, token=token,
+        sample_p=dg.base.sample_p, sample_seed=dg.base.sample_seed)
+
+
+def load_epoch_state(path: str) -> tuple[DeltaGraph, str]:
+    z = np.load(path, allow_pickle=False)
+    base = HostGraph(n=int(z["n"]), src=z["src"], dst=z["dst"],
+                     spec=_spec_from_npz(z),
+                     vmeta_i=z["vmeta_i"], vmeta_f=z["vmeta_f"],
+                     emeta_i=z["emeta_i"], emeta_f=z["emeta_f"],
+                     sample_p=float(z["sample_p"]),
+                     sample_seed=int(z["sample_seed"]))
+    dg = DeltaGraph(base=base, d_src=z["d_src"], d_dst=z["d_dst"],
+                    d_emeta_i=z["d_emeta_i"], d_emeta_f=z["d_emeta_f"],
+                    epoch=int(z["epoch"]))
+    return dg, str(z["token"])

@@ -1,0 +1,154 @@
+"""Content-keyed LRU cache over (plan, shards, compiled closure) triplets.
+
+A :class:`CacheEntry` bundles everything the engine needs to answer one
+survey against one graph epoch:
+
+* the planned :class:`~repro.core.pushpull.EngineConfig` + its
+  :class:`~repro.core.pushpull.VolumeReport`,
+* the sharded graph view (``ShardedDODGr`` — including replicated hub
+  tables, the dominant byte cost),
+* the jitted ``make_survey_fn`` closure,
+* the raw ``(merged_state, stats)`` of the warm-up traversal, so an exact
+  repeat query is answered in O(answer) (finalize only), not O(graph).
+
+Keys are :func:`repro.core.pushpull.plan_content_key` hex digests: any
+change in (graph token/epoch, survey params + MetaSpec, transport, hub θ,
+S, sample_p) produces a different key, so stale plans can never be served
+(see tests/test_serve.py's invalidation matrix).
+
+Eviction is least-recently-used under a byte budget measured over the
+cached device arrays. The most recently inserted entry is never evicted
+by its own insertion, so a single over-budget entry still serves (and is
+dropped on the next insert).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable
+
+
+def entry_nbytes(gr: Any) -> int:
+    """Total bytes of the array leaves hanging off a sharded view."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(gr):
+        nbytes = getattr(leaf, "nbytes", None)
+        if nbytes is not None:
+            total += int(nbytes)
+    return total
+
+
+@dataclass
+class CacheEntry:
+    """Everything needed to re-answer one (survey, graph-epoch) pair."""
+
+    key: str
+    survey: Any                     # canonical Survey instance the fn folds
+    cfg: Any                        # EngineConfig
+    report: Any                     # VolumeReport
+    gr: Any                         # ShardedDODGr (device-resident shards)
+    fn: Callable[[Any], Any]        # jitted make_survey_fn closure
+    raw: Any = None                 # (merged_state, stats) of warm-up run
+    nbytes: int = 0
+    uses: int = 0
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+class PlanCache:
+    """LRU plan/compile cache with byte-budget eviction.
+
+    Thread-safe: the serving front door looks plans up from query threads
+    while the ingest worker inserts delta plans for new epochs.
+    """
+
+    def __init__(self, byte_budget: int | None = None):
+        self.byte_budget = byte_budget
+        self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
+        self._lock = threading.Lock()
+        self._stats = CacheStats()
+
+    # -- core ops ---------------------------------------------------------
+
+    def lookup(self, key: str) -> CacheEntry | None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self._stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self._stats.hits += 1
+            entry.uses += 1
+            return entry
+
+    def peek(self, key: str) -> CacheEntry | None:
+        """Lookup without touching LRU order or hit/miss counters."""
+        with self._lock:
+            return self._entries.get(key)
+
+    def insert(self, entry: CacheEntry) -> CacheEntry:
+        with self._lock:
+            self._entries[entry.key] = entry
+            self._entries.move_to_end(entry.key)
+            self._evict_locked(keep=entry.key)
+            return entry
+
+    def invalidate(self, key: str) -> bool:
+        with self._lock:
+            return self._entries.pop(key, None) is not None
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def _evict_locked(self, keep: str | None = None) -> None:
+        if self.byte_budget is None:
+            return
+        while self.nbytes_locked() > self.byte_budget and len(self._entries) > 1:
+            oldest = next(iter(self._entries))
+            if oldest == keep:
+                # Everything else is already gone; the newest entry may
+                # exceed the budget on its own — keep it until next insert.
+                break
+            self._entries.pop(oldest)
+            self._stats.evictions += 1
+
+    # -- introspection ----------------------------------------------------
+
+    def nbytes_locked(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self.nbytes_locked()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            d = self._stats.as_dict()
+            d["entries"] = len(self._entries)
+            d["bytes"] = self.nbytes_locked()
+            d["byte_budget"] = self.byte_budget
+            return d

@@ -1,0 +1,153 @@
+"""Hub-table reuse across delta epochs (ISSUE 9 satellite): shard_delta
+with a :class:`HubTableCache` must produce bitwise-identical survey
+results to the per-epoch rebuild AND to a full recompute of the union,
+while actually reusing rows instead of rebuilding them. Union rows are a
+superset of the frontier rows — the delta hub fold's ≥1-new-edge mask is
+what makes the superset exact (see the class docstring)."""
+import numpy as np
+import pytest
+
+from repro.core.dodgr import HubTableCache, shard_delta, shard_dodgr
+from repro.core.engine import finalize_epochs, survey_delta, survey_push_pull
+from repro.core.pushpull import plan_delta, plan_engine
+from repro.core.surveys import (ClosureTime, SurveyBundle,
+                                TopKWeightedTriangles, TriangleCount)
+from repro.graphs import generators
+from repro.graphs.csr import HostGraph
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)):
+        return len(a) == len(b) and all(_tree_equal(x, y)
+                                        for x, y in zip(a, b))
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.shape == b.shape and (a == b).all()
+    return a == b
+
+
+def _empty_base(g):
+    return HostGraph(g.n, np.zeros(0, np.int64), np.zeros(0, np.int64),
+                     g.spec, g.vmeta_i, g.vmeta_f)
+
+
+def _stream(g, K, base_frac=0.5):
+    """(base, batches): timestamp-ordered history split into a warm base
+    plus K delta batches — the streaming arrival shape."""
+    order = np.argsort(g.emeta_f[:, 0], kind="stable")
+    cut = int(len(order) * base_frac)
+    base_idx, rest = order[:cut], order[cut:]
+    base = HostGraph(g.n, g.src[base_idx], g.dst[base_idx], g.spec,
+                     g.vmeta_i, g.vmeta_f, g.emeta_i[base_idx],
+                     g.emeta_f[base_idx])
+    return base, np.array_split(rest, K)
+
+
+def _append(dg_or_base, g, idx):
+    return dg_or_base.append_edges(g.src[idx], g.dst[idx],
+                                   emeta_i=g.emeta_i[idx],
+                                   emeta_f=g.emeta_f[idx])
+
+
+def _run_stream(g, base, batches, survey, theta, S=4, cache=None):
+    dg, state = None, None
+    for idx in batches:
+        dg = _append(dg if dg is not None else base, g, idx)
+        cfg, _ = plan_delta(dg, S, survey, hub_theta=theta, push_cap=64)
+        gr, _ = shard_delta(dg, S, hub_theta=cfg.hub_theta, hub_cache=cache)
+        state, _ = survey_delta(gr, survey, cfg, state)
+    return dg, state
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.temporal_social(400, 6000, seed=1)
+
+
+def test_hub_reuse_bitwise_vs_rebuild_and_recompute(g):
+    survey = SurveyBundle([TriangleCount(), ClosureTime(ts_col=0),
+                           TopKWeightedTriangles(4, 0)])
+    base, batches = _stream(g, K=3)
+    theta = 6
+
+    cache = HubTableCache(base)
+    _, st_cached = _run_stream(g, base, batches, survey, theta, cache=cache)
+    dg, st_plain = _run_stream(g, base, batches, survey, theta, cache=None)
+
+    assert _tree_equal(finalize_epochs(survey, st_cached),
+                       finalize_epochs(survey, st_plain)), \
+        "cached hub tables changed survey bits vs per-epoch rebuild"
+
+    # and both equal one full survey of the union (incremental == recompute)
+    u = dg.union()
+    cfg, _ = plan_engine(u, 4, survey, orient="stable", hub_theta=theta,
+                         push_cap=64)
+    gr, _ = shard_dodgr(u, 4, orient="stable", hub_theta=cfg.hub_theta)
+    full, _ = survey_push_pull(gr, survey, cfg)
+    # full run needs the base's all-old triangles too: stream from empty
+    ebase, ebatches = _empty_base(g), [np.arange(g.m)]
+    _, st_all = _run_stream(g, ebase, ebatches, survey, theta,
+                            cache=HubTableCache(ebase))
+    assert _tree_equal(finalize_epochs(survey, st_all), full), \
+        "hub-cached delta stream != full recompute"
+
+    assert cache.rows_reused > 0, "no rows were reused — cache is inert"
+    assert cache.rows_refreshed > 0
+    assert cache.at_epoch == 3
+    assert cache.last_build["rows_reused"] + \
+        cache.last_build["rows_refreshed"] == cache.last_build["n_hubs"]
+    assert cache.nbytes() > 0
+
+
+def test_hub_reuse_stamps_union_provenance(g):
+    base, batches = _stream(g, K=2)
+    cache = HubTableCache(base)
+    dg = _append(base, g, batches[0])
+    cfg, _ = plan_delta(dg, 4, TriangleCount(), hub_theta=6, push_cap=64)
+    gr_c, _ = shard_delta(dg, 4, hub_theta=cfg.hub_theta, hub_cache=cache)
+    gr_p, _ = shard_delta(dg, 4, hub_theta=cfg.hub_theta)
+    assert gr_c.hub_rows == "union" and gr_p.hub_rows == "frontier"
+    # union rows are a superset: never shorter than the frontier rebuild
+    assert gr_c.hub_len >= gr_p.hub_len
+
+
+def test_hub_cache_requires_stable_orientation(g):
+    base, batches = _stream(g, K=2)
+    with pytest.raises(ValueError, match="stable"):
+        HubTableCache(base, orient="degree")
+    dg = _append(base, g, batches[0])
+    with pytest.raises(ValueError, match="stable"):
+        shard_delta(dg, 4, orient="degree", hub_theta=6,
+                    hub_cache=HubTableCache(base))
+
+
+def test_hub_cache_rejects_epoch_gaps(g):
+    base, batches = _stream(g, K=2)
+    cache = HubTableCache(base)
+    dg1 = _append(base, g, batches[0])
+    dg2 = _append(dg1, g, batches[1])
+    with pytest.raises(ValueError, match="epoch"):
+        cache.advance(dg2)            # skipped epoch 1
+    cache.advance(dg1)
+    cache.advance(dg1)                # idempotent at the current epoch
+    assert cache.at_epoch == 1
+    cache.advance(dg2)
+    assert cache.at_epoch == 2
+
+
+def test_hub_tables_reject_mismatched_hub_set(g):
+    base, batches = _stream(g, K=2)
+    cache = HubTableCache(base)
+    dg = _append(base, g, batches[0])
+    cache.advance(dg)
+    h, edge_new = dg.frontier()
+    deg = h.degrees()
+    theta = 20
+    assert 0 < (deg >= theta).sum() < (deg >= 6).sum(), \
+        "fixture graph must separate the two hub sets"
+    tables = cache.build(np.nonzero(deg >= 6)[0])
+    with pytest.raises(ValueError, match="different hub set"):
+        shard_dodgr(h, 4, edge_new=edge_new, orient="stable",
+                    epoch=dg.epoch, hub_theta=theta, hub_tables=tables)

@@ -1,0 +1,393 @@
+"""Serving layer: plan-cache key invalidation matrix, LRU byte-budget
+eviction, warm == cold == solo == one-shot bitwise identity, multi-tenant
+coalescing, the epoch-pipelined ingest path, checkpoint/restore token
+continuity, and the ``_det_cache`` TypeError fall-through fix (ISSUE 9)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import pushpull
+from repro.core.dodgr import shard_dodgr
+from repro.core.engine import survey_push_pull
+from repro.core.pushpull import (advance_token, delta_token, graph_token,
+                                 plan_content_key, plan_engine,
+                                 survey_fingerprint)
+from repro.core.surveys import (ClosureTime, LocalVertexCount, MetaSpec,
+                                SurveyBundle, TopKWeightedTriangles,
+                                TriangleCount)
+from repro.graphs import generators, io
+from repro.serve import (CacheEntry, PlanCache, SurveyService, TenantRequest,
+                         coalesce, extract)
+
+
+def _tree_equal(a, b):
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)):
+        return len(a) == len(b) and all(_tree_equal(x, y)
+                                        for x, y in zip(a, b))
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.shape == b.shape and (a == b).all()
+    return a == b
+
+
+@pytest.fixture(scope="module")
+def g():
+    return generators.temporal_social(220, 2600, seed=3)
+
+
+@pytest.fixture(scope="module")
+def svc(g):
+    s = SurveyService(g, 4, hub_theta=5, push_cap=64,
+                      resident={"tc": TriangleCount(),
+                                "ct": ClosureTime(ts_col=0)})
+    yield s
+    s.close()
+
+
+def _oneshot(g, survey, S=4, hub_theta=5, push_cap=64, **kw):
+    cfg, _ = plan_engine(g, S, survey, orient="stable", hub_theta=hub_theta,
+                         push_cap=push_cap, **kw)
+    gr, _ = shard_dodgr(g, S, orient="stable", hub_theta=cfg.hub_theta,
+                        sample_p=kw.get("sample_p", 1.0),
+                        sample_seed=kw.get("sample_seed", 0))
+    return survey_push_pull(gr, survey, cfg)
+
+
+# ---------------------------------------------------------------------------
+# content keys: the invalidation matrix
+
+
+def test_content_key_invalidation_matrix(g):
+    """Any change in (epoch/token, survey params, MetaSpec lanes, θ,
+    transport, S, sample_p) must produce a different key; unchanged inputs
+    must reproduce the same key (so repeats hit)."""
+    tok = graph_token(g)
+    base = dict(token=tok, S=4, survey=TriangleCount(), mode="pushpull",
+                transport="dense", hub_theta=5, sample_p=1.0, sample_seed=0,
+                orient="stable", epoch=0)
+
+    def key(**over):
+        kw = dict(base, **over)
+        t, s, sv = kw.pop("token"), kw.pop("S"), kw.pop("survey")
+        return plan_content_key(t, s, sv, **kw)
+
+    k0 = key()
+    assert k0 == key(), "identical inputs must produce identical keys"
+    assert k0 == key(survey=TriangleCount()), \
+        "fingerprint-equal survey instances must share a key"
+
+    tok2 = advance_token(tok, np.array([1]), np.array([2]), epoch=1)
+    variants = {
+        "token": key(token=tok2),
+        "epoch": key(epoch=1),
+        "survey class": key(survey=LocalVertexCount(g.n)),
+        "survey param": key(survey=TopKWeightedTriangles(4, 0)),
+        "survey param value": key(survey=TopKWeightedTriangles(8, 0)),
+        "MetaSpec lanes": key(survey=MetaSpec.full()),
+        "S": key(S=8),
+        "transport": key(transport="ragged"),
+        "hub_theta": key(hub_theta=9),
+        "sample_p": key(sample_p=0.5),
+        "sample_seed": key(sample_seed=1),
+        "orient": key(orient="degree"),
+        "mode": key(mode="push"),
+    }
+    for what, k in variants.items():
+        assert k != k0, f"changing {what} must invalidate the content key"
+    assert len(set(variants.values())) == len(variants), \
+        "distinct changes must not collide"
+
+
+def test_graph_token_tracks_content(g):
+    assert graph_token(g) == graph_token(g)
+    g2 = generators.temporal_social(220, 2600, seed=4)
+    assert graph_token(g) != graph_token(g2)
+    # the chain commits to history: same batch after different prefixes
+    t1 = advance_token(graph_token(g), [1], [2], epoch=1)
+    t2 = advance_token(graph_token(g2), [1], [2], epoch=1)
+    assert t1 != t2
+
+
+def test_survey_fingerprint_recurses_into_bundles():
+    a = SurveyBundle([TriangleCount(), ClosureTime(ts_col=0)], ["x", "y"])
+    b = SurveyBundle([TriangleCount(), ClosureTime(ts_col=0)], ["x", "y"])
+    c = SurveyBundle([TriangleCount(), ClosureTime(ts_col=1)], ["x", "y"])
+    d = SurveyBundle([TriangleCount(), ClosureTime(ts_col=0)], ["x", "z"])
+    assert survey_fingerprint(a) == survey_fingerprint(b)
+    assert survey_fingerprint(a) != survey_fingerprint(c)
+    assert survey_fingerprint(a) != survey_fingerprint(d)
+
+
+# ---------------------------------------------------------------------------
+# PlanCache mechanics
+
+
+def _entry(key, nbytes):
+    return CacheEntry(key=key, survey=None, cfg=None, report=None, gr=None,
+                      fn=lambda gr: None, nbytes=nbytes)
+
+
+def test_plan_cache_lru_byte_budget_eviction():
+    c = PlanCache(byte_budget=100)
+    c.insert(_entry("a", 40))
+    c.insert(_entry("b", 40))
+    assert c.lookup("a") is not None          # refresh a → b becomes LRU
+    c.insert(_entry("c", 40))                 # 120 B > 100 B → evict b
+    assert c.peek("b") is None
+    assert c.peek("a") is not None and c.peek("c") is not None
+    st = c.stats()
+    assert st["evictions"] == 1 and st["bytes"] == 80
+    assert st["hits"] == 1 and st["misses"] == 0
+
+
+def test_plan_cache_keeps_newest_even_over_budget():
+    c = PlanCache(byte_budget=50)
+    c.insert(_entry("a", 40))
+    c.insert(_entry("big", 400))              # alone over budget: kept
+    assert c.peek("a") is None and c.peek("big") is not None
+    c.insert(_entry("b", 10))                 # next insert flushes it
+    assert c.peek("big") is None and c.peek("b") is not None
+
+
+def test_plan_cache_miss_and_hit_counters():
+    c = PlanCache()
+    assert c.lookup("nope") is None
+    c.insert(_entry("k", 1))
+    assert c.lookup("k") is not None
+    st = c.stats()
+    assert st == {"hits": 1, "misses": 1, "evictions": 0, "entries": 1,
+                  "bytes": 1, "byte_budget": None}
+
+
+# ---------------------------------------------------------------------------
+# serving identities: warm == cold == solo == one-shot
+
+
+def test_warm_equals_cold_equals_oneshot(svc, g):
+    cold, s_cold = svc.query(LocalVertexCount(g.n))
+    warm, s_warm = svc.query(LocalVertexCount(g.n))
+    rerun, s_rerun = svc.query(LocalVertexCount(g.n), rerun=True)
+    ref, _ = _oneshot(g, LocalVertexCount(g.n))
+    assert s_cold["plan_cache_hit"] == 0.0
+    assert s_warm["plan_cache_hit"] == 1.0
+    assert s_warm["served_from"] == "memo"
+    assert s_rerun["served_from"] == "traversal"
+    assert _tree_equal(cold, warm) and _tree_equal(cold, rerun)
+    assert _tree_equal(cold, ref)
+    assert s_warm["plan_setup_s"] < s_cold["plan_setup_s"]
+
+
+def test_coalesced_bitwise_identical_to_solo(svc, g):
+    reqs = [TenantRequest("t0", TriangleCount()),
+            TenantRequest("t1", ClosureTime(ts_col=0)),
+            TenantRequest("t2", TopKWeightedTriangles(4, 0)),
+            TenantRequest("t3", TriangleCount())]
+    out = svc.query_coalesced(reqs)
+    assert set(out) == {"t0", "t1", "t2", "t3"}
+    for req in reqs:
+        solo, _ = svc.query(req.survey)
+        ref, _ = _oneshot(g, req.survey)
+        res, stats = out[req.tenant]
+        assert _tree_equal(res, solo), f"{req.tenant}: coalesced != solo"
+        assert _tree_equal(res, ref), f"{req.tenant}: coalesced != one-shot"
+        assert stats["coalesced"] == 4 and stats["tenant"] == req.tenant
+
+
+def test_coalesce_rejects_duplicate_tenants():
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        coalesce([TenantRequest("a", TriangleCount()),
+                  TenantRequest("a", TriangleCount())])
+    with pytest.raises(ValueError, match="at least one"):
+        coalesce([])
+
+
+def test_extract_annotates_per_tenant():
+    reqs = [TenantRequest("a", TriangleCount()),
+            TenantRequest("b", TriangleCount())]
+    out = extract({"a": 1, "b": 2}, {"x": 0.0}, reqs)
+    assert out["a"][0] == 1 and out["b"][0] == 2
+    assert out["a"][1]["coalesced"] == 2 and out["a"][1]["tenant"] == "a"
+    assert out["a"][1] is not out["b"][1], "stats copies must be per-tenant"
+    with pytest.raises(KeyError):
+        extract({"a": 1}, {}, reqs)
+
+
+# ---------------------------------------------------------------------------
+# epoch pipeline: ingest, residents, post-ingest queries
+
+
+def test_ingest_pipeline_and_residents_bitwise(g):
+    svc = SurveyService(g, 4, hub_theta=5, push_cap=64,
+                        resident={"tc": TriangleCount(),
+                                  "ct": ClosureTime(ts_col=0)})
+    try:
+        before, s0 = svc.query(TriangleCount())
+        key0 = svc.content_key(TriangleCount())
+        rng = np.random.default_rng(11)
+        for _ in range(3):
+            e = rng.integers(0, g.n, size=(30, 2))
+            svc.append_edges(
+                e[:, 0], e[:, 1],
+                emeta_i=np.zeros((30, g.emeta_i.shape[1]), np.int32),
+                emeta_f=rng.random((30, g.emeta_f.shape[1]),
+                                   ).astype(np.float32))
+        svc.flush()
+        assert svc.epoch == 3
+        assert svc.content_key(TriangleCount()) != key0, \
+            "new epochs must invalidate snapshot content keys"
+
+        u = svc.snapshot.union
+        ans = svc.resident_answers()
+        for name, survey in (("tc", TriangleCount()),
+                             ("ct", ClosureTime(ts_col=0))):
+            ref, _ = _oneshot(u, survey)
+            assert _tree_equal(ans[name], ref), \
+                f"resident {name} != full recompute of the union"
+
+        after, s3 = svc.query(TriangleCount())
+        ref, _ = _oneshot(u, TriangleCount())
+        assert _tree_equal(after, ref)
+        assert s3["served_epoch"] == 3.0
+
+        ist = svc.ingest_stats()
+        assert ist["epochs_applied"] == 3 and ist["pending"] == 0
+        assert ist["hub_rows_reused"] > 0, \
+            "hub tables must be reused, not rebuilt, across epochs"
+    finally:
+        svc.close()
+
+
+def test_ingest_worker_errors_surface_on_flush(g):
+    svc = SurveyService(g, 4, push_cap=64)
+    try:
+        svc.append_edges(np.array([0]), np.array([1]),
+                         emeta_i=np.zeros((1, 99), np.int32))  # bad width
+        with pytest.raises(RuntimeError, match="ingest worker failed"):
+            svc.flush()
+    finally:
+        svc.close()
+
+
+def test_queries_answer_during_ingest(g):
+    """The prefill/decode split: a query issued while batches are pending
+    is served from the last merged snapshot, never a half-applied one."""
+    svc = SurveyService(g, 4, push_cap=64,
+                        resident={"tc": TriangleCount()})
+    try:
+        rng = np.random.default_rng(5)
+        stop = threading.Event()
+        seen = []
+
+        def hammer():
+            while not stop.is_set():
+                res, stats = svc.query(TriangleCount())
+                seen.append((int(stats["served_epoch"]), res))
+
+        t = threading.Thread(target=hammer)
+        t.start()
+        for _ in range(2):
+            e = rng.integers(0, g.n, size=(25, 2))
+            svc.append_edges(
+                e[:, 0], e[:, 1],
+                emeta_i=np.zeros((25, g.emeta_i.shape[1]), np.int32),
+                emeta_f=rng.random((25, g.emeta_f.shape[1]),
+                                   ).astype(np.float32))
+        svc.flush()
+        stop.set()
+        t.join(timeout=120)
+        assert seen, "queries must keep answering during ingestion"
+        epochs = sorted({ep for ep, _ in seen})
+        by_epoch = {}
+        for ep, res in seen:
+            assert _tree_equal(by_epoch.setdefault(ep, res), res), \
+                f"two queries at epoch {ep} disagreed — torn snapshot"
+        assert all(0 <= ep <= 2 for ep in epochs)
+    finally:
+        svc.close()
+
+
+def test_checkpoint_restore_continues_token_chain(g, tmp_path):
+    svc = SurveyService(g, 4, push_cap=64)
+    try:
+        rng = np.random.default_rng(9)
+        e = rng.integers(0, g.n, size=(20, 2))
+        svc.append_edges(
+            e[:, 0], e[:, 1],
+            emeta_i=np.zeros((20, g.emeta_i.shape[1]), np.int32),
+            emeta_f=rng.random((20, g.emeta_f.shape[1])).astype(np.float32),
+            wait=True)
+        p = str(tmp_path / "ck.npz")
+        svc.checkpoint(p)
+        svc2 = SurveyService.restore(p, 4, push_cap=64)
+        try:
+            assert svc2.epoch == svc.epoch == 1
+            assert (svc2.content_key(TriangleCount())
+                    == svc.content_key(TriangleCount()))
+            a, _ = svc.query(TriangleCount())
+            b, _ = svc2.query(TriangleCount())
+            assert _tree_equal(a, b)
+        finally:
+            svc2.close()
+    finally:
+        svc.close()
+
+
+def test_epoch_state_io_roundtrip(g, tmp_path):
+    dg = g.append_edges(np.array([0, 1]), np.array([5, 6]),
+                        emeta_i=np.zeros((2, g.emeta_i.shape[1]), np.int32),
+                        emeta_f=np.zeros((2, g.emeta_f.shape[1]),
+                                         np.float32))
+    p = str(tmp_path / "es.npz")
+    io.save_epoch_state(p, dg, token="abc123")
+    dg2, tok = io.load_epoch_state(p)
+    assert tok == "abc123" and dg2.epoch == dg.epoch
+    assert _tree_equal(
+        {"s": dg.union().src, "d": dg.union().dst},
+        {"s": dg2.union().src, "d": dg2.union().dst})
+
+
+def test_sampling_with_residents_rejected(g):
+    with pytest.raises(ValueError, match="resident"):
+        SurveyService(g, 4, sample_p=0.5,
+                      resident={"tc": TriangleCount()})
+
+
+# ---------------------------------------------------------------------------
+# _det_cache TypeError fall-through (satellite 2)
+
+
+class _UnhashableCount(TriangleCount):
+    """Survey defining __eq__ without __hash__: the weakref determinism
+    cache hashes keys through to the referent, so `setdefault` raises
+    TypeError — the fall-through that used to reclassify on EVERY plan."""
+
+    def __eq__(self, other):
+        return isinstance(other, _UnhashableCount)
+
+    __hash__ = None
+
+
+def test_det_cache_slotted_survey_classified_once(g, monkeypatch):
+    from repro.analysis import contracts
+
+    calls = {"n": 0}
+    real = contracts.classify_determinism
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    # _determinism_of imports the symbol at call time, so patching the
+    # source module intercepts every classification
+    monkeypatch.setattr(contracts, "classify_determinism", counting)
+    pushpull._det_cache_by_fp.clear()
+    with pytest.raises(TypeError):
+        hash(_UnhashableCount())  # precondition: weakref cache must balk
+    for _ in range(3):
+        cfg, _ = plan_engine(g, 2, _UnhashableCount(), push_cap=64)
+    assert cfg.determinism == "bitwise"
+    assert calls["n"] == 1, ("unhashable surveys must classify once per "
+                             "content fingerprint, not once per plan")

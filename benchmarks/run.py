@@ -41,6 +41,10 @@ REGRESSION_GATES = {
     "wire_padding_B": ("max", PADDING_REGRESSION_TOL),
     "warm_plan_speedup": ("min", 1.10),
     "coalesced_qps_x": ("min", 1.10),
+    # serve/epoch_stream: fraction of cap-drifting epochs that reused a
+    # compiled executable under cap_policy="bucket" — the whole point of
+    # shape bucketing; falling back toward 0 means every epoch retraces
+    "jit_hit_rate": ("min", 1.10),
 }
 
 

@@ -63,6 +63,9 @@ def run_plans(surveys, S: int = 4) -> list[Violation]:
         dict(transport="ragged"),
         dict(transport="ragged", hub_theta=theta),
         dict(transport="mesh"),  # host-side audit; maps match ragged
+        # bucketed plans: the cap_policy pass proves on-grid + exact-shadow
+        dict(transport="dense", cap_policy="bucket"),
+        dict(transport="ragged", hub_theta=theta, cap_policy="bucket"),
     ]
     out: list[Violation] = []
     for name, s in surveys:
@@ -70,11 +73,13 @@ def run_plans(surveys, S: int = 4) -> list[Violation]:
             for mode in ("pushpull", "push"):
                 cfg, rep = plan_engine(g, S, s, mode=mode, push_cap=64,
                                        **cell)
+                tag = (f"{name}/{cell['transport']}"
+                       f"{'+hub' if cell.get('hub_theta') else ''}"
+                       f"{'+bucket' if cell.get('cap_policy') == 'bucket' else ''}")
                 for v in check_plan(cfg, rep):
                     out.append(Violation(v.passname, v.code,
-                                         f"{name}/{cell['transport']}"
-                                         f"{'+hub' if cell.get('hub_theta') else ''}"
-                                         f"/{mode}:{v.where}", v.message))
+                                         f"{tag}/{mode}:{v.where}",
+                                         v.message))
     # one delta epoch (frontier plan) per transport, TriangleCount carrier
     from repro.graphs.csr import HostGraph
     order = np.argsort(g.emeta_f[:, 0], kind="stable")
@@ -86,10 +91,14 @@ def run_plans(surveys, S: int = 4) -> list[Violation]:
                            emeta_i=g.emeta_i[order[k:]],
                            emeta_f=g.emeta_f[order[k:]])
     for name, s in surveys:
-        cfg, rep = plan_delta(dg, S, s, transport="ragged", push_cap=64)
-        for v in check_plan(cfg, rep):
-            out.append(Violation(v.passname, v.code,
-                                 f"{name}/delta:{v.where}", v.message))
+        for pol in ("exact", "bucket"):
+            cfg, rep = plan_delta(dg, S, s, transport="ragged", push_cap=64,
+                                  cap_policy=pol)
+            for v in check_plan(cfg, rep):
+                out.append(Violation(
+                    v.passname, v.code,
+                    f"{name}/delta{'+bucket' if pol == 'bucket' else ''}:"
+                    f"{v.where}", v.message))
     return out
 
 
@@ -117,7 +126,8 @@ def main(argv=None) -> int:
     if "plans" in selected:
         v = run_plans(surveys, S=args.S)
         print(f"plans: {len(surveys)} surveys × {{dense, ragged, "
-              f"ragged+hub, mesh}} × {{pushpull, push}} + delta checked, "
+              f"ragged+hub, mesh, dense+bucket, ragged+hub+bucket}} × "
+              f"{{pushpull, push}} + delta×{{exact, bucket}} checked, "
               f"{len(v)} violation(s)")
         violations += v
     if "lint" in selected:

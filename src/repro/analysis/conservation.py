@@ -21,7 +21,12 @@ module does exactly that, with plain numpy over the static maps:
   steps × slots × width, and — the part that used to be a *runtime
   truncation warning* — superstep counts × capacities actually cover the
   planner's measured stream maxima, so a plan that would drop wedges is
-  rejected at plan time.
+  rejected at plan time. A ``cap_policy`` pass then proves a bucketed
+  plan is "the same plan, rounded up": every shape knob sits on the
+  bucket grid, the stamped exact shadow lane reconciles word-for-word
+  and *still covers every fed slot* (bucketing never hides a
+  truncation), and ``bucket_pad_bytes`` is exactly the wire-byte
+  difference between the two lanes.
 
 Zero device execution: everything here is host numpy on static arrays.
 """
@@ -33,6 +38,7 @@ import numpy as np
 
 from repro.analysis.report import Violation
 from repro.comm.exchange import Exchange, make_exchange
+from repro.utils import bucket_cap
 
 if TYPE_CHECKING:  # engine/pushpull import nothing from analysis at module
     from repro.core.engine import EngineConfig       # scope, so no cycle —
@@ -416,4 +422,164 @@ def check_plan(cfg: "EngineConfig", report: "VolumeReport") -> list[Violation]:
         _coverage("plan-truncation-hub", "hub", cfg.n_hub_steps,
                   cfg.hub_wedge_cap, report.hub_stream_max,
                   "hub wedges per heaviest shard", v)
+
+    v += _check_cap_policy(cfg, report, w_push, w_row, w_hdr, w_req)
+    return v
+
+
+def _check_cap_policy(cfg: "EngineConfig", report: "VolumeReport",
+                      w_push: int, w_row: int, w_hdr: int,
+                      w_req: int) -> list[Violation]:
+    """The ``cap_policy`` pass: prove a ``"bucket"`` plan is *the same
+    plan, rounded up* — and an ``"exact"`` plan carries a zero-padding
+    shadow lane identical to its primary fields.
+
+    Three families of facts, all host arithmetic on the stamped report:
+
+    * **padding tax is the wire difference** (any policy):
+      ``bucket_pad_bytes == Σ wire_*_bytes − Σ exact_wire_*_bytes``.
+    * **exact shadow lane is itself a valid plan** (any policy): its
+      req/reply lanes reconcile word-for-word (reply bytes == steps ×
+      slots × (w_hdr + exact_pull_row_cap·w_row) × 4 with the slot count
+      recovered from the req lane), and its superstep × capacity products
+      still cover the planner's measured stream maxima and entry totals —
+      "coverage of fed slots unchanged": bucketing may round capacities
+      *up* but can never have hidden a truncation the exact plan would
+      have had.
+    * **on-grid** (``"bucket"`` only): every shape-determining knob —
+      scalar caps, superstep counts, and each per-(src, dest) ragged cap —
+      is a fixed point of :func:`repro.utils.bucket_cap`, and
+      ``pull_row_cap`` dominates its exact shadow. Under ``"exact"`` the
+      shadow fields must instead *equal* the primaries, with zero pad.
+    """
+    v: list[Violation] = []
+
+    def bad(code: str, where: str, msg: str) -> None:
+        v.append(Violation("conservation", code, where, msg))
+
+    if cfg.cap_policy != report.cap_policy:
+        bad("cap-policy-mismatch", "plan",
+            f"config stamps cap_policy={cfg.cap_policy!r} but the report "
+            f"was accounted under {report.cap_policy!r}")
+        return v
+    if cfg.cap_policy not in ("exact", "bucket"):
+        bad("cap-policy-unknown", "plan",
+            f"unknown cap_policy {cfg.cap_policy!r} — the planner only "
+            "stamps 'exact' or 'bucket'")
+        return v
+
+    # padding tax == wire difference, byte for byte
+    wire = (report.wire_push_bytes + report.wire_req_bytes
+            + report.wire_reply_bytes)
+    exact_wire = (report.exact_wire_push_bytes + report.exact_wire_req_bytes
+                  + report.exact_wire_reply_bytes)
+    if report.bucket_pad_bytes != wire - exact_wire:
+        bad("bucket-pad-arithmetic", "plan",
+            f"bucket_pad_bytes={report.bucket_pad_bytes} but the wire lanes "
+            f"exceed their exact shadows by {wire - exact_wire} B — the "
+            "stamped padding tax is not the lane difference")
+
+    # exact shadow lane: reconcile word-for-word, then prove coverage
+    ex_steps = report.exact_n_pull_steps
+    if ex_steps:
+        den = ex_steps * w_req * 4
+        ex_req_slots, rem = divmod(report.exact_wire_req_bytes, den)
+        if rem:
+            bad("bucket-exact-lane", "pull",
+                f"exact_wire_req_bytes={report.exact_wire_req_bytes} is not "
+                f"a whole number of request slots (exact_n_pull_steps("
+                f"{ex_steps}) × w_req({w_req}) × 4 = {den} B/slot)")
+        else:
+            want = ex_steps * ex_req_slots * (
+                w_hdr + report.exact_pull_row_cap * w_row) * 4
+            if want != report.exact_wire_reply_bytes:
+                bad("bucket-exact-lane", "pull",
+                    f"exact reply lane does not reconcile: "
+                    f"exact_n_pull_steps({ex_steps}) × slots({ex_req_slots})"
+                    f" × (w_hdr({w_hdr}) + exact_pull_row_cap("
+                    f"{report.exact_pull_row_cap}) × w_row({w_row})) × 4 = "
+                    f"{want} B but the report claims "
+                    f"exact_wire_reply_bytes={report.exact_wire_reply_bytes}")
+        if report.exact_pull_q_cap > 0:
+            _coverage("bucket-exact-truncation", "pull", ex_steps,
+                      report.exact_pull_q_cap, report.pull_groups_max,
+                      "pulled groups per heaviest pair (exact shadow lane)",
+                      v)
+    ep_steps = report.exact_n_push_steps
+    if ep_steps:
+        den = ep_steps * w_push * 4
+        ex_push_slots, rem = divmod(report.exact_wire_push_bytes, den)
+        if rem:
+            bad("bucket-exact-lane", "push",
+                f"exact_wire_push_bytes={report.exact_wire_push_bytes} is "
+                f"not a whole number of push slots (exact_n_push_steps("
+                f"{ep_steps}) × w_push({w_push}) × 4 = {den} B/slot)")
+        else:
+            entries_need = (report.pushpull_push_entries
+                            if cfg.mode == "pushpull"
+                            else report.push_only_entries)
+            _coverage("bucket-exact-truncation", "push:total", ep_steps,
+                      ex_push_slots, entries_need,
+                      "wire slots (exact shadow lane)", v)
+
+    if cfg.cap_policy == "exact":
+        pairs = (("n_push_steps", cfg.n_push_steps, ep_steps),
+                 ("n_pull_steps", cfg.n_pull_steps, ex_steps),
+                 ("pull_q_cap", cfg.pull_q_cap, report.exact_pull_q_cap),
+                 ("pull_row_cap", cfg.pull_row_cap,
+                  report.exact_pull_row_cap),
+                 ("wire_push_bytes", report.wire_push_bytes,
+                  report.exact_wire_push_bytes),
+                 ("wire_req_bytes", report.wire_req_bytes,
+                  report.exact_wire_req_bytes),
+                 ("wire_reply_bytes", report.wire_reply_bytes,
+                  report.exact_wire_reply_bytes))
+        for name, primary, shadow in pairs:
+            if primary != shadow:
+                bad("exact-shadow-mismatch", f"plan:{name}",
+                    f"cap_policy='exact' but {name}={primary} differs from "
+                    f"its exact shadow {shadow} — under the exact policy "
+                    "the shadow lane must equal the plan itself")
+        if report.bucket_pad_bytes != 0:
+            bad("exact-shadow-mismatch", "plan:bucket_pad_bytes",
+                f"cap_policy='exact' but bucket_pad_bytes="
+                f"{report.bucket_pad_bytes} — an exact plan carries zero "
+                "bucket padding by definition")
+        return v
+
+    # --- cap_policy == "bucket": every shape knob on the grid ---
+    scalars = (("push_cap", cfg.push_cap),
+               ("n_push_steps", cfg.n_push_steps),
+               ("pull_q_cap", cfg.pull_q_cap),
+               ("pull_edge_cap", cfg.pull_edge_cap),
+               ("pull_row_cap", cfg.pull_row_cap),
+               ("n_pull_steps", cfg.n_pull_steps),
+               ("hub_wedge_cap", cfg.hub_wedge_cap),
+               ("n_hub_steps", cfg.n_hub_steps))
+    for name, val in scalars:
+        if bucket_cap(int(val)) != int(val):
+            bad("bucket-off-grid", f"plan:{name}",
+                f"cap_policy='bucket' but {name}={int(val)} is not on the "
+                f"bucket grid (bucket_cap({int(val)}) = "
+                f"{bucket_cap(int(val))}) — an off-grid knob defeats "
+                "shape-signature sharing across epochs")
+    for name, table in (("push_caps", cfg.push_caps),
+                        ("pull_caps", cfg.pull_caps)):
+        if table is None:
+            continue
+        for s, row in enumerate(table):
+            for d, x in enumerate(row):
+                if bucket_cap(int(x)) != int(x):
+                    bad("bucket-off-grid", f"plan:{name}[{s}][{d}]",
+                        f"per-pair cap {int(x)} is not on the bucket grid "
+                        f"(bucket_cap = {bucket_cap(int(x))})")
+                    break
+            else:
+                continue
+            break
+    if cfg.pull_row_cap < report.exact_pull_row_cap:
+        bad("bucket-below-exact", "plan:pull_row_cap",
+            f"bucketed pull_row_cap={cfg.pull_row_cap} is below its exact "
+            f"shadow {report.exact_pull_row_cap} — bucketing only ever "
+            "rounds capacities up, so reply rows would be truncated")
     return v

@@ -24,7 +24,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs.csr import DeltaGraph, HostGraph
-from repro.utils import ceil_div, splitmix32_np
+from repro.utils import bucket_cap, ceil_div, splitmix32_np
 
 PAD_ID = np.int32(2**31 - 1)  # sentinel target id for padded edge slots
 PAD_D = np.int32(2**30)       # sentinel degree (sorts after everything real)
@@ -478,7 +478,10 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
                 edge_new: np.ndarray | None = None, orient: str = "degree",
                 epoch: int = 0,
                 hub_theta: int = 0,
-                hub_tables: dict | None = None
+                hub_tables: dict | None = None,
+                cap_policy: str = "exact",
+                e_cap_floor: int = 0,
+                d_plus_max_floor: int = 0
                 ) -> tuple[ShardedDODGr, RoutingStats]:
     """Host-side ingestion: orient, partition cyclically, build padded CSR shards.
 
@@ -509,7 +512,24 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     hub-table-reuse path of :func:`shard_delta`. The hub *set* is still
     derived from this view's degrees and must match the prebuilt ids
     exactly; the result is stamped ``hub_rows="union"``.
+
+    ``cap_policy="bucket"`` rounds the derived array shapes — ``e_cap``,
+    ``d_plus_max``, and the inline hub-table ``hub_len`` — up to the
+    geometric bucket grid (:func:`repro.utils.bucket_cap`), matching the
+    planner's ``plan_engine(..., cap_policy="bucket")`` so drifting delta
+    epochs produce byte-compatible jit signatures. Extra slots are
+    ordinary row padding (``row_ptr`` bounds and pad sentinels already
+    mask them), so results are bitwise-identical to ``"exact"``.
+
+    ``e_cap_floor``/``d_plus_max_floor`` raise the derived values to a
+    caller-supplied minimum — the serving layer's session hysteresis: a
+    delta epoch whose frontier shrank below the session high-water mark
+    keeps the larger shapes (pure padding, still bitwise-identical)
+    instead of recompiling for the smaller ones.
     """
+    if cap_policy not in ("exact", "bucket"):
+        raise ValueError(f"cap_policy must be 'exact' or 'bucket', "
+                         f"got {cap_policy!r}")
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
     p, q, deg, h = orient_edges(g, orient)
@@ -528,6 +548,9 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
     e_cap_needed = int(counts.max()) if len(counts) else 0
     if e_cap is None:
         e_cap = max(8, int(np.ceil(e_cap_needed / 8.0) * 8))
+        if cap_policy == "bucket":
+            e_cap = bucket_cap(e_cap)
+        e_cap = max(e_cap, int(e_cap_floor))
     if e_cap < e_cap_needed:
         raise ValueError(f"e_cap {e_cap} < required {e_cap_needed}")
 
@@ -623,6 +646,8 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         if n_hubs:
             hub_row_len[:n_hubs] = d_plus[hub_ids]
             hub_len = max(1, int(d_plus[hub_ids].max()))
+            if cap_policy == "bucket":
+                hub_len = bucket_cap(hub_len)
         hub_nbr = alloc((hc, hub_len), np.int32, PAD_ID)
         hub_nbr_d = alloc((hc, hub_len), np.int32, PAD_D)
         hub_nbr_h = alloc((hc, hub_len), np.uint32)
@@ -693,10 +718,17 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
         wedge_per_shard=np.bincount(owner_s, weights=suffix, minlength=S).astype(np.int64),
     )
 
-    d_plus_max = int(d_plus.max()) if g.n else 0
+    d_plus_max = max(1, int(d_plus.max()) if g.n else 0)
+    if cap_policy == "bucket":
+        # d_plus_max is a static meta field (part of every jit signature)
+        # AND the fallback reply-row window when a plan leaves
+        # pull_row_cap=0 — every consumer masks by the true row length,
+        # so rounding it up is pure padding
+        d_plus_max = bucket_cap(d_plus_max)
+    d_plus_max = max(d_plus_max, int(d_plus_max_floor))
     gr = ShardedDODGr(
         S=S, n_global=g.n, n_loc=n_loc, e_cap=e_cap,
-        d_plus_max=max(1, d_plus_max),
+        d_plus_max=d_plus_max,
         sample_p=sample_p, sample_seed=sample_seed,
         orient=orient, epoch=epoch, is_delta=edge_new is not None,
         hub_theta=hub_theta, n_hubs=n_hubs, hub_len=hub_len,
@@ -726,7 +758,10 @@ def shard_dodgr(g: HostGraph, S: int, e_cap: int | None = None,
 def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
                 orient: str = "stable",
                 hub_theta: int = 0,
-                hub_cache: HubTableCache | None = None
+                hub_cache: HubTableCache | None = None,
+                cap_policy: str = "exact",
+                e_cap_floor: int = 0,
+                d_plus_max_floor: int = 0
                 ) -> tuple[ShardedDODGr, RoutingStats]:
     """Shard the epoch's delta frontier with the same cyclic owner map as the
     full snapshot (owner ``v % S`` is id-based, so frontier shards align with
@@ -762,7 +797,9 @@ def shard_delta(dg: DeltaGraph, S: int, e_cap: int | None = None,
             np.nonzero(h.degrees() >= hub_theta)[0])
     return shard_dodgr(h, S, e_cap=e_cap, edge_new=edge_new, orient=orient,
                        epoch=dg.epoch, hub_theta=hub_theta,
-                       hub_tables=hub_tables)
+                       hub_tables=hub_tables, cap_policy=cap_policy,
+                       e_cap_floor=e_cap_floor,
+                       d_plus_max_floor=d_plus_max_floor)
 
 
 def dodgr_spec(S: int, n_global: int, n_loc: int, e_cap: int, d_plus_max: int,

@@ -154,6 +154,16 @@ class EngineConfig:
     #                               static window overflowed and triangles
     #                               were dropped (stats carry exact=False
     #                               either way)
+    cap_policy: str = "exact"     # "exact" | "bucket" — whether the planner
+    #                               rounded every shape-determining capacity
+    #                               (superstep counts, per-pair caps, reply
+    #                               row padding) up to the geometric bucket
+    #                               grid (utils.bucket_cap) so drifting
+    #                               epochs share jit-compiled executables.
+    #                               Host-side bookkeeping only: the engine
+    #                               executes whatever caps are stamped, and
+    #                               the invalid-slot masks make bucketed
+    #                               plans bitwise-identical to exact ones
     determinism: str = "bitwise"  # fold-algebra verdict for the survey the
     #                               plan was built for, stamped by
     #                               pushpull.plan_engine from the static

@@ -50,7 +50,13 @@ from repro.core.dodgr import (delta_gen_mask, hub_widths, meta_widths,
 from repro.core.engine import EngineConfig
 from repro.core.surveys import MetaSpec, Survey
 from repro.graphs.csr import DeltaGraph, HostGraph
-from repro.utils import ceil_div
+from repro.utils import bucket_cap, bucket_caps, ceil_div
+
+__all__ = [
+    "VolumeReport", "plan_engine", "plan_delta", "plan_content_key",
+    "survey_fingerprint", "graph_token", "advance_token", "delta_token",
+    "plan_shape_signature", "bucket_cap", "bucket_caps",
+]
 
 
 @dataclass(frozen=True)
@@ -132,6 +138,29 @@ class VolumeReport:
     sched_req_slots: int = 0
     naive_req_rounds: int = 0
     naive_req_slots: int = 0
+    # --- shape bucketing (cap_policy="bucket"): the exact-policy lane
+    # shapes this plan rounded up from, and the wire bytes the bucket
+    # grid added on top of them. Always stamped (equal to the primary
+    # fields with zero padding under cap_policy="exact"), so the
+    # conservation verifier can prove "bucket ≥ exact" on every plan ---
+    cap_policy: str = "exact"
+    exact_n_push_steps: int = 0
+    exact_n_pull_steps: int = 0
+    exact_pull_q_cap: int = 0
+    exact_pull_row_cap: int = 0
+    exact_wire_push_bytes: int = 0
+    exact_wire_req_bytes: int = 0
+    exact_wire_reply_bytes: int = 0
+    bucket_pad_bytes: int = 0        # Σ over the three wire lanes of
+    #                                  (bucketed − exact) bytes
+
+    @property
+    def bucket_pad_fraction(self) -> float:
+        """Bucket-induced padding as a fraction of the (bucketed) wire
+        lane bytes — the serving bench gates this at ≤ 15%."""
+        total = (self.wire_push_bytes + self.wire_req_bytes
+                 + self.wire_reply_bytes)
+        return self.bucket_pad_bytes / max(1, total)
 
     @property
     def reduction(self) -> float:
@@ -241,17 +270,37 @@ def plan_content_key(token: str, S: int, survey, *, mode: str = "pushpull",
                      transport: str = "dense", hub_theta="auto",
                      sample_p: float = 1.0, sample_seed: int = 0,
                      orient: str = "degree", epoch: int = 0,
-                     extra=()) -> str:
+                     cap_policy: str = "exact", extra=()) -> str:
     """Content key of one planned question: everything that can change the
     plan, the sharded graph, or the compiled closure. Any difference in
     (graph epoch/token, survey MetaSpec + params, transport, hub θ, S,
-    sampling, orientation) yields a different key; equal keys are guaranteed
-    to replay the exact same (cfg, shards, jitted fn) triplet."""
+    sampling, orientation, cap policy) yields a different key; equal keys
+    are guaranteed to replay the exact same (cfg, shards, jitted fn)
+    triplet. ``cap_policy`` is part of the key even though bucketed plans
+    answer bitwise-identically — the stamped caps differ, so a persisted
+    entry must never be replayed under the other policy."""
     fp = survey if isinstance(survey, str) else survey_fingerprint(survey)
     blob = repr((token, S, fp, mode, transport, hub_theta,
                  float(sample_p), int(sample_seed), orient, int(epoch),
-                 _canon(tuple(extra))))
+                 str(cap_policy), _canon(tuple(extra))))
     return hashlib.blake2b(blob.encode(), digest_size=16).hexdigest()
+
+
+def plan_shape_signature(cfg: EngineConfig) -> tuple:
+    """Every :class:`EngineConfig` field that determines traced array
+    shapes or the structure of the compiled program — the tuple that must
+    repeat across epochs for the serving layer's jit closures to share one
+    XLA executable (the graph's own shape/meta signature is the other
+    half; see ``serve.service``). ``cfg.epoch`` and ``cfg.cap_policy``
+    are deliberately absent: both are host-side bookkeeping that never
+    enters the traced program."""
+    return (cfg.mode, cfg.push_cap, cfg.n_push_steps, cfg.pull_q_cap,
+            cfg.pull_edge_cap, cfg.n_pull_steps, cfg.pull_row_cap,
+            cfg.meta_widths, cfg.transport, cfg.push_caps, cfg.pull_caps,
+            cfg.hub_theta, cfg.n_hub_steps, cfg.hub_wedge_cap, cfg.delta,
+            cfg.unroll_steps, cfg.use_pallas, cfg.pull_kernel,
+            cfg.cost_model, cfg.sample_p, cfg.sample_seed,
+            cfg.project_meta, cfg.orient, cfg.shard_axis)
 
 
 # determinism verdicts are pure functions of (survey instance, storage
@@ -304,14 +353,24 @@ def _resolve_plan_spec(survey, g: HostGraph) -> MetaSpec:
 
 
 def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
-                         L: int) -> int:
+                         L: int, bucket: bool = False) -> int:
     """Per-survey cap from the measured pulled-group histogram: the smallest
     power of two covering the 95th percentile of per-(shard, dest) pulled
     group counts, so the typical (s, d) pair resolves in one superstep and
     only the heavy tail pays extra steps — instead of every pair paying a
     reply buffer sized for the maximum. The cap is also bounded so one
     padded reply window (``pcap`` rows of ``w_hdr + L·w_row`` words — the
-    survey-projected widths, hence *per-survey*) stays within ~4 MiB."""
+    survey-projected widths, hence *per-survey*) stays within ~4 MiB.
+
+    ``bucket=True`` (``cap_policy="bucket"``) makes the cap *epoch-stable*:
+    the histogram-max clip bound — the one input that tracks the frontier
+    integer-for-integer — is first rounded up to the bucket grid, so the
+    resolved cap is a function only of bucket-quantized histogram features
+    (the power of two over p95, ``bucket_cap(max)``, and the byte bound,
+    which depends only on the already-bucketed ``L``). Two epochs whose
+    histogram features land in the same buckets therefore resolve the
+    *identical* cap — and with it an identical ``EngineConfig`` shape
+    signature (asserted in tests/test_bucketing.py)."""
     nz = per_sd[per_sd > 0]
     if len(nz) == 0:
         return 32
@@ -321,7 +380,10 @@ def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
         cap *= 2
     row_words = max(1, w_hdr + L * w_row)
     byte_bound = max(1, (1 << 20) // row_words)  # 2²⁰ words · 4 B = 4 MiB
-    return int(np.clip(cap, 1, max(1, min(int(nz.max()), byte_bound))))
+    hi = int(nz.max())
+    if bucket:
+        hi = bucket_cap(hi)
+    return int(np.clip(cap, 1, max(1, min(hi, byte_bound))))
 
 
 def _choose_hub_theta(tdeg: np.ndarray, d_plus: np.ndarray,
@@ -406,6 +468,7 @@ def plan_engine(
     hub_wedge_cap: int = 256,
     max_hubs: int = 1024,
     on_overflow: str = "warn",
+    cap_policy: str = "exact",
 ) -> tuple[EngineConfig, VolumeReport]:
     """Plan static superstep counts/capacities and account communication.
 
@@ -446,10 +509,30 @@ def plan_engine(
     replicated rows), an int forces it, 0 disables. Shard the graph with
     the *same* θ — ``shard_dodgr(g, S, hub_theta=cfg.hub_theta)`` — or the
     provenance cross-check refuses to run.
+
+    ``cap_policy="bucket"`` rounds every shape-determining capacity —
+    superstep counts, ``push_cap``/``pull_q_cap``, per-(shard, dest)
+    transport caps, the reply row padding, ``pull_edge_cap`` — up to the
+    geometric bucket grid (:func:`repro.utils.bucket_cap`: ×1.25 rungs
+    anchored at powers of two, ≤ 25% round-up), so drifting epochs
+    resolve *identical* plan shapes and share jit-compiled executables
+    (the serving layer's recompile-tax lever — docs/serve.md). The
+    push-vs-pull decision and the hub θ choice still use exact volumes
+    (bucketing is pure shape padding, applied after every decision), the
+    engine masks every padded slot, and results stay bitwise-identical
+    to ``cap_policy="exact"`` (tests/test_bucketing.py). The report
+    stamps the exact counterparts and the induced ``bucket_pad_bytes``
+    so the cost model stays honest about the padding; shard the graph
+    with the same policy (``shard_dodgr(..., cap_policy=...)``) so the
+    array shapes bucket too.
     """
     if transport not in TRANSPORTS:
         raise ValueError(f"transport must be one of {TRANSPORTS}, "
                          f"got {transport!r}")
+    if cap_policy not in ("exact", "bucket"):
+        raise ValueError(f"cap_policy must be 'exact' or 'bucket', "
+                         f"got {cap_policy!r}")
+    bucket = cap_policy == "bucket"
     g = sparsify_edges(g, sample_p, sample_seed)
     sample_p, sample_seed = g.sample_p, g.sample_seed
     delta = edge_new is not None
@@ -545,17 +628,35 @@ def plan_engine(
     hub_w = suffix_w * hub_e
     hub_resolved = int(hub_w.sum())
     hub_per_shard = np.bincount(s_o, weights=hub_w, minlength=S)
+    if bucket:
+        hub_wedge_cap = bucket_cap(hub_wedge_cap)
     n_hub_steps = (ceil_div(int(hub_per_shard.max()), hub_wedge_cap)
                    if hub_resolved else 0)
+    if bucket:
+        n_hub_steps = bucket_cap(n_hub_steps)
 
     pushed = suffix_w[push_e]
     sd = s_o * S + d_o
     push_stream = np.bincount(sd[push_e], weights=pushed, minlength=S * S)
     max_push_stream = int(push_stream.max()) if len(push_stream) else 0
+    # exact-policy lane shape, always derived: the report stamps it next
+    # to the (possibly bucketed) primary values so the padding is auditable
+    exact_n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
+    if transport in ("ragged", "mesh"):
+        exact_push_slots = int(
+            (-(-push_stream.astype(np.int64) // exact_n_push_steps)).sum())
+    else:
+        exact_push_slots = S * S * push_cap
+    if bucket:
+        push_cap = bucket_cap(push_cap)
     n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
+    if bucket:
+        n_push_steps = bucket_cap(n_push_steps)
     push_caps = None
     if transport in ("ragged", "mesh"):
         pc = -(-push_stream.astype(np.int64) // n_push_steps)
+        if bucket:
+            pc = bucket_caps(pc)
         push_caps = tuple(tuple(int(x) for x in row)
                           for row in pc.reshape(S, S))
 
@@ -565,6 +666,10 @@ def plan_engine(
     pull_caps = None
     pull_row_cap = 0
     pull_groups_max = 0
+    exact_pull_row_cap = 0
+    exact_pull_q_cap = int(pull_q_cap) if pull_q_cap is not None else 0
+    exact_n_pull_steps = 0
+    exact_req_slots = 0
     n_pulled_groups = int(pull_group.sum())
     if mode == "pushpull" and n_pulled_groups:
         g_s = (uq // np.int64(g.n))[pull_group]
@@ -573,19 +678,35 @@ def plan_engine(
         # reply rows pad to the heaviest row actually pulled — under hub
         # delegation the heavy rows left the pull set, so this (and the
         # dominant reply volume) shrinks to the heaviest survivor
-        pull_row_cap = max(1, int(d_plus[g_q].max()))
+        exact_pull_row_cap = max(1, int(d_plus[g_q].max()))
+        pull_row_cap = (bucket_cap(exact_pull_row_cap) if bucket
+                        else exact_pull_row_cap)
         per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
         pull_groups_max = int(per_sd.max())
         if pull_q_cap is None:
-            pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
-                                              pull_row_cap)
-        n_pull_steps = max(1, ceil_div(int(per_sd.max()), pull_q_cap))
+            exact_pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
+                                                    exact_pull_row_cap)
+            pull_q_cap = (_autotune_pull_q_cap(per_sd, w_row, w_hdr,
+                                               pull_row_cap, bucket=True)
+                          if bucket else exact_pull_q_cap)
+        if bucket:
+            pull_q_cap = bucket_cap(pull_q_cap)
+        exact_n_pull_steps = max(1, ceil_div(pull_groups_max,
+                                             exact_pull_q_cap))
+        n_pull_steps = max(1, ceil_div(pull_groups_max, pull_q_cap))
+        if bucket:
+            n_pull_steps = bucket_cap(n_pull_steps)
         if transport in ("ragged", "mesh"):
+            exact_req_slots = int(
+                (-(-per_sd.astype(np.int64) // exact_n_pull_steps)).sum())
             pc = -(-per_sd.astype(np.int64) // n_pull_steps)
+            if bucket:
+                pc = bucket_caps(pc)
             pull_caps = tuple(tuple(int(x) for x in row)
                               for row in pc.reshape(S, S))
             caps_of_sd = pc
         else:
+            exact_req_slots = S * S * exact_pull_q_cap
             caps_of_sd = np.full(S * S, pull_q_cap, np.int64)
         # edges per (s,d,window): group rank within (s,d) in (q) order,
         # window = rank // cap(s,d); edge count per window
@@ -603,9 +724,17 @@ def plan_engine(
         e_sd = sd[pull_e]
         key = e_sd * (int(win.max()) + 1 if len(win) else 1) + e_win
         per_window = np.bincount(key)
+        # the window partition above used the policy-resolved caps, so the
+        # edge windows the engine executes match; the cap itself buckets
+        # like every other shape knob
         pull_edge_cap = max(1, int(per_window.max()))
+        if bucket:
+            pull_edge_cap = bucket_cap(pull_edge_cap)
     if pull_q_cap is None:
         pull_q_cap = 32  # nothing pulled — any cap is a no-op
+        exact_pull_q_cap = 32
+    elif bucket:
+        pull_q_cap = bucket_cap(int(pull_q_cap))
     if transport in ("ragged", "mesh") and pull_caps is None:
         pull_caps = tuple((0,) * S for _ in range(S))
 
@@ -628,6 +757,16 @@ def plan_engine(
     wire_req_bytes = n_pull_steps * req_slots * w_req * 4
     wire_reply_bytes = (n_pull_steps * req_slots
                         * (w_hdr + pull_row_cap * w_row) * 4)
+    # exact-policy wire bytes (== the primary fields under cap_policy=
+    # "exact"): the bucket grid's padding tax is their difference — the
+    # cost model stays honest about what bucketing added to the wire
+    exact_wire_push_bytes = exact_n_push_steps * exact_push_slots * w_push * 4
+    exact_wire_req_bytes = exact_n_pull_steps * exact_req_slots * w_req * 4
+    exact_wire_reply_bytes = (exact_n_pull_steps * exact_req_slots
+                              * (w_hdr + exact_pull_row_cap * w_row) * 4)
+    bucket_pad_bytes = ((wire_push_bytes + wire_req_bytes + wire_reply_bytes)
+                        - (exact_wire_push_bytes + exact_wire_req_bytes
+                           + exact_wire_reply_bytes))
     # --- mesh round schedule: the planner stamps the same deterministic
     # schedule the transport will execute, so the report carries the
     # physical wire structure (and the naive-rotation bound) per lane ---
@@ -681,6 +820,15 @@ def plan_engine(
         push_stream_max=max_push_stream,
         pull_groups_max=pull_groups_max,
         hub_stream_max=int(hub_per_shard.max()) if hub_resolved else 0,
+        cap_policy=cap_policy,
+        exact_n_push_steps=exact_n_push_steps,
+        exact_n_pull_steps=exact_n_pull_steps,
+        exact_pull_q_cap=exact_pull_q_cap,
+        exact_pull_row_cap=exact_pull_row_cap,
+        exact_wire_push_bytes=exact_wire_push_bytes,
+        exact_wire_req_bytes=exact_wire_req_bytes,
+        exact_wire_reply_bytes=exact_wire_reply_bytes,
+        bucket_pad_bytes=bucket_pad_bytes,
         **sched,
     )
     cfg = EngineConfig(
@@ -707,6 +855,7 @@ def plan_engine(
         n_hub_steps=n_hub_steps,
         hub_wedge_cap=hub_wedge_cap,
         on_overflow=on_overflow,
+        cap_policy=cap_policy,
         determinism=_determinism_of(
             survey, (g.spec.dvi, g.spec.dvf, g.spec.dei, g.spec.def_)),
     )

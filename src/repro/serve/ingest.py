@@ -15,11 +15,17 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable
 
 
 class IngestPipeline:
-    """FIFO batch applier on a daemon worker thread."""
+    """FIFO batch applier on a daemon worker thread.
+
+    Per-batch apply wall time is tracked (:meth:`stats`) — under the
+    serving layer's bucketed plans the dominant term is whether the epoch
+    hit or missed the jit cache, so the last/mean apply seconds are the
+    most direct observable of the recompile tax."""
 
     def __init__(self, apply: Callable[[Any], None], max_pending: int = 64):
         self._apply = apply
@@ -27,6 +33,9 @@ class IngestPipeline:
         self._error: BaseException | None = None
         self._closed = False
         self._lock = threading.Lock()
+        self._batches_applied = 0
+        self._apply_s_total = 0.0
+        self._apply_s_last = 0.0
         self._thread = threading.Thread(
             target=self._run, name="repro-serve-ingest", daemon=True)
         self._thread.start()
@@ -40,7 +49,13 @@ class IngestPipeline:
                 if batch is None:
                     return
                 if self._error is None:
+                    t0 = time.perf_counter()
                     self._apply(batch)
+                    dt = time.perf_counter() - t0
+                    with self._lock:
+                        self._batches_applied += 1
+                        self._apply_s_total += dt
+                        self._apply_s_last = dt
             except BaseException as exc:  # surfaced on flush/submit
                 with self._lock:
                     self._error = exc
@@ -70,6 +85,14 @@ class IngestPipeline:
     @property
     def pending(self) -> int:
         return self._queue.unfinished_tasks
+
+    def stats(self) -> dict:
+        """Apply-side timing: batch count, last and mean apply seconds."""
+        with self._lock:
+            n = self._batches_applied
+            return {"batches_applied": n,
+                    "apply_s_last": self._apply_s_last,
+                    "apply_s_mean": self._apply_s_total / max(1, n)}
 
     def close(self) -> None:
         """Drain remaining work, stop the worker, surface any error."""

@@ -20,13 +20,28 @@ Eviction is least-recently-used under a byte budget measured over the
 cached device arrays. The most recently inserted entry is never evicted
 by its own insertion, so a single over-budget entry still serves (and is
 dropped on the next insert).
+
+Entries also persist across processes: :func:`save_plan_cache` writes
+every entry's (content key, plan, report, shards, memoized warm-up state)
+to one ``.npz`` — no pickle, a JSON manifest plus named arrays, the same
+discipline as :func:`repro.graphs.io.save_epoch_state` — and
+:func:`load_plan_cache` rebuilds :class:`CacheEntry` objects from it. The
+jitted closure and the canonical ``Survey`` instance are process-local
+and deliberately NOT persisted (``fn=None``/``survey=None`` on restored
+entries); the serving layer re-attaches both lazily on the first content
+hit, which is cheap because ``jax.jit`` wrapping is lazy and — with the
+persistent XLA compilation cache enabled — even the eventual trace
+recompiles from disk instead of from scratch.
 """
 from __future__ import annotations
 
+import json
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from typing import Any, Callable
+
+import numpy as np
 
 
 def entry_nbytes(gr: Any) -> int:
@@ -43,17 +58,23 @@ def entry_nbytes(gr: Any) -> int:
 
 @dataclass
 class CacheEntry:
-    """Everything needed to re-answer one (survey, graph-epoch) pair."""
+    """Everything needed to re-answer one (survey, graph-epoch) pair.
+
+    ``survey`` and ``fn`` are ``None`` on entries restored by
+    :func:`load_plan_cache` (neither survives a process boundary); the
+    serving layer fills both in on the first hit. ``survey_fp`` carries
+    the fingerprint across the boundary for sanity checks."""
 
     key: str
-    survey: Any                     # canonical Survey instance the fn folds
-    cfg: Any                        # EngineConfig
-    report: Any                     # VolumeReport
-    gr: Any                         # ShardedDODGr (device-resident shards)
-    fn: Callable[[Any], Any]        # jitted make_survey_fn closure
+    survey: Any = None              # canonical Survey instance the fn folds
+    cfg: Any = None                 # EngineConfig
+    report: Any = None              # VolumeReport
+    gr: Any = None                  # ShardedDODGr (device-resident shards)
+    fn: Callable[[Any], Any] | None = None  # jitted make_survey_fn closure
     raw: Any = None                 # (merged_state, stats) of warm-up run
     nbytes: int = 0
     uses: int = 0
+    survey_fp: str = ""             # survey_fingerprint (persistence sanity)
 
 
 @dataclass
@@ -152,3 +173,155 @@ class PlanCache:
             d["bytes"] = self.nbytes_locked()
             d["byte_budget"] = self.byte_budget
             return d
+
+
+# ---------------------------------------------------------------------------
+# cross-process persistence (no pickle: JSON manifest + named npz arrays)
+# ---------------------------------------------------------------------------
+
+_PLANS_VERSION = 1
+
+
+def _json_default(o):
+    """Planner arithmetic occasionally stamps numpy scalars; JSON them as
+    the plain Python equivalents."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.bool_):
+        return bool(o)
+    raise TypeError(f"not JSON-serializable: {type(o)}")
+
+
+def _encode_tree(obj, arrays: dict, prefix: str, counter: list) -> Any:
+    """JSON-able spec of an arbitrary (dict/tuple/list/array/scalar) pytree;
+    array leaves are hoisted into ``arrays`` under generated names."""
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "py", "v": obj}
+    if isinstance(obj, dict):
+        keys = list(obj.keys())
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError("persisted state dicts must have str keys")
+        return {"t": "dict", "k": keys,
+                "v": [_encode_tree(obj[k], arrays, prefix, counter)
+                      for k in keys]}
+    if isinstance(obj, (tuple, list)):
+        return {"t": "tuple" if isinstance(obj, tuple) else "list",
+                "v": [_encode_tree(x, arrays, prefix, counter) for x in obj]}
+    arr = np.asarray(obj)   # jax arrays (incl. 0-d) land here
+    if arr.dtype == object:
+        raise TypeError(f"cannot persist object-dtype leaf {type(obj)}")
+    name = f"{prefix}{counter[0]}"
+    counter[0] += 1
+    arrays[name] = arr
+    return {"t": "arr", "n": name}
+
+
+def _decode_tree(spec, z) -> Any:
+    import jax.numpy as jnp
+
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "py":
+        return spec["v"]
+    if t == "dict":
+        return {k: _decode_tree(v, z) for k, v in zip(spec["k"], spec["v"])}
+    if t == "tuple":
+        return tuple(_decode_tree(v, z) for v in spec["v"])
+    if t == "list":
+        return [_decode_tree(v, z) for v in spec["v"]]
+    if t == "arr":
+        return jnp.asarray(z[spec["n"]])
+    raise ValueError(f"unknown persisted-tree tag {t!r}")
+
+
+def _tuplify(x):
+    """JSON round-trips tuples as lists; restore nested tuples."""
+    if isinstance(x, list):
+        return tuple(_tuplify(v) for v in x)
+    return x
+
+
+def save_plan_cache(path, cache: "PlanCache") -> int:
+    """Persist every cache entry to one ``.npz`` next to the epoch state.
+
+    Writes (content key, EngineConfig, VolumeReport, sharded graph view,
+    memoized warm-up ``raw`` state, survey fingerprint) per entry —
+    everything except the process-local jitted closure and Survey
+    instance. Returns the number of entries written. ``allow_pickle`` is
+    never used: the manifest is JSON in a 0-d str array, arrays are named
+    npz members (same discipline as :mod:`repro.graphs.io`)."""
+    from repro.core.dodgr import (META_FIELDS, PER_SHARD_FIELDS,
+                                  REPLICATED_FIELDS)
+
+    arrays: dict = {}
+    manifest: dict = {"version": _PLANS_VERSION, "entries": []}
+    with cache._lock:
+        entries = list(cache._entries.values())
+    for i, e in enumerate(entries):
+        gr_arrays = {}
+        for f in PER_SHARD_FIELDS + REPLICATED_FIELDS:
+            name = f"e{i}_gr_{f}"
+            arrays[name] = np.asarray(getattr(e.gr, f))
+            gr_arrays[f] = name
+        raw_spec = (None if e.raw is None else
+                    _encode_tree(e.raw, arrays, f"e{i}_raw_", [0]))
+        manifest["entries"].append({
+            "key": e.key,
+            "survey_fp": e.survey_fp or "",
+            "nbytes": int(e.nbytes),
+            "uses": int(e.uses),
+            "cfg": asdict(e.cfg),
+            "report": asdict(e.report),
+            "gr_meta": {f: getattr(e.gr, f) for f in META_FIELDS},
+            "gr_arrays": gr_arrays,
+            "raw": raw_spec,
+        })
+    np.savez_compressed(
+        path, manifest=np.asarray(json.dumps(manifest, default=_json_default)),
+        **arrays)
+    return len(entries)
+
+
+def load_plan_cache(path, into: "PlanCache | None" = None) -> list[CacheEntry]:
+    """Rebuild :class:`CacheEntry` objects written by
+    :func:`save_plan_cache` (``fn``/``survey`` are ``None`` — the serving
+    layer re-attaches them on first hit). Pass ``into`` to also insert
+    each entry into an existing cache, oldest first so LRU order is
+    preserved. Returns the restored entries."""
+    from repro.core.dodgr import ShardedDODGr
+    from repro.core.engine import EngineConfig
+    from repro.core.pushpull import VolumeReport
+
+    import jax.numpy as jnp
+
+    out: list[CacheEntry] = []
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+        if manifest.get("version") != _PLANS_VERSION:
+            raise ValueError(
+                f"plan-cache file version {manifest.get('version')} != "
+                f"{_PLANS_VERSION}")
+        for m in manifest["entries"]:
+            cfg_d = dict(m["cfg"])
+            for f in ("meta_widths", "push_caps", "pull_caps"):
+                cfg_d[f] = _tuplify(cfg_d.get(f))
+            cfg = EngineConfig(**cfg_d)
+            report = VolumeReport(**m["report"])
+            gr = ShardedDODGr(
+                **m["gr_meta"],
+                **{f: jnp.asarray(z[name])
+                   for f, name in m["gr_arrays"].items()})
+            raw = (None if m["raw"] is None else _decode_tree(m["raw"], z))
+            entry = CacheEntry(
+                key=m["key"], survey=None, cfg=cfg, report=report, gr=gr,
+                fn=None, raw=raw, nbytes=int(m["nbytes"]),
+                uses=int(m["uses"]), survey_fp=m.get("survey_fp", ""))
+            out.append(entry)
+            if into is not None:
+                into.insert(entry)
+    return out

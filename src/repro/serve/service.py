@@ -9,8 +9,18 @@ pipeline across requests and epochs:
   in O(answer); a miss pays plan + shard + compile once and caches it;
 * **compiles** are shared one level deeper: jitted ``make_survey_fn``
   closures are keyed by ``(survey fingerprint, cfg with epoch := 0)``
-  because ``cfg.epoch`` never enters the traced program — epochs with
-  repeating capacities reuse the XLA executable outright;
+  because ``cfg.epoch`` never enters the traced program, graph epochs are
+  normalized the same way at call time, and — under the default
+  ``cap_policy="bucket"`` — every planned capacity is rounded up to the
+  geometric bucket grid with session high-water hysteresis on the delta
+  path, so epochs whose autotuned caps merely *drift* reuse the XLA
+  executable outright (hit/recompile counters ride ``Snapshot``, query
+  stats, and :meth:`SurveyService.ingest_stats`);
+* **restarts** warm-start: :meth:`SurveyService.checkpoint` persists the
+  plan cache next to the epoch state (``.plans.npz``) and
+  :meth:`SurveyService.restore` preloads it, so the first query after a
+  restart answers from the memoized warm-up state without replanning;
+  pass ``compile_cache_dir=`` to also reuse XLA executables from disk;
 * **ingestion** rides :class:`~repro.serve.ingest.IngestPipeline`:
   ``append_edges`` batches become delta epochs on a worker thread
   (sharded with :class:`~repro.core.dodgr.HubTableCache` reuse, resident
@@ -26,6 +36,7 @@ warm == cold == solo == one-shot.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, replace
 from typing import Any, Sequence
@@ -43,7 +54,50 @@ from repro.graphs.csr import DeltaGraph, HostGraph
 from repro.serve.coalesce import (TenantRequest, coalesce, extract,
                                   warn_if_order_sensitive)
 from repro.serve.ingest import IngestPipeline
-from repro.serve.plan_cache import CacheEntry, PlanCache, entry_nbytes
+from repro.serve.plan_cache import (CacheEntry, PlanCache, entry_nbytes,
+                                    load_plan_cache, save_plan_cache)
+
+
+def enable_persistent_compilation_cache(cache_dir) -> bool:
+    """Route XLA compiles through JAX's on-disk compilation cache.
+
+    With this enabled (plus a plan-cache file from
+    :meth:`SurveyService.checkpoint`), a restarted service warm-starts:
+    plans replay from the ``.plans.npz`` and any executable that does get
+    re-traced deserializes from ``cache_dir`` instead of recompiling.
+    Returns False when this jax build has no such config knob."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    except Exception:
+        return False
+    # compile-time/size floors default to skipping small programs; drop
+    # them so the serve-scale traversals always persist (best-effort —
+    # older jax builds lack the knobs)
+    for flag, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                      ("jax_persistent_cache_min_entry_size_bytes", 0)):
+        try:
+            jax.config.update(flag, val)
+        except Exception:
+            pass
+    return True
+
+
+def _graph_signature(gr) -> tuple:
+    """Everything jit keys a call on: the pytree structure (which carries
+    every static meta field of the registered dataclass) plus each leaf's
+    (shape, dtype). Two graphs with equal signatures reuse one compiled
+    executable under the same jitted closure."""
+    leaves, treedef = jax.tree_util.tree_flatten(gr)
+    return (str(treedef),
+            tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves))
+
+
+def _plans_path(path) -> str:
+    """Sidecar plan-cache file next to an epoch-state checkpoint."""
+    p = str(path)
+    if p.endswith(".npz"):
+        p = p[:-4]
+    return p + ".plans.npz"
 
 
 @dataclass(frozen=True)
@@ -56,6 +110,8 @@ class Snapshot:
     union: HostGraph
     dg: DeltaGraph | None    # None before the first appended batch
     resident_state: Any      # resident bundle's merged accumulator (or None)
+    jit_hits: int = 0        # cumulative executable reuses as of this swap
+    jit_recompiles: int = 0  # cumulative fresh traces as of this swap
 
 
 class SurveyService:
@@ -87,11 +143,19 @@ class SurveyService:
                  resident: dict[str, Survey] | None = None,
                  max_pending: int = 64,
                  token: str | None = None,
-                 epoch: int = 0):
+                 epoch: int = 0,
+                 cap_policy: str = "bucket",
+                 preload_plans: Sequence[CacheEntry] | None = None,
+                 compile_cache_dir=None):
         if sample_p < 1.0 and resident:
             raise ValueError("resident surveys ride the delta engine, which "
                              "rejects DOULION sampling — serve sampled "
                              "questions as ad-hoc queries instead")
+        if cap_policy not in ("exact", "bucket"):
+            raise ValueError(f"cap_policy must be 'exact' or 'bucket', "
+                             f"got {cap_policy!r}")
+        if compile_cache_dir is not None:
+            enable_persistent_compilation_cache(compile_cache_dir)
         self.S = int(S)
         self.mode = mode
         self.transport = transport
@@ -102,10 +166,31 @@ class SurveyService:
         self.max_hubs = max_hubs
         self.sample_p = float(sample_p)
         self.sample_seed = int(sample_seed)
+        # "bucket" (the default) rounds every planned capacity up to the
+        # geometric grid (utils.bucket_cap) so epochs whose autotuned caps
+        # drift inside one bucket reuse the same compiled executable;
+        # results are bitwise-identical to "exact" (the engine masks all
+        # padded slots) at ≤ 25% wire padding per capacity
+        self.cap_policy = cap_policy
         self._mesh = mesh
         self.cache = PlanCache(cache_bytes)
         self._jit_cache: dict = {}
+        self._jit_lock = threading.Lock()
+        self._compiled: set = set()    # (jit key, graph signature) seen
+        self._jit_hits = 0
+        self._jit_recompiles = 0
         self._epochs_applied = 0
+        # session shape hysteresis (delta path, cap_policy="bucket" only):
+        # high-water marks so an epoch whose frontier shrank keeps the
+        # previous shapes (pure padding) instead of retracing for smaller
+        # ones — rung-boundary jitter then costs at most one recompile
+        # per boundary instead of one per oscillation
+        self._shape_hw = None          # last promoted delta EngineConfig
+        self._ecap_hw = 0
+        self._dmax_hw = 0
+        if preload_plans:
+            for entry in preload_plans:
+                self.cache.insert(entry)
 
         self._resident = (SurveyBundle(list(resident.values()),
                                        names=list(resident.keys()))
@@ -120,6 +205,14 @@ class SurveyService:
                                   dg=None, resident_state=None)
         if self._resident is not None:
             entry, _, _ = self._prepare(self._resident)
+            if self.cap_policy == "bucket":
+                # frontier max d₊ can never exceed the union's (touched
+                # vertices carry their full adjacency rows), so seeding the
+                # session high-water from the warm-up shard removes one
+                # whole recompile source — and costs nothing: d_plus_max
+                # is only a fallback window when a plan leaves
+                # pull_row_cap=0
+                self._dmax_hw = entry.gr.d_plus_max
             self._snapshot = replace(self._snapshot,
                                      resident_state=entry.raw[0])
         self._ingest = IngestPipeline(self._apply_batch,
@@ -141,18 +234,77 @@ class SurveyService:
             snap.token, self.S, survey, mode=self.mode,
             transport=self.transport, hub_theta=self.hub_theta,
             sample_p=self.sample_p, sample_seed=self.sample_seed,
-            orient="stable", epoch=snap.epoch)
+            orient="stable", epoch=snap.epoch, cap_policy=self.cap_policy)
 
     def _jit_for(self, survey: Survey, cfg) -> Any:
-        """Compile cache: ``cfg.epoch`` is host-side only (provenance +
-        stats), so normalizing it to 0 lets epochs with identical
-        capacities share one XLA executable."""
+        """Compile cache keyed by the *bucketed* shape signature.
+
+        ``cfg.epoch`` and ``gr.epoch`` are host-side only (provenance +
+        stats — nothing traced reads either), so both are normalized to 0:
+        epochs whose planned capacities land in the same buckets share one
+        jitted closure AND one XLA executable. The returned closure also
+        counts executable reuse: each call's (jit key, graph signature)
+        pair is checked against the set already traced — a repeat is a
+        ``jit_hits`` tick, a new pair a ``jit_recompiles`` tick (surfaced
+        via :meth:`ingest_stats` / query stats / :class:`Snapshot`)."""
         jkey = (survey_fingerprint(survey), replace(cfg, epoch=0))
-        fn = self._jit_cache.get(jkey)
-        if fn is None:
-            fn = jax.jit(make_survey_fn(survey, cfg, mesh=self._mesh))
-            self._jit_cache[jkey] = fn
-        return fn
+        with self._jit_lock:
+            fn = self._jit_cache.get(jkey)
+        if fn is not None:
+            return fn
+        jitted = jax.jit(make_survey_fn(survey, cfg, mesh=self._mesh))
+
+        def fn(gr, _jkey=jkey, _jitted=jitted):
+            gr0 = replace(gr, epoch=0)
+            sig = (_jkey, _graph_signature(gr0))
+            with self._jit_lock:
+                if sig in self._compiled:
+                    self._jit_hits += 1
+                else:
+                    self._compiled.add(sig)
+                    self._jit_recompiles += 1
+            return _jitted(gr0)
+
+        with self._jit_lock:
+            self._jit_cache.setdefault(jkey, fn)
+            return self._jit_cache[jkey]
+
+    _PROMOTE_FIELDS = ("push_cap", "n_push_steps", "pull_q_cap",
+                       "pull_edge_cap", "n_pull_steps", "pull_row_cap")
+
+    def _promote_cfg(self, cfg):
+        """Delta-path shape hysteresis: raise every shape-determining
+        capacity to the session high-water mark, so a frontier whose caps
+        drifted *down* a bucket rung reuses the previous executable
+        instead of retracing. Raising caps only adds masked padding slots
+        (the same invariant that makes bucketing bitwise-safe), so
+        promoted plans answer identically. The mark resets whenever the
+        non-promotable plan structure (mode/transport/θ/widths) changes."""
+        if self.cap_policy != "bucket":
+            return cfg
+        prev = self._shape_hw
+
+        def family(c):
+            # promotion only applies within one plan structure — caps are
+            # comparable when mode/transport/θ/widths agree (θ here gates
+            # shape promotion; run-time provenance is still verified by
+            # engine._check_provenance)
+            return (c.mode, c.transport, c.hub_theta, c.meta_widths)
+
+        if prev is not None and family(prev) == family(cfg):
+            kw = {f: max(getattr(cfg, f), getattr(prev, f))
+                  for f in self._PROMOTE_FIELDS}
+            kw["n_hub_steps"] = max(cfg.n_hub_steps, prev.n_hub_steps)
+            kw["hub_wedge_cap"] = max(cfg.hub_wedge_cap, prev.hub_wedge_cap)
+            for f in ("push_caps", "pull_caps"):
+                a, b = getattr(cfg, f), getattr(prev, f)
+                if a is not None and b is not None and len(a) == len(b):
+                    # ragged transports carry S×S nested per-pair caps
+                    kw[f] = tuple(tuple(max(x, y) for x, y in zip(ra, rb))
+                                  for ra, rb in zip(a, b))
+            cfg = replace(cfg, **kw)
+        self._shape_hw = cfg
+        return cfg
 
     def _prepare(self, survey: Survey,
                  snap: Snapshot | None = None) -> tuple[CacheEntry, bool, float]:
@@ -163,6 +315,14 @@ class SurveyService:
         t0 = time.perf_counter()
         entry = self.cache.lookup(key)
         if entry is not None:
+            if entry.fn is None:
+                # restored by load_plan_cache: the plan/shards/memo crossed
+                # the process boundary, the Survey instance and jitted
+                # closure did not — re-attach both (jit wrapping is lazy,
+                # so this costs microseconds; the memoized raw state means
+                # an exact repeat never even calls it)
+                entry.survey = survey
+                entry.fn = self._jit_for(survey, entry.cfg)
             return entry, True, time.perf_counter() - t0
         cfg, report = plan_engine(
             snap.union, self.S, survey, mode=self.mode,
@@ -170,16 +330,17 @@ class SurveyService:
             sample_p=self.sample_p, sample_seed=self.sample_seed,
             orient="stable", epoch=snap.epoch, transport=self.transport,
             hub_theta=self.hub_theta, hub_wedge_cap=self.hub_wedge_cap,
-            max_hubs=self.max_hubs)
+            max_hubs=self.max_hubs, cap_policy=self.cap_policy)
         gr, _ = shard_dodgr(
             snap.union, self.S, sample_p=self.sample_p,
             sample_seed=self.sample_seed, orient="stable", epoch=snap.epoch,
-            hub_theta=cfg.hub_theta)
+            hub_theta=cfg.hub_theta, cap_policy=self.cap_policy)
         fn = self._jit_for(survey, cfg)
         raw = jax.block_until_ready(fn(gr))   # compile + warm-up traversal
         entry = self.cache.insert(CacheEntry(
             key=key, survey=survey, cfg=cfg, report=report, gr=gr, fn=fn,
-            raw=raw, nbytes=entry_nbytes(gr)))
+            raw=raw, nbytes=entry_nbytes(gr),
+            survey_fp=survey_fingerprint(survey)))
         return entry, False, time.perf_counter() - t0
 
     def _annotate(self, stats: dict, *, hit: bool, setup_s: float,
@@ -191,6 +352,10 @@ class SurveyService:
         for k, v in self.cache.stats().items():
             if isinstance(v, (int, float)):
                 stats[f"plan_cache_{k}"] = float(v)
+        with self._jit_lock:
+            stats["jit_cache_hits"] = float(self._jit_hits)
+            stats["jit_cache_recompiles"] = float(self._jit_recompiles)
+            stats["jit_cache_entries"] = float(len(self._compiled))
         return stats
 
     def query(self, survey: Survey, *, rerun: bool = False):
@@ -278,13 +443,23 @@ class SurveyService:
                 dg, self.S, self._resident, mode=self.mode,
                 push_cap=self.push_cap, pull_q_cap=self.pull_q_cap,
                 transport=self.transport, hub_theta=self.hub_theta,
-                hub_wedge_cap=self.hub_wedge_cap, max_hubs=self.max_hubs)
+                hub_wedge_cap=self.hub_wedge_cap, max_hubs=self.max_hubs,
+                cap_policy=self.cap_policy)
+            cfg_d = self._promote_cfg(cfg_d)
             if self._hub_cache is not None:
                 # keep the union-adjacency chain gapless even on epochs
                 # whose resolved θ disables hub delegation (idempotent)
                 self._hub_cache.advance(dg)
+            bucket = self.cap_policy == "bucket"
             gr_d, _ = shard_delta(dg, self.S, hub_theta=cfg_d.hub_theta,
-                                  hub_cache=self._hub_cache)
+                                  hub_cache=self._hub_cache,
+                                  cap_policy=self.cap_policy,
+                                  e_cap_floor=self._ecap_hw if bucket else 0,
+                                  d_plus_max_floor=(self._dmax_hw
+                                                    if bucket else 0))
+            if bucket:
+                self._ecap_hw = max(self._ecap_hw, gr_d.e_cap)
+                self._dmax_hw = max(self._dmax_hw, gr_d.d_plus_max)
             fn = self._jit_for(self._resident, cfg_d)
             engine._check_provenance(gr_d, cfg_d)
             merged, _ = jax.block_until_ready(fn(gr_d))
@@ -292,9 +467,12 @@ class SurveyService:
                                                      merged)
                          if snap.resident_state is not None else merged)
 
+        with self._jit_lock:
+            jh, jr = self._jit_hits, self._jit_recompiles
         self._snapshot = Snapshot(epoch=dg.epoch, token=token,
                                   union=dg.union(), dg=dg,
-                                  resident_state=new_state)
+                                  resident_state=new_state,
+                                  jit_hits=jh, jit_recompiles=jr)
         self._epochs_applied += 1
 
     def flush(self) -> None:
@@ -305,6 +483,11 @@ class SurveyService:
         d = {"epochs_applied": self._epochs_applied,
              "pending": self._ingest.pending,
              "epoch": self._snapshot.epoch}
+        with self._jit_lock:
+            d["jit_cache_hits"] = self._jit_hits
+            d["jit_cache_recompiles"] = self._jit_recompiles
+            d["jit_cache_entries"] = len(self._compiled)
+        d.update(self._ingest.stats())
         if self._hub_cache is not None:
             d["hub_rows_reused"] = self._hub_cache.rows_reused
             d["hub_rows_refreshed"] = self._hub_cache.rows_refreshed
@@ -313,9 +496,12 @@ class SurveyService:
 
     # -- persistence ------------------------------------------------------
 
-    def checkpoint(self, path) -> None:
+    def checkpoint(self, path, *, plans: bool = True) -> None:
         """Persist the current epoch state (graph + token chain) so a
-        restarted service resumes the same content keys."""
+        restarted service resumes the same content keys — and, unless
+        ``plans=False``, every plan-cache entry to a ``.plans.npz``
+        sidecar (:func:`repro.serve.plan_cache.save_plan_cache`) so the
+        restart also resumes the plans themselves."""
         from repro.graphs import io as gio
 
         snap = self._snapshot
@@ -330,15 +516,26 @@ class SurveyService:
                             d_emeta_f=np.zeros((0, def_), np.float32),
                             epoch=snap.epoch)
         gio.save_epoch_state(path, dg, token=snap.token)
+        if plans:
+            save_plan_cache(_plans_path(path), self.cache)
 
     @classmethod
     def restore(cls, path, S: int, **kwargs) -> "SurveyService":
-        """Rebuild a service from :meth:`checkpoint` output. Plans are
-        re-derived lazily (the cache is in-memory), but the token chain —
-        and therefore every content key — continues where it left off."""
+        """Rebuild a service from :meth:`checkpoint` output. The token
+        chain — and therefore every content key — continues where it left
+        off, and when the ``.plans.npz`` sidecar exists the plan cache is
+        preloaded from it: the first query of a persisted question answers
+        from the memoized warm-up state without replanning, resharding, or
+        retracing."""
+        import os
+
         from repro.graphs import io as gio
 
         dg, token = gio.load_epoch_state(path)
+        if "preload_plans" not in kwargs:
+            pp = _plans_path(path)
+            if os.path.exists(pp):
+                kwargs["preload_plans"] = load_plan_cache(pp)
         return cls(dg.union(), S, token=token, epoch=dg.epoch, **kwargs)
 
     # -- lifecycle --------------------------------------------------------

@@ -18,7 +18,52 @@ __all__ = [
     "ceil_div",
     "pad_to",
     "pad_axis_to",
+    "bucket_cap",
+    "bucket_caps",
 ]
+
+
+# geometric shape-bucket grid: within each power-of-two octave [2^k, 2^(k+1))
+# the rungs approximate ceil(2^k · 2^(j/4)), j = 0..3, as exact integer
+# fractions so the grid is identical on every host. Every power of two is
+# an anchor and successive rungs are an even ~19% apart — deliberately NOT
+# ×1.25 steps, whose fourth rung (1.25³ ≈ 1.953) sits 2.4% under the next
+# anchor and turns tiny epoch-to-epoch jitter into rung flips. Bucketed
+# capacities drift through four values per octave instead of one per
+# integer, with worst-case round-up < 20%.
+_BUCKET_RUNGS = ((1, 1), (19, 16), (45, 32), (27, 16))
+
+
+def bucket_cap(x: int) -> int:
+    """Round a shape-determining capacity up to the bucket grid.
+
+    The smallest grid value ≥ ``x``, where the grid is
+    ``ceil(2^k · 2^(j/4))`` for ``k ≥ 0, j ∈ {0..3}`` (integer-fraction
+    rungs, see ``_BUCKET_RUNGS``). 0 and 1 are their own buckets; the
+    function is idempotent (grid values map to themselves) and monotone —
+    the two properties the bucketing conservation pass
+    (:mod:`repro.analysis.conservation`) re-verifies on every stamped
+    ``cap_policy="bucket"`` plan."""
+    x = int(x)
+    if x <= 1:
+        return max(x, 0)
+    k = x.bit_length() - 1
+    if (1 << k) == x:
+        return x
+    for kk in (k, k + 1):
+        base = 1 << kk
+        for num, den in _BUCKET_RUNGS:
+            v = -(-base * num // den)
+            if v >= x:
+                return v
+    raise AssertionError(f"bucket grid has no rung >= {x}")  # unreachable
+
+
+def bucket_caps(a: "np.ndarray") -> "np.ndarray":
+    """Elementwise :func:`bucket_cap` over an integer array (host-side)."""
+    flat = np.asarray(a, np.int64).ravel()
+    return np.array([bucket_cap(int(x)) for x in flat],
+                    np.int64).reshape(np.shape(a))
 
 
 def _mix(x, xp):

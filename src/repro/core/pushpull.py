@@ -50,7 +50,7 @@ from repro.core.dodgr import (delta_gen_mask, hub_widths, meta_widths,
 from repro.core.engine import EngineConfig
 from repro.core.surveys import MetaSpec, Survey
 from repro.graphs.csr import DeltaGraph, HostGraph
-from repro.utils import bucket_cap, bucket_caps, ceil_div
+from repro.utils import bucket_cap, bucket_caps, bucket_floor, ceil_div
 
 __all__ = [
     "VolumeReport", "plan_engine", "plan_delta", "plan_content_key",
@@ -362,15 +362,20 @@ def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
     padded reply window (``pcap`` rows of ``w_hdr + L·w_row`` words — the
     survey-projected widths, hence *per-survey*) stays within ~4 MiB.
 
-    ``bucket=True`` (``cap_policy="bucket"``) makes the cap *epoch-stable*:
-    the histogram-max clip bound — the one input that tracks the frontier
-    integer-for-integer — is first rounded up to the bucket grid, so the
-    resolved cap is a function only of bucket-quantized histogram features
-    (the power of two over p95, ``bucket_cap(max)``, and the byte bound,
-    which depends only on the already-bucketed ``L``). Two epochs whose
-    histogram features land in the same buckets therefore resolve the
-    *identical* cap — and with it an identical ``EngineConfig`` shape
-    signature (asserted in tests/test_bucketing.py)."""
+    ``bucket=True`` (``cap_policy="bucket"``) makes the cap *epoch-stable*
+    and *on-grid*: every clip endpoint is quantized to the bucket grid —
+    the histogram-max bound (the one input that tracks the frontier
+    integer-for-integer) rounds UP, the byte bound rounds DOWN (so the
+    returned cap never exceeds the ~4 MiB reply-window budget; callers
+    must not re-round it up) — and the p95 itself enters only through
+    the next power of two, a quantization one octave coarser than the
+    grid. The resolved cap is therefore a function only of quantized
+    histogram features (pow2 ≥ p95, ``bucket_cap(max)``, and the byte
+    bound, which depends only on the already-bucketed ``L``): two epochs
+    whose features land in the same buckets resolve the *identical* cap
+    — and with it an identical ``EngineConfig`` shape signature
+    (asserted in tests/test_bucketing.py). Since powers of two and both
+    bounds are grid values, the result is always a grid fixed point."""
     nz = per_sd[per_sd > 0]
     if len(nz) == 0:
         return 32
@@ -383,6 +388,7 @@ def _autotune_pull_q_cap(per_sd: np.ndarray, w_row: int, w_hdr: int,
     hi = int(nz.max())
     if bucket:
         hi = bucket_cap(hi)
+        byte_bound = bucket_floor(byte_bound)
     return int(np.clip(cap, 1, max(1, min(hi, byte_bound))))
 
 
@@ -469,6 +475,7 @@ def plan_engine(
     max_hubs: int = 1024,
     on_overflow: str = "warn",
     cap_policy: str = "exact",
+    promote_from: EngineConfig | None = None,
 ) -> tuple[EngineConfig, VolumeReport]:
     """Plan static superstep counts/capacities and account communication.
 
@@ -525,6 +532,24 @@ def plan_engine(
     so the cost model stays honest about the padding; shard the graph
     with the same policy (``shard_dodgr(..., cap_policy=...)``) so the
     array shapes bucket too.
+
+    ``promote_from`` (``cap_policy="bucket"`` only) is session shape
+    hysteresis for epoch streams: pass the previous epoch's config and
+    every shape-determining capacity is raised to at least that config's
+    value *before* the dependent quantities are derived, so an epoch
+    whose caps drifted down a bucket rung resolves the previous shape
+    signature (and reuses its compiled executable) instead of a smaller
+    one. Promotion happens here — inside the planner — because raising
+    ``pull_q_cap``/``pull_caps`` widens the runtime pull windows (the
+    engine partitions pulled groups by rank over exactly these caps), so
+    ``pull_edge_cap`` must be re-measured from this epoch's edge
+    histogram under the *promoted* partition; promoting a finished plan
+    after the fact can overflow windows and silently drop triangles.
+    All other promoted knobs only add slots the engine masks, so a
+    promoted plan answers bitwise-identically to its unpromoted twin
+    (tests/test_bucketing.py). The hysteresis is ignored — caps are not
+    comparable — when the plan structure differs (mode, transport,
+    resolved hub θ, delta-ness, projected widths, or shard count).
     """
     if transport not in TRANSPORTS:
         raise ValueError(f"transport must be one of {TRANSPORTS}, "
@@ -608,6 +633,18 @@ def plan_engine(
             raise ValueError(f"hub_theta must be ≥ 1 (or 0/'auto'), "
                              f"got {theta}")
 
+    # session shape hysteresis: the previous epoch's caps are floors, but
+    # only within one plan structure — a different mode/transport/θ/width
+    # (or policy, or shard count) resets the mark to this plan alone
+    prev = promote_from if bucket else None
+    if prev is not None and not (
+            prev.cap_policy == "bucket" and prev.mode == mode
+            and prev.transport == transport and prev.delta == delta
+            and prev.hub_theta == theta
+            and prev.meta_widths == (w_push, w_row, w_hdr, w_req)
+            and (prev.push_caps is None or len(prev.push_caps) == S)):
+        prev = None
+
     if theta >= 1:
         hub_v = tdeg >= theta
         n_hubs = int(hub_v.sum())
@@ -630,10 +667,15 @@ def plan_engine(
     hub_per_shard = np.bincount(s_o, weights=hub_w, minlength=S)
     if bucket:
         hub_wedge_cap = bucket_cap(hub_wedge_cap)
+        if prev is not None:
+            hub_wedge_cap = max(hub_wedge_cap, prev.hub_wedge_cap)
     n_hub_steps = (ceil_div(int(hub_per_shard.max()), hub_wedge_cap)
                    if hub_resolved else 0)
     if bucket:
         n_hub_steps = bucket_cap(n_hub_steps)
+        if prev is not None:
+            # extra hub supersteps only scan empty (masked) wedge slots
+            n_hub_steps = max(n_hub_steps, prev.n_hub_steps)
 
     pushed = suffix_w[push_e]
     sd = s_o * S + d_o
@@ -649,14 +691,25 @@ def plan_engine(
         exact_push_slots = S * S * push_cap
     if bucket:
         push_cap = bucket_cap(push_cap)
+        if prev is not None:
+            push_cap = max(push_cap, prev.push_cap)
     n_push_steps = max(1, ceil_div(max_push_stream, push_cap))
     if bucket:
         n_push_steps = bucket_cap(n_push_steps)
+        if prev is not None:
+            n_push_steps = max(n_push_steps, prev.n_push_steps)
     push_caps = None
     if transport in ("ragged", "mesh"):
+        # per-pair caps derive from the already-promoted step count, so
+        # n_steps × cap still covers each pair's stream; the push lane's
+        # window width equals its slot count, so raising either is pure
+        # masked padding (unlike the pull lane's edge windows below)
         pc = -(-push_stream.astype(np.int64) // n_push_steps)
         if bucket:
             pc = bucket_caps(pc)
+            if prev is not None and prev.push_caps is not None:
+                pc = np.maximum(
+                    pc, np.asarray(prev.push_caps, np.int64).reshape(-1))
         push_caps = tuple(tuple(int(x) for x in row)
                           for row in pc.reshape(S, S))
 
@@ -681,27 +734,38 @@ def plan_engine(
         exact_pull_row_cap = max(1, int(d_plus[g_q].max()))
         pull_row_cap = (bucket_cap(exact_pull_row_cap) if bucket
                         else exact_pull_row_cap)
+        if prev is not None:
+            pull_row_cap = max(pull_row_cap, prev.pull_row_cap)
         per_sd = np.bincount(g_s * S + g_d, minlength=S * S)
         pull_groups_max = int(per_sd.max())
         if pull_q_cap is None:
             exact_pull_q_cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr,
                                                     exact_pull_row_cap)
+            # the bucket=True autotune is already on-grid within the
+            # reply-window byte bound — re-rounding up here would breach it
             pull_q_cap = (_autotune_pull_q_cap(per_sd, w_row, w_hdr,
                                                pull_row_cap, bucket=True)
                           if bucket else exact_pull_q_cap)
-        if bucket:
-            pull_q_cap = bucket_cap(pull_q_cap)
+        elif bucket:
+            pull_q_cap = bucket_cap(int(pull_q_cap))
+        if prev is not None:
+            pull_q_cap = max(pull_q_cap, prev.pull_q_cap)
         exact_n_pull_steps = max(1, ceil_div(pull_groups_max,
                                              exact_pull_q_cap))
         n_pull_steps = max(1, ceil_div(pull_groups_max, pull_q_cap))
         if bucket:
             n_pull_steps = bucket_cap(n_pull_steps)
+            if prev is not None:
+                n_pull_steps = max(n_pull_steps, prev.n_pull_steps)
         if transport in ("ragged", "mesh"):
             exact_req_slots = int(
                 (-(-per_sd.astype(np.int64) // exact_n_pull_steps)).sum())
             pc = -(-per_sd.astype(np.int64) // n_pull_steps)
             if bucket:
                 pc = bucket_caps(pc)
+                if prev is not None and prev.pull_caps is not None:
+                    pc = np.maximum(
+                        pc, np.asarray(prev.pull_caps, np.int64).reshape(-1))
             pull_caps = tuple(tuple(int(x) for x in row)
                               for row in pc.reshape(S, S))
             caps_of_sd = pc
@@ -724,17 +788,34 @@ def plan_engine(
         e_sd = sd[pull_e]
         key = e_sd * (int(win.max()) + 1 if len(win) else 1) + e_win
         per_window = np.bincount(key)
-        # the window partition above used the policy-resolved caps, so the
-        # edge windows the engine executes match; the cap itself buckets
-        # like every other shape knob
+        # the window partition above used the policy-resolved (and, under
+        # hysteresis, promoted) caps, so the edge windows the engine
+        # executes match — this is why promotion lives in the planner:
+        # pull_edge_cap is only valid for the exact caps_of_sd it was
+        # measured under. The cap itself buckets (and promotes) like
+        # every other shape knob: raising it only widens masked slots.
         pull_edge_cap = max(1, int(per_window.max()))
         if bucket:
             pull_edge_cap = bucket_cap(pull_edge_cap)
+            if prev is not None:
+                pull_edge_cap = max(pull_edge_cap, prev.pull_edge_cap)
     if pull_q_cap is None:
         pull_q_cap = 32  # nothing pulled — any cap is a no-op
         exact_pull_q_cap = 32
     elif bucket:
         pull_q_cap = bucket_cap(int(pull_q_cap))
+    if (prev is not None and mode == "pushpull" and not n_pulled_groups
+            and prev.n_pull_steps):
+        # nothing pulled this epoch but the session shape has a pull lane:
+        # adopt it wholesale — every window scans zero groups, so the
+        # promoted lane is pure masked padding and the shape signature
+        # (hence the executable) repeats
+        pull_q_cap = max(pull_q_cap, prev.pull_q_cap)
+        n_pull_steps = prev.n_pull_steps
+        pull_edge_cap = max(pull_edge_cap, prev.pull_edge_cap)
+        pull_row_cap = max(pull_row_cap, prev.pull_row_cap)
+        if prev.pull_caps is not None:
+            pull_caps = prev.pull_caps
     if transport in ("ragged", "mesh") and pull_caps is None:
         pull_caps = tuple((0,) * S for _ in range(S))
 

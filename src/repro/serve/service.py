@@ -181,11 +181,14 @@ class SurveyService:
         self._jit_recompiles = 0
         self._epochs_applied = 0
         # session shape hysteresis (delta path, cap_policy="bucket" only):
-        # high-water marks so an epoch whose frontier shrank keeps the
-        # previous shapes (pure padding) instead of retracing for smaller
-        # ones — rung-boundary jitter then costs at most one recompile
-        # per boundary instead of one per oscillation
-        self._shape_hw = None          # last promoted delta EngineConfig
+        # the last delta config is fed back to the planner (promote_from)
+        # to floor every shape cap, so an epoch whose frontier shrank
+        # keeps the previous shapes — the planner re-measures
+        # pull_edge_cap under the promoted pull windows, which is what
+        # keeps promotion pure padding — and rung-boundary jitter costs
+        # at most one recompile per boundary instead of one per
+        # oscillation
+        self._shape_hw = None          # last delta EngineConfig
         self._ecap_hw = 0
         self._dmax_hw = 0
         if preload_plans:
@@ -268,43 +271,6 @@ class SurveyService:
         with self._jit_lock:
             self._jit_cache.setdefault(jkey, fn)
             return self._jit_cache[jkey]
-
-    _PROMOTE_FIELDS = ("push_cap", "n_push_steps", "pull_q_cap",
-                       "pull_edge_cap", "n_pull_steps", "pull_row_cap")
-
-    def _promote_cfg(self, cfg):
-        """Delta-path shape hysteresis: raise every shape-determining
-        capacity to the session high-water mark, so a frontier whose caps
-        drifted *down* a bucket rung reuses the previous executable
-        instead of retracing. Raising caps only adds masked padding slots
-        (the same invariant that makes bucketing bitwise-safe), so
-        promoted plans answer identically. The mark resets whenever the
-        non-promotable plan structure (mode/transport/θ/widths) changes."""
-        if self.cap_policy != "bucket":
-            return cfg
-        prev = self._shape_hw
-
-        def family(c):
-            # promotion only applies within one plan structure — caps are
-            # comparable when mode/transport/θ/widths agree (θ here gates
-            # shape promotion; run-time provenance is still verified by
-            # engine._check_provenance)
-            return (c.mode, c.transport, c.hub_theta, c.meta_widths)
-
-        if prev is not None and family(prev) == family(cfg):
-            kw = {f: max(getattr(cfg, f), getattr(prev, f))
-                  for f in self._PROMOTE_FIELDS}
-            kw["n_hub_steps"] = max(cfg.n_hub_steps, prev.n_hub_steps)
-            kw["hub_wedge_cap"] = max(cfg.hub_wedge_cap, prev.hub_wedge_cap)
-            for f in ("push_caps", "pull_caps"):
-                a, b = getattr(cfg, f), getattr(prev, f)
-                if a is not None and b is not None and len(a) == len(b):
-                    # ragged transports carry S×S nested per-pair caps
-                    kw[f] = tuple(tuple(max(x, y) for x, y in zip(ra, rb))
-                                  for ra, rb in zip(a, b))
-            cfg = replace(cfg, **kw)
-        self._shape_hw = cfg
-        return cfg
 
     def _prepare(self, survey: Survey,
                  snap: Snapshot | None = None) -> tuple[CacheEntry, bool, float]:
@@ -439,13 +405,22 @@ class SurveyService:
 
         new_state = snap.resident_state
         if self._resident is not None:
+            # session shape hysteresis happens *inside* the planner
+            # (promote_from): the previous delta config's caps floor this
+            # epoch's, and the planner re-measures pull_edge_cap under the
+            # promoted pull-window partition — promoting a finished plan
+            # out here would widen the runtime windows past the measured
+            # edge cap and silently drop triangles. on_overflow="raise"
+            # because an overflow on this path would corrupt the
+            # accumulated resident_state for every later answer.
             cfg_d, _ = plan_delta(
                 dg, self.S, self._resident, mode=self.mode,
                 push_cap=self.push_cap, pull_q_cap=self.pull_q_cap,
                 transport=self.transport, hub_theta=self.hub_theta,
                 hub_wedge_cap=self.hub_wedge_cap, max_hubs=self.max_hubs,
-                cap_policy=self.cap_policy)
-            cfg_d = self._promote_cfg(cfg_d)
+                cap_policy=self.cap_policy, on_overflow="raise",
+                promote_from=self._shape_hw)
+            self._shape_hw = cfg_d
             if self._hub_cache is not None:
                 # keep the union-adjacency chain gapless even on epochs
                 # whose resolved θ disables hub delegation (idempotent)
@@ -462,7 +437,14 @@ class SurveyService:
                 self._dmax_hw = max(self._dmax_hw, gr_d.d_plus_max)
             fn = self._jit_for(self._resident, cfg_d)
             engine._check_provenance(gr_d, cfg_d)
-            merged, _ = jax.block_until_ready(fn(gr_d))
+            merged, dstats = jax.block_until_ready(fn(gr_d))
+            # guard BEFORE merging: a pull-window overflow in the delta
+            # fold undercounts triangles, and this state is accumulated —
+            # with on_overflow="raise" the epoch fails loudly (surfaced by
+            # IngestPipeline on the next flush/submit) instead of
+            # persistently corrupting every later resident answer
+            engine._exactness_guard(
+                cfg_d, jax.tree.map(float, jax.device_get(dstats)))
             new_state = (self._resident.merge_epochs(snap.resident_state,
                                                      merged)
                          if snap.resident_state is not None else merged)

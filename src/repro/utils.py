@@ -59,6 +59,24 @@ def bucket_cap(x: int) -> int:
     raise AssertionError(f"bucket grid has no rung >= {x}")  # unreachable
 
 
+def bucket_floor(x: int) -> int:
+    """Largest bucket-grid value ≤ ``x`` — the round-*down* twin of
+    :func:`bucket_cap`, for quantizing an upper *bound* (e.g. the pull
+    autotuner's reply-window byte budget) so that clipping a cap against
+    it yields an on-grid value that still respects the bound. Idempotent
+    and monotone like :func:`bucket_cap`; 0 and 1 map to themselves."""
+    x = int(x)
+    if x <= 1:
+        return max(x, 0)
+    k = x.bit_length() - 1
+    best = 1 << k                     # the anchor below x is always on-grid
+    for num, den in _BUCKET_RUNGS:
+        v = -(-(1 << k) * num // den)
+        if v <= x:
+            best = max(best, v)
+    return best
+
+
 def bucket_caps(a: "np.ndarray") -> "np.ndarray":
     """Elementwise :func:`bucket_cap` over an integer array (host-side)."""
     flat = np.asarray(a, np.int64).ravel()

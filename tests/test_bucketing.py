@@ -7,15 +7,17 @@ persistence round trip that resumes warm in a fresh process-simulated
 cache. Deterministic coverage lives here; a hypothesis fuzzing twin over
 random delta streams rides at the bottom (skipped without hypothesis)."""
 import os
+from dataclasses import replace
 
 import numpy as np
 import pytest
 
+from repro.core import engine
 from repro.core.dodgr import shard_delta, shard_dodgr
 from repro.core.engine import (finalize_epochs, survey_delta,
                                survey_push_only, survey_push_pull)
-from repro.core.pushpull import (plan_delta, plan_engine,
-                                 plan_shape_signature)
+from repro.core.pushpull import (_autotune_pull_q_cap, plan_delta,
+                                 plan_engine, plan_shape_signature)
 from repro.core.surveys import (ClosureTime, DegreeTriples, LabelTripleSet,
                                 LocalVertexCount, MaxEdgeLabelDist,
                                 SurveyBundle, TopKWeightedTriangles,
@@ -23,7 +25,7 @@ from repro.core.surveys import (ClosureTime, DegreeTriples, LabelTripleSet,
 from repro.graphs import generators
 from repro.serve import (PlanCache, SurveyService, load_plan_cache,
                          save_plan_cache)
-from repro.utils import bucket_cap, bucket_caps
+from repro.utils import bucket_cap, bucket_caps, bucket_floor
 
 from test_delta import (_append, _empty_base, _labeled_graph, _tree_equal,
                         _ts_batches)
@@ -58,6 +60,24 @@ def test_bucket_cap_grid_properties():
         assert bucket_cap(v) == v, f"grid value {v} is not a fixed point"
         assert v < 1.20 * x, f"bucket_cap({x}) = {v} rounds up >= 20%"
     assert all(a <= b for a, b in zip(vals, vals[1:]))
+
+
+def test_bucket_floor_grid_properties():
+    # round-down twin of bucket_cap: on-grid, never above the input, and a
+    # fixed point exactly on grid values
+    assert bucket_floor(0) == 0 and bucket_floor(1) == 1
+    for x in range(1, 50_000):
+        v = bucket_floor(x)
+        assert v <= x
+        assert bucket_cap(v) == v, f"bucket_floor({x}) = {v} is off-grid"
+        assert bucket_floor(v) == v
+    vals = [bucket_floor(x) for x in range(1, 50_000)]
+    assert all(a <= b for a, b in zip(vals, vals[1:]))
+    # floor(x) and cap(x) bracket x and coincide exactly on the grid
+    for x in (1, 3, 7, 31, 32, 38, 100, 4096):
+        assert bucket_floor(x) <= x <= bucket_cap(x)
+        if bucket_cap(x) == x:
+            assert bucket_floor(x) == x
 
 
 def test_bucket_caps_elementwise():
@@ -263,6 +283,140 @@ def test_persisted_entries_key_by_cap_policy(tmp_path):
         finally:
             svc.close()
     assert keys["exact"] != keys["bucket"]
+
+
+# ---------------------------------------------------------------------------
+# autotuned pull_q_cap: the bucketed cap must stay within the reply-window
+# byte budget (the byte bound rounds DOWN to the grid — re-rounding the
+# result up at a call site would breach it)
+
+
+def test_autotune_pull_q_cap_respects_byte_bound():
+    # wide reply rows make the ~4 MiB budget the binding constraint, and
+    # land it off-grid: 2**20 // 8004 = 131, whose round-UP (152) breaches
+    w_row, w_hdr, L = 8, 4, 1000
+    row_words = w_hdr + L * w_row
+    per_sd = np.array([100_000, 100_000, 100_000, 100_000])
+    exact = _autotune_pull_q_cap(per_sd, w_row, w_hdr, L)
+    assert exact * row_words <= 1 << 20
+    cap = _autotune_pull_q_cap(per_sd, w_row, w_hdr, L, bucket=True)
+    assert bucket_cap(cap) == cap, f"bucketed cap {cap} off-grid"
+    assert cap * row_words <= 1 << 20, \
+        "bucketed autotune breached the reply-window byte budget"
+    # the old pipeline re-rounded the exact cap up on the grid — that value
+    # breaches the budget, which is exactly what bucket=True must avoid
+    assert bucket_cap(exact) * row_words > 1 << 20
+
+
+def test_planned_autotuned_cap_within_byte_budget():
+    # end to end through the planner: an autotuned bucketed plan's reply
+    # window (pull_q_cap rows of w_hdr + L*w_row words) fits the budget
+    g = _labeled_graph(n=90, m=900, seed=7)
+    cfg, _ = plan_engine(g, 2, _surveys(g)[2], orient="stable",
+                         pull_q_cap=None, cap_policy="bucket")
+    w_push, w_row, w_hdr, w_req = cfg.meta_widths
+    assert cfg.pull_q_cap * (w_hdr + cfg.pull_row_cap * w_row) <= 1 << 20
+    assert bucket_cap(cfg.pull_q_cap) == cfg.pull_q_cap
+
+
+# ---------------------------------------------------------------------------
+# session shape hysteresis lives in the planner: promote_from must widen
+# the caps BEFORE the pull-window partition so pull_edge_cap is re-measured
+# under the promoted windows (a field-wise max over configs undercounts —
+# wider per-(s,d) caps pack more groups, hence more edges, per window)
+
+
+def _seed9_stream():
+    g = _labeled_graph(n=60, m=700, seed=9)
+    order = np.random.default_rng(9).permutation(g.m)
+    return g, [order[: int(0.85 * g.m)], order[int(0.85 * g.m):]]
+
+
+def test_promote_from_remeasures_pull_edge_cap():
+    g, splits = _seed9_stream()
+    kw = dict(cap_policy="bucket", transport="ragged", pull_q_cap=4)
+    dg = _append(_empty_base(g), g, splits[0])
+    cfg1, _ = plan_delta(dg, 2, TriangleCount(), **kw)
+    dg = _append(dg, g, splits[1])
+    plain, _ = plan_delta(dg, 2, TriangleCount(), **kw)
+    # a session high-water mark with much wider pull windows but a stale
+    # (tiny) pull_edge_cap — the engine partitions by the promoted caps, so
+    # the edge cap must come from re-measuring under them, not from a max
+    wide = replace(cfg1, pull_caps=((16, 16), (16, 16)), pull_q_cap=16,
+                   pull_edge_cap=1)
+    promo, _ = plan_delta(dg, 2, TriangleCount(), promote_from=wide, **kw)
+    assert promo.pull_caps == ((16, 16), (16, 16))
+    naive_max = max(plain.pull_edge_cap, wide.pull_edge_cap)
+    assert promo.pull_edge_cap > naive_max, (
+        f"pull_edge_cap {promo.pull_edge_cap} was not re-measured under the "
+        f"promoted windows (field-wise max would give {naive_max})")
+    assert bucket_cap(promo.pull_edge_cap) == promo.pull_edge_cap
+
+
+def test_promoted_chain_stays_exact():
+    """Chaining ``promote_from`` across a shrinking stream must (a) actually
+    engage (epoch 2's caps widen past its standalone plan), (b) report zero
+    pull overflow — the engine's runtime window partition is the independent
+    check that the promoted ``pull_edge_cap`` covers the promoted windows —
+    and (c) stay bitwise equal to the exact-policy chain."""
+    g, splits = _seed9_stream()
+    kw = dict(transport="ragged", pull_q_cap=4)
+    sv = TriangleCount()
+
+    def chain(policy, promote):
+        dg, state, prev, cfgs = None, None, None, []
+        overflow = 0.0
+        for idx in splits:
+            dg = _append(dg if dg is not None else _empty_base(g), g, idx)
+            gr, _ = shard_delta(dg, 2, cap_policy=policy)
+            cfg, _ = plan_delta(dg, 2, sv, cap_policy=policy,
+                                promote_from=prev if promote else None, **kw)
+            if promote:
+                prev = cfg
+            state, stats = survey_delta(gr, sv, cfg, state)
+            overflow += float(stats.get("pull_overflow", 0.0))
+            cfgs.append(cfg)
+        return finalize_epochs(sv, state), overflow, cfgs
+
+    res_e, ov_e, _ = chain("exact", promote=False)
+    res_p, ov_p, cfgs_p = chain("bucket", promote=True)
+    _, _, cfgs_0 = chain("bucket", promote=False)
+    assert cfgs_p[1].pull_caps != cfgs_0[1].pull_caps, \
+        "promotion never engaged — pick a stream where epoch 2 shrinks"
+    assert ov_e == 0.0 and ov_p == 0.0
+    assert _tree_equal(res_p, res_e)
+
+
+def test_ingest_path_runs_exactness_guard(monkeypatch):
+    """The service's delta fold must feed its engine stats through
+    ``_exactness_guard`` (with ``on_overflow="raise"``) for every ingested
+    epoch — silent overflow on the ingest path would corrupt the resident
+    state for the rest of the session."""
+    calls = []
+    real = engine._exactness_guard
+
+    def spy(cfg, stats):
+        calls.append((cfg, dict(stats)))
+        return real(cfg, stats)
+
+    monkeypatch.setattr(engine, "_exactness_guard", spy)
+    from repro.serve import SurveyService
+    g = generators.temporal_social(300, 3000, seed=3)
+    svc = SurveyService(g, 2, push_cap=64, cap_policy="bucket",
+                        resident={"tc": TriangleCount()})
+    try:
+        for k in range(2):
+            gk = generators.temporal_social(300, 150, seed=70 + k)
+            svc.append_edges(gk.src, gk.dst, emeta_i=gk.emeta_i,
+                             emeta_f=gk.emeta_f)
+            svc.flush()
+    finally:
+        svc.close()
+    guarded = [(cfg, st) for cfg, st in calls if cfg.delta]
+    assert len(guarded) >= 2, "delta folds skipped the exactness guard"
+    for cfg, st in guarded:
+        assert cfg.on_overflow == "raise"
+        assert float(st.get("pull_overflow", 0.0)) == 0.0
 
 
 # ---------------------------------------------------------------------------
